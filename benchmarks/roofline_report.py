@@ -1,0 +1,79 @@
+"""Aggregate dry-run JSONs into the EXPERIMENTS.md roofline tables.
+
+    PYTHONPATH=src python -m benchmarks.roofline_report --dir results/dryrun
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def fmt_bytes(b):
+    return f"{b/2**30:.2f}GiB"
+
+
+def load_all(d):
+    rows = []
+    for f in sorted(glob.glob(os.path.join(d, "*.json"))):
+        with open(f) as fh:
+            rows.append(json.load(fh))
+    return rows
+
+
+def row_key(r):
+    order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2,
+             "long_500k": 3}
+    return (r["arch"], order[r["cell"]], r["mesh"])
+
+
+def table(rows, mesh="16x16"):
+    out = []
+    hdr = ("| arch | cell | compute_s | memory_s | coll_s | bottleneck | "
+           "useful/total | fits16G | peak/dev | compile_s |")
+    out.append(hdr)
+    out.append("|" + "---|" * 10)
+    for r in sorted(rows, key=row_key):
+        if r["mesh"] != mesh:
+            continue
+        t = r["roofline"]
+        m = r["memory_analysis"]
+        out.append(
+            f"| {r['arch']} | {r['cell']} | {t['compute_s']:.3g} | "
+            f"{t['memory_s']:.3g} | {t['collective_s']:.3g} | "
+            f"{t['bottleneck'].replace('_s','')} | "
+            f"{r['useful_flops_ratio']:.3f} | "
+            f"{'Y' if m['fits_16gb'] else 'N'} | "
+            f"{fmt_bytes(m['peak_bytes_per_device'])} | "
+            f"{r['compile_s']:.0f} |")
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    ap.add_argument("--mesh", default="16x16")
+    args = ap.parse_args()
+    rows = load_all(args.dir)
+    print(f"{len(rows)} cells loaded")
+    print(table(rows, args.mesh))
+    # candidates for hillclimbing
+    sp = [r for r in rows if r["mesh"] == "16x16"]
+    worst = sorted(sp, key=lambda r: r["useful_flops_ratio"])[:5]
+    coll = sorted(sp, key=lambda r: -r["roofline"]["collective_s"] /
+                  max(max(r["roofline"]["compute_s"],
+                          r["roofline"]["memory_s"]), 1e-12))[:5]
+    print("\nworst useful-flops ratio:",
+          [(r["arch"], r["cell"], round(r["useful_flops_ratio"], 3))
+           for r in worst])
+    print("most collective-bound:",
+          [(r["arch"], r["cell"],
+            round(r["roofline"]["collective_s"] /
+                  max(r["roofline"]["memory_s"],
+                      r["roofline"]["compute_s"], 1e-12), 2))
+           for r in coll])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""Benchmark harness — one section per paper table/figure + roofline rows.
+
+    PYTHONPATH=src python -m benchmarks.run [--fast]
+
+Prints ``name,us_per_call,derived`` CSV rows (one per benchmark cell) and a
+readable summary per section.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="smaller Table-1 grid")
+    args = ap.parse_args()
+
+    from benchmarks.paper_tables import (convergence_profile,
+                                         fig2_feature_selection, table1)
+    from benchmarks.solver_roofline import (measured_sweep_throughput,
+                                            solver_roofline_rows)
+
+    print("name,us_per_call,derived")
+
+    rows = table1(rows=[(100, 1_000), (100, 50_000), (1_000, 10_000)]
+                  if args.fast else None)
+    for r in rows:
+        tag = f"table1[v{r['vars']}xo{r['obs']}]"
+        print(f"{tag}/lapack,{r['lapack_s']*1e6:.0f},mape={r['lapack_mape']:.2e}")
+        print(f"{tag}/normal,{r['normal_s']*1e6:.0f},")
+        print(f"{tag}/bak,{r['bak_s']*1e6:.0f},"
+              f"mape={r['bak_mape']:.2e};speedup={r['speedup_vs_lapack_bak']:.2f}")
+        print(f"{tag}/bakp,{r['bakp_s']*1e6:.0f},"
+              f"mape={r['bakp_mape']:.2e};speedup={r['speedup_vs_lapack_bakp']:.2f}")
+        print(f"{tag}/bakp_gram,{r['bakp_gram_s']*1e6:.0f},"
+              f"mape={r['bakp_gram_mape']:.2e}")
+        print(f"{tag}/mem,0,lapack_mib={r['lapack_mem_mib']:.1f};"
+              f"bak_aux_mib={r['bak_aux_mem_mib']:.3f}")
+
+    for r in fig2_feature_selection():
+        tag = f"fig2[o{r['obs']}xv{r['vars']}k{r['k']}]"
+        print(f"{tag}/bakf,{r['bakf_s']*1e6:.0f},recovered={r['recovered']}")
+        print(f"{tag}/stepwise,{r['stepwise_s']*1e6:.0f},"
+              f"speedup={r['speedup']:.1f}")
+
+    for r in convergence_profile():
+        print(f"convergence/{r['method']},0,sweeps={r['sweeps_to_tol']};"
+              f"rmse={r['final_rmse']:.2e};converged={r['converged']}")
+
+    for r in solver_roofline_rows():
+        tag = f"roofline[o{r['obs']}xv{r['vars']}]"
+        print(f"{tag},0,ai={r['ai_flops_per_byte']:.2f};"
+              f"bottleneck={r['bottleneck']};"
+              f"frac_peak={r['frac_of_peak']:.4f};"
+              f"mem_term_s={r['mem_term_s']:.2e}")
+
+    m = measured_sweep_throughput()
+    print(f"measured_cpu_sweep,{m['cpu_s_per_sweep']*1e6:.0f},"
+          f"gbytes_per_s={m['cpu_gbytes_per_s']:.2f}")
+
+
+if __name__ == "__main__":
+    main()

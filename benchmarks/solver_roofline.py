@@ -1,0 +1,70 @@
+"""Roofline accounting for the solver kernels (the paper's workload itself).
+
+One BAK/BAKP sweep over an (obs × vars) system:
+  flops       ≈ 4·obs·vars      (dot + axpy per column/block)
+  hbm bytes   ≈ obs·vars·dtype  (x streamed once; e resident in VMEM)
+  ⇒ arithmetic intensity = 4/dtype_bytes flops/byte (2.0 for bf16) —
+    firmly MEMORY-BOUND on v5e (ridge at 197e12/819e9 ≈ 240 flops/byte).
+
+Per-device roofline time for one sweep and the achievable effective
+flops/s are derived analytically; the distributed solvers add one (thr,)
+psum per block step (obs-sharded) — collective bytes = vars·4 per sweep,
+negligible vs the x stream.  Measured CPU wall times are printed for
+context only (this container is not the target hardware).
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import solvebakp_kernel
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+
+def solver_roofline_rows(cases=((1 << 14, 1024, 2), (1 << 16, 4096, 2),
+                                (1 << 20, 8192, 2))) -> List[Dict]:
+    rows = []
+    for obs, nvars, dtype_bytes in cases:
+        bytes_per_sweep = obs * nvars * dtype_bytes
+        flops_per_sweep = 4.0 * obs * nvars
+        t_mem = bytes_per_sweep / HBM_BW
+        t_comp = flops_per_sweep / PEAK_FLOPS
+        rows.append({
+            "obs": obs, "vars": nvars, "dtype_bytes": dtype_bytes,
+            "ai_flops_per_byte": flops_per_sweep / bytes_per_sweep,
+            "mem_term_s": t_mem, "compute_term_s": t_comp,
+            "bottleneck": "memory" if t_mem > t_comp else "compute",
+            "roofline_flops_eff": flops_per_sweep / max(t_mem, t_comp),
+            "frac_of_peak": (flops_per_sweep / max(t_mem, t_comp))
+            / PEAK_FLOPS,
+        })
+    return rows
+
+
+def measured_sweep_throughput() -> Dict:
+    """CPU-measured kernel sweep throughput (context only)."""
+    rng = np.random.default_rng(0)
+    obs, nvars = 8192, 512
+    x_t = jnp.array(rng.normal(size=(nvars, obs)).astype(np.float32))
+    y = jnp.array(rng.normal(size=(obs,)).astype(np.float32))
+
+    def run():
+        return solvebakp_kernel(x_t, y, block=128, max_iter=4)
+
+    r = run()
+    jax.block_until_ready(r.coef)
+    t0 = time.perf_counter()
+    r = run()
+    jax.block_until_ready(r.coef)
+    dt = time.perf_counter() - t0
+    sweeps = 4
+    return {"obs": obs, "vars": nvars, "sweeps": sweeps,
+            "cpu_s_per_sweep": dt / sweeps,
+            "cpu_gbytes_per_s": obs * nvars * 4 * sweeps / dt / 1e9}

@@ -1,0 +1,42 @@
+"""SolveBakF (Algorithm 3) for feature selection — paper §8 + Fig 2.
+
+Selects informative columns out of a wide feature matrix and compares wall
+time against classical stepwise regression (the paper's baseline).
+
+    PYTHONPATH=src python examples/feature_selection.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import solvebakf, stepwise_regression_baseline
+
+rng = np.random.default_rng(0)
+obs, nvars, k = 4000, 128, 6
+x = rng.normal(size=(obs, nvars)).astype(np.float32)
+idx = sorted(rng.choice(nvars, size=k, replace=False).tolist())
+coef = np.zeros(nvars, np.float32)
+coef[idx] = 3 * rng.normal(size=k).astype(np.float32) + 1.0
+y = x @ coef + 0.05 * rng.normal(size=obs).astype(np.float32)
+xj, yj = jnp.array(x), jnp.array(y)
+
+t0 = time.perf_counter()
+sel = solvebakf(xj, yj, max_feat=k)
+jax.block_until_ready(sel.selected)
+t_fast = time.perf_counter() - t0
+
+t0 = time.perf_counter()
+sw = stepwise_regression_baseline(xj, yj, max_feat=k)
+jax.block_until_ready(sw.selected)
+t_slow = time.perf_counter() - t0
+
+print(f"planted   : {idx}")
+print(f"solvebakf : {sorted(np.array(sel.selected).tolist())}  "
+      f"({t_fast*1e3:.0f}ms)")
+print(f"stepwise  : {sorted(np.array(sw.selected).tolist())}  "
+      f"({t_slow*1e3:.0f}ms)")
+print(f"speed-up  : {t_slow/t_fast:.1f}x (paper Fig 2 shows the same gap "
+      f"growing with vars)")
+print("SSE path  :", [f"{v:.3e}" for v in np.array(sel.sse_path)])

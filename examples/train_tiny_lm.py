@@ -1,0 +1,74 @@
+"""End-to-end driver: train a reduced-config LM on the synthetic pipeline
+for a few hundred steps with checkpointing, then reload and serve a few
+tokens — exercising every substrate (data → train loop → checkpoint →
+restore → prefill/decode).
+
+    PYTHONPATH=src python examples/train_tiny_lm.py [--arch h2o-danube-1.8b]
+"""
+import argparse
+import dataclasses
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import get
+from repro.checkpoint import restore_checkpoint, save_checkpoint
+from repro.data import SyntheticLM
+from repro.launch.steps import (make_decode_step, make_prefill_step,
+                                make_train_step)
+from repro.models.kvcache import init_cache
+from repro.models.model import init_model
+from repro.optim import make_optimizer
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--arch", default="h2o-danube-1.8b")
+ap.add_argument("--steps", type=int, default=200)
+args = ap.parse_args()
+
+cfg = dataclasses.replace(get(args.arch).smoke(), microbatch=1)
+key = jax.random.PRNGKey(0)
+params = init_model(cfg, key)
+opt_init, _ = make_optimizer(cfg.optimizer)
+opt_state = opt_init(params)
+data = SyntheticLM(cfg.vocab_size, 32, 16)
+step_fn = jax.jit(make_train_step(cfg, peak_lr=3e-3, warmup=20,
+                                  total_steps=args.steps),
+                  donate_argnums=(0, 1))
+
+losses = []
+for step in range(args.steps):
+    batch = {k: jnp.asarray(v) for k, v in data.next_batch().items()}
+    params, opt_state, m = step_fn(params, opt_state, batch,
+                                   jnp.int32(step))
+    losses.append(float(m["ce_loss"]))
+    if step % 25 == 0:
+        print(f"step {step:4d}  ce={losses[-1]:.4f}")
+
+print(f"loss: {np.mean(losses[:10]):.3f} -> {np.mean(losses[-10:]):.3f}")
+assert np.mean(losses[-10:]) < np.mean(losses[:10])
+
+with tempfile.TemporaryDirectory() as d:
+    save_checkpoint(d, args.steps, {"params": params},
+                    extras={"data_step": data.state.step})
+    tree, extras, _ = restore_checkpoint(d, {"params": params})
+    params = tree["params"]
+    print(f"checkpoint roundtrip ok (data_step={extras['data_step']})")
+
+# serve: prefill a learnable prompt, greedy-decode — the model should
+# continue the (t+1) mod 97 pattern it was trained on.
+prompt = (np.arange(16) % 97).astype(np.int32)[None, :].repeat(2, 0)
+cache = init_cache(cfg, 2, cfg.max_cache_len)
+prefill = jax.jit(make_prefill_step(cfg))
+decode = jax.jit(make_decode_step(cfg), donate_argnums=(2,))
+logits, cache = prefill(params, {"tokens": jnp.asarray(prompt)}, cache)
+toks = []
+tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+for _ in range(8):
+    toks.append(int(tok[0, 0]))
+    logits, cache = decode(params, tok, cache)
+    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+print("prompt tail:", prompt[0, -4:].tolist(), " generated:", toks)
+correct = sum(1 for i, t in enumerate(toks) if t == (16 + i) % 97)
+print(f"pattern accuracy: {correct}/8")

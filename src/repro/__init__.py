@@ -1,0 +1,3 @@
+"""repro — the BAK coordinate-descent linear solver (Bakas 2021) as a
+production-grade multi-pod JAX framework.  See README.md / DESIGN.md."""
+__version__ = "1.0.0"

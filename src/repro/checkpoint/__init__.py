@@ -1,0 +1,4 @@
+"""repro.checkpoint — sharded atomic checkpoints with elastic restore."""
+from repro.checkpoint.checkpoint import (latest_step, restore_checkpoint,
+                                         save_checkpoint)
+__all__ = ["latest_step", "restore_checkpoint", "save_checkpoint"]

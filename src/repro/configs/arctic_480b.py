@@ -1,0 +1,26 @@
+"""arctic-480b — Snowflake Arctic base: dense-MoE hybrid.
+
+[hf:Snowflake/snowflake-arctic-base; hf]  35L d_model=7168 56H (GQA kv=8)
+d_ff=4864 vocab=32000, MoE 128 experts top-2 + parallel dense residual MLP.
+Adafactor: AdamW state does not fit 256×16GB for 480B params (DESIGN.md §7).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="arctic-480b",
+    family="moe",
+    n_layers=35,
+    d_model=7168,
+    n_heads=56,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=4864,
+    vocab_size=32000,
+    n_experts=128,
+    experts_per_token=2,
+    moe_d_ff=4864,
+    dense_residual_d_ff=4864,
+    optimizer="adafactor",
+    microbatch=8,
+    max_cache_len=32768,
+)

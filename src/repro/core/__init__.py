@@ -1,0 +1,39 @@
+"""repro.core — the paper's contribution: the BAK solver family.
+
+Layout:
+  solvebak.py     Algorithm 1 (serial cyclic CD) — paper-faithful baseline.
+  solvebakp.py    Algorithm 2 (block-parallel CD) + beyond-paper gram mode.
+  solvebakf.py    Algorithm 3 (greedy feature selection) + stepwise baseline.
+  distributed.py  shard_map obs-/vars-/2D-sharded pod-scale solvers.
+  precondition.py column normalisation.
+  api.py          public entry points (solve, fit_linear_probe).
+"""
+from repro.core.api import fit_linear_probe, solve
+from repro.core.distributed import (
+    solvebakp_2d,
+    solvebakp_obs_sharded,
+    solvebakp_vars_sharded,
+)
+from repro.core.precondition import normalize_columns, unscale_coef
+from repro.core.solvebak import solvebak, solvebak_onesweep
+from repro.core.solvebakf import solvebakf, stepwise_regression_baseline
+from repro.core.solvebakp import block_gram_cholesky, solvebakp
+from repro.core.types import SelectResult, SolveResult
+
+__all__ = [
+    "SelectResult",
+    "SolveResult",
+    "block_gram_cholesky",
+    "fit_linear_probe",
+    "normalize_columns",
+    "solve",
+    "solvebak",
+    "solvebak_onesweep",
+    "solvebakf",
+    "solvebakp",
+    "solvebakp_2d",
+    "solvebakp_obs_sharded",
+    "solvebakp_vars_sharded",
+    "stepwise_regression_baseline",
+    "unscale_coef",
+]

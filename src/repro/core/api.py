@@ -1,0 +1,90 @@
+"""Public solve API — one entry point over the BAK family + LAPACK baseline.
+
+``solve(x, y, method=...)`` dispatches to:
+
+  * "bak"        — Algorithm 1, serial cyclic CD (paper-faithful baseline).
+  * "bakp"       — Algorithm 2, block-Jacobi CD (paper-faithful parallel).
+  * "bakp_gram"  — beyond-paper exact block CD (DESIGN.md §3).
+  * "lstsq"      — LAPACK-path baseline (the paper's comparison column),
+                   via jnp.linalg.lstsq.
+  * "normal"     — normal-equation Cholesky (the fast direct baseline for
+                   tall systems).
+
+``fit_linear_probe`` is the framework-integration entry point: fit a linear
+readout on (tokens × features) activations — the tall-system regression the
+paper targets.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.solvebak import solvebak
+from repro.core.solvebakp import solvebakp
+from repro.core.types import SolveResult
+
+_METHODS = ("bak", "bakp", "bakp_gram", "lstsq", "normal")
+
+
+def solve(
+    x: jax.Array,
+    y: jax.Array,
+    *,
+    method: str = "bakp_gram",
+    max_iter: int = 50,
+    atol: float = 0.0,
+    rtol: float = 0.0,
+    thr: int = 128,
+    omega: float = 1.0,
+    a0: Optional[jax.Array] = None,
+    key: Optional[jax.Array] = None,
+) -> SolveResult:
+    if method == "bak":
+        return solvebak(x, y, max_iter=max_iter, atol=atol, rtol=rtol, a0=a0,
+                        key=key)
+    if method == "bakp":
+        return solvebakp(x, y, thr=thr, max_iter=max_iter, atol=atol,
+                         rtol=rtol, omega=omega, mode="jacobi", a0=a0)
+    if method == "bakp_gram":
+        return solvebakp(x, y, thr=thr, max_iter=max_iter, atol=atol,
+                         rtol=rtol, omega=omega, mode="gram", a0=a0)
+    if method == "lstsq":
+        coef = jnp.linalg.lstsq(x.astype(jnp.float32), y.astype(jnp.float32))[0]
+        return _direct_result(x, y, coef, max_iter)
+    if method == "normal":
+        xf = x.astype(jnp.float32)
+        g = xf.T @ xf + 1e-6 * jnp.eye(x.shape[1], dtype=jnp.float32)
+        coef = jax.scipy.linalg.cho_solve(
+            (jax.scipy.linalg.cholesky(g, lower=True), True),
+            xf.T @ y.astype(jnp.float32))
+        return _direct_result(x, y, coef, max_iter)
+    raise ValueError(f"method must be one of {_METHODS}, got {method!r}")
+
+
+def _direct_result(x, y, coef, max_iter) -> SolveResult:
+    e = y.astype(jnp.float32) - x.astype(jnp.float32) @ coef
+    sse = jnp.vdot(e, e)
+    hist = jnp.full((max_iter,), jnp.nan, jnp.float32).at[0].set(sse)
+    return SolveResult(coef, e, sse, jnp.int32(1), jnp.bool_(True), hist)
+
+
+def fit_linear_probe(
+    features: jax.Array,
+    targets: jax.Array,
+    *,
+    method: str = "bakp_gram",
+    max_iter: int = 64,
+    rtol: float = 1e-7,
+    thr: int = 128,
+) -> SolveResult:
+    """Fit a linear readout ``features @ a ≈ targets``.
+
+    ``features``: (tokens, d) frozen backbone activations (tall system —
+    exactly the paper's regression setting).  ``targets``: (tokens,) scalar
+    target (e.g. a logit, a value-head label, a probe class margin).
+    """
+    feats = features.reshape(-1, features.shape[-1])
+    return solve(feats, targets.reshape(-1), method=method,
+                 max_iter=max_iter, rtol=rtol, thr=thr)

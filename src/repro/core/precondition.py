@@ -1,0 +1,32 @@
+"""Column preconditioning for the BAK solvers.
+
+Coordinate descent's per-sweep progress depends on column scaling and
+correlation; normalising columns to unit norm is free to undo (rescale the
+coefficients) and makes ``⟨x_j, x_j⟩ = 1``, which both stabilises bf16
+storage and lets the kernels skip the per-column divide.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import column_norms_sq
+
+
+class ColumnScaling(NamedTuple):
+    scale: jax.Array  # (vars,) multiplier applied to columns (1/||x_j||)
+
+
+def normalize_columns(x: jax.Array):
+    """Returns (x_normalised, ColumnScaling).  Zero columns are left as-is."""
+    cn = column_norms_sq(x)
+    norm = jnp.sqrt(jnp.where(cn > 0, cn, 1.0))
+    scale = jnp.where(cn > 0, 1.0 / norm, 1.0).astype(jnp.float32)
+    return (x.astype(jnp.float32) * scale[None, :]).astype(x.dtype), ColumnScaling(scale)
+
+
+def unscale_coef(coef: jax.Array, scaling: ColumnScaling) -> jax.Array:
+    """Map coefficients of the normalised system back to the original one."""
+    return coef * scaling.scale

@@ -1,0 +1,161 @@
+"""SolveBakP — Algorithm 2 of the paper (block-parallel CD) + Gram-block upgrade.
+
+The paper parallelises Algorithm 1 by processing ``thr`` columns at a time:
+the per-column steps ``da_k = ⟨x_k, e⟩ / ⟨x_k, x_k⟩`` inside a block all read
+the *same* residual (Jacobi-within-block), then the residual is corrected once
+per block with a rank-``thr`` update
+
+    e ← e - x_blk @ (a_blk - aprev_blk).
+
+On TPU the block update is an MXU matmul and the per-block inner products are
+a single (thr × obs)·(obs,) matvec, so this variant is the natural TPU
+formulation of the paper's multi-thread loop (DESIGN.md §3).
+
+``mode="jacobi"`` is the paper-faithful Algorithm 2.
+
+``mode="gram"`` is a *beyond-paper* upgrade (recorded separately in
+EXPERIMENTS.md §Perf): solve the thr×thr block normal equations exactly,
+
+    da = (x_blkᵀ x_blk + ridge·I)⁻¹ x_blkᵀ e,
+
+i.e. exact block Gauss–Seidel.  The Cholesky factors of all block Gram
+matrices are computed once (O(obs·vars·thr) flops, amortised over sweeps) so
+the per-sweep cost stays O(obs·vars) like the paper's variant, but each sweep
+makes strictly more progress: within-block correlations no longer slow
+convergence, and ``thr`` can be as large as VMEM allows instead of the paper's
+"small with respect to vars" requirement.
+
+``omega`` is an optional over/under-relaxation factor (beyond-paper; 1.0 is
+faithful).  Jacobi-within-block can diverge when columns inside a block are
+strongly correlated — the paper's remedy is small ``thr``; ours is ``omega<1``
+or ``mode="gram"``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.types import SolveResult, column_norms_sq, safe_inv
+
+
+def _pad_cols(x: jax.Array, thr: int):
+    """Zero-pad columns of x to a multiple of thr. Returns (x_pad, mask)."""
+    obs, nvars = x.shape
+    nblocks = -(-nvars // thr)
+    pad = nblocks * thr - nvars
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad)))
+    mask = (jnp.arange(nblocks * thr) < nvars).astype(jnp.float32)
+    return x, mask, nblocks
+
+
+def block_gram_cholesky(xb: jax.Array, ridge: float) -> jax.Array:
+    """Cholesky factors of per-block Gram matrices.
+
+    Args:
+      xb: (obs, nblocks, thr) blocked view of the (padded) input matrix.
+      ridge: Tikhonov term added to the diagonal; also makes padded (zero)
+        columns well-posed.
+    Returns:
+      (nblocks, thr, thr) lower Cholesky factors in fp32.
+    """
+    xf = xb.astype(jnp.float32)
+    gram = jnp.einsum("obt,obs->bts", xf, xf)
+    thr = xb.shape[-1]
+    gram = gram + ridge * jnp.eye(thr, dtype=jnp.float32)[None]
+    return jax.vmap(lambda g: jax.scipy.linalg.cholesky(g, lower=True))(gram)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("thr", "max_iter", "mode")
+)
+def solvebakp(
+    x: jax.Array,
+    y: jax.Array,
+    *,
+    thr: int = 128,
+    max_iter: int = 50,
+    atol: float = 0.0,
+    rtol: float = 0.0,
+    omega: float = 1.0,
+    mode: str = "jacobi",
+    ridge: float = 1e-6,
+    a0: Optional[jax.Array] = None,
+) -> SolveResult:
+    """Algorithm 2 (SolveBakP), blocked over ``thr`` columns.
+
+    Args:
+      x: (obs, vars) input matrix.
+      y: (obs,) right-hand side.
+      thr: block width (the paper's thread-count parameter).  Multiples of
+        128 line up with TPU lanes/MXU tiles.
+      max_iter / atol / rtol: as in ``solvebak``.
+      omega: relaxation factor applied to every block update (1.0 = paper).
+      mode: "jacobi" (paper Algorithm 2) or "gram" (exact block CD).
+      ridge: diagonal regulariser for mode="gram".
+      a0: optional initial coefficients.
+
+    Returns:
+      SolveResult (coef truncated back to the unpadded ``vars``).
+    """
+    obs, nvars = x.shape
+    x_pad, mask, nblocks = _pad_cols(x, thr)
+    xb = x_pad.reshape(obs, nblocks, thr)
+
+    cn = column_norms_sq(x_pad)
+    inv_cn = (safe_inv(cn) * mask).reshape(nblocks, thr)
+    mask_b = mask.reshape(nblocks, thr)
+
+    if mode == "gram":
+        chol = block_gram_cholesky(xb, ridge)
+    elif mode == "jacobi":
+        chol = None
+    else:
+        raise ValueError(f"unknown mode {mode!r}")
+
+    a = jnp.zeros((nblocks * thr,), jnp.float32)
+    if a0 is not None:
+        a = a.at[:nvars].set(a0.astype(jnp.float32))
+    e0 = y.astype(jnp.float32) - x_pad.astype(jnp.float32) @ a
+    sse0 = jnp.vdot(e0, e0)
+    history0 = jnp.full((max_iter,), jnp.nan, jnp.float32)
+    atol_sse = jnp.float32(obs) * jnp.float32(atol) ** 2
+    ab0 = a.reshape(nblocks, thr)
+
+    def block_step(carry, b):
+        ab, e = carry
+        xblk = lax.dynamic_index_in_dim(xb, b, axis=1, keepdims=False)
+        xblk = xblk.astype(jnp.float32)  # (obs, thr)
+        g = xblk.T @ e  # (thr,)  ⟨x_k, e⟩ for all k in block at once
+        if mode == "jacobi":
+            da = g * inv_cn[b]
+        else:
+            lb = lax.dynamic_index_in_dim(chol, b, axis=0, keepdims=False)
+            da = jax.scipy.linalg.cho_solve((lb, True), g) * mask_b[b]
+        da = omega * da
+        e = e - xblk @ da  # paper line 9 (rank-thr residual correction)
+        ab = lax.dynamic_update_index_in_dim(ab, ab[b] + da, b, axis=0)
+        return (ab, e), None
+
+    def sweep_body(state):
+        ab, e, i, sse_prev, history, converged = state
+        (ab, e), _ = lax.scan(block_step, (ab, e), jnp.arange(nblocks))
+        sse = jnp.vdot(e, e)
+        history = history.at[i].set(sse)
+        hit_atol = (atol_sse > 0.0) & (sse <= atol_sse)
+        hit_rtol = (rtol > 0.0) & ((sse_prev - sse) <= rtol * sse_prev)
+        return ab, e, i + 1, sse, history, hit_atol | hit_rtol
+
+    def cond(state):
+        _, _, i, _, _, converged = state
+        return (i < max_iter) & ~converged
+
+    ab, e, n, sse, history, converged = lax.while_loop(
+        cond, sweep_body, (ab0, e0, jnp.int32(0), sse0, history0, jnp.bool_(False))
+    )
+    coef = ab.reshape(-1)[:nvars]
+    return SolveResult(coef, e, sse, n, converged, history)

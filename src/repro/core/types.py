@@ -1,0 +1,64 @@
+"""Shared result/record types for the BAK solver family."""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class SolveResult(NamedTuple):
+    """Result of a linear-system solve.
+
+    Attributes:
+      coef:       (vars,) solution vector ``a`` with ``x @ a ≈ y``.
+      residual:   (obs,) final residual ``e = y - x @ a`` (fp32).
+      sse:        scalar fp32 sum of squared residuals at exit.
+      n_sweeps:   scalar int32, number of full sweeps executed.
+      converged:  scalar bool, True if a tolerance criterion fired before
+                  ``max_iter`` was exhausted.
+      history:    (max_iter,) fp32 SSE after each sweep (NaN for sweeps not
+                  executed).  Used by the convergence benchmarks/tests; the
+                  paper's Theorem 1 asserts this sequence is non-increasing.
+    """
+
+    coef: jax.Array
+    residual: jax.Array
+    sse: jax.Array
+    n_sweeps: jax.Array
+    converged: jax.Array
+    history: jax.Array
+
+
+class SelectResult(NamedTuple):
+    """Result of SolveBakF greedy feature selection.
+
+    Attributes:
+      selected:  (max_feat,) int32 indices of selected columns, in selection
+                 order.
+      coef:      (max_feat,) fp32 coefficients of the refit on the selected
+                 columns (aligned with ``selected``).
+      sse_path:  (max_feat,) fp32 SSE after each selection + refit step — the
+                 greedy error-reduction path.
+      residual:  (obs,) fp32 final residual.
+    """
+
+    selected: jax.Array
+    coef: jax.Array
+    sse_path: jax.Array
+    residual: jax.Array
+
+
+def column_norms_sq(x: jax.Array) -> jax.Array:
+    """Squared column norms ``⟨x_j, x_j⟩`` accumulated in fp32, shape (vars,)."""
+    xf = x.astype(jnp.float32)
+    return jnp.einsum("ij,ij->j", xf, xf)
+
+
+def safe_inv(cn: jax.Array) -> jax.Array:
+    """1/cn with zero (not inf) for zero-norm columns.
+
+    A zero column can never reduce the residual, so the paper's ``da`` is
+    defined as 0 for it; this keeps the update well-posed.
+    """
+    return jnp.where(cn > 0.0, 1.0 / jnp.where(cn > 0.0, cn, 1.0), 0.0)

@@ -1,0 +1,3 @@
+"""repro.data — deterministic, resumable synthetic data pipeline."""
+from repro.data.pipeline import DataState, SyntheticLM
+__all__ = ["DataState", "SyntheticLM"]

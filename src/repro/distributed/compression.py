@@ -1,0 +1,47 @@
+"""Gradient compression: int8 quantisation with error feedback.
+
+For cross-pod gradient reduction the wire format matters: the pod axis link
+is the DCI bottleneck.  ``compress``/``decompress`` implement per-tensor
+symmetric int8 with an error-feedback residual carried in the optimizer
+loop (Karimireddy et al. 2019) so the quantisation noise does not bias
+convergence.  Applied selectively to the cross-pod psum inside
+``train_step`` when ``grad_compression="int8"``.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def compress(g: jax.Array, err: jax.Array) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Returns (q int8, scale fp32 scalar, new_error fp32)."""
+    gf = g.astype(jnp.float32) + err
+    scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+    deq = q.astype(jnp.float32) * scale
+    return q, scale, gf - deq
+
+
+def decompress(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_tree(grads, err_tree):
+    """Tree-map compress; returns (q_tree, scale_tree, new_err_tree)."""
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_e = treedef.flatten_up_to(err_tree)
+    out = [compress(g, e) for g, e in zip(flat_g, flat_e)]
+    return (treedef.unflatten([o[0] for o in out]),
+            treedef.unflatten([o[1] for o in out]),
+            treedef.unflatten([o[2] for o in out]))
+
+
+def decompressed_tree(q_tree, scale_tree):
+    return jax.tree_util.tree_map(decompress, q_tree, scale_tree)
+
+
+def init_error_tree(params):
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)

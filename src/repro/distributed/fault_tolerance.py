@@ -1,0 +1,86 @@
+"""Fault-tolerance / large-scale-operations substrate.
+
+At 1000+ nodes the relevant failure modes are: node loss (→ restart from
+checkpoint, possibly on a different mesh), stragglers (→ detect via step-time
+outliers), and preemption (→ checkpoint-on-signal).  This module provides
+the host-side machinery; the data-plane pieces (elastic re-mesh restore,
+resumable data state) live in repro.checkpoint / repro.data.
+
+CheckpointManager   — periodic + on-signal saves, resume, keep-k.
+StragglerMonitor    — per-step wall-time ring buffer; flags steps beyond
+                      median + k·MAD (the host-level mitigation at pod scale
+                      is re-scheduling the slow host's shard; here we surface
+                      the signal and count events).
+preemption_handler  — SIGTERM → checkpoint-before-exit hook.
+"""
+from __future__ import annotations
+
+import collections
+import signal
+import time
+from typing import Any, Callable, Dict, Optional
+
+import numpy as np
+
+from repro.checkpoint.checkpoint import (latest_step, restore_checkpoint,
+                                         save_checkpoint)
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, *, interval_steps: int = 100,
+                 keep: int = 3):
+        self.directory = directory
+        self.interval = interval_steps
+        self.keep = keep
+        self._preempted = False
+
+    def should_save(self, step: int) -> bool:
+        return self._preempted or (step > 0 and step % self.interval == 0)
+
+    def save(self, step: int, tree: Any, extras: Optional[Dict] = None):
+        return save_checkpoint(self.directory, step, tree, extras,
+                               keep=self.keep)
+
+    def restore_latest(self, template: Any, shardings: Any = None):
+        return restore_checkpoint(self.directory, template,
+                                  shardings=shardings)
+
+    def latest_step(self) -> Optional[int]:
+        return latest_step(self.directory)
+
+    def install_preemption_handler(self):
+        def _handler(signum, frame):
+            self._preempted = True
+        signal.signal(signal.SIGTERM, _handler)
+
+
+class StragglerMonitor:
+    """Step-time outlier detection (median + k·MAD over a sliding window)."""
+
+    def __init__(self, window: int = 64, k: float = 5.0):
+        self.times = collections.deque(maxlen=window)
+        self.k = k
+        self.flagged = 0
+        self._t0: Optional[float] = None
+
+    def step_start(self):
+        self._t0 = time.monotonic()
+
+    def step_end(self) -> bool:
+        """Returns True if this step is a straggler outlier."""
+        dt = time.monotonic() - self._t0
+        is_outlier = False
+        if len(self.times) >= 8:
+            med = float(np.median(self.times))
+            mad = float(np.median(np.abs(np.array(self.times) - med))) + 1e-9
+            if dt > med + self.k * mad:
+                is_outlier = True
+                self.flagged += 1
+        self.times.append(dt)
+        return is_outlier
+
+    def summary(self) -> Dict[str, float]:
+        if not self.times:
+            return {"median_s": 0.0, "flagged": 0}
+        return {"median_s": float(np.median(self.times)),
+                "flagged": self.flagged}

@@ -1,0 +1,83 @@
+"""Logical-axis → mesh-axis rules (MaxText-style, compact).
+
+One rule table per mesh flavour.  ``pod`` composes with ``data`` for all
+batch-like and FSDP sharding so the same model code lowers on the single-pod
+(16,16) and multi-pod (2,16,16) meshes.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Axis = Union[None, str, Tuple[str, ...]]
+
+
+def make_rules(mesh: Mesh, *, fsdp: bool = True,
+               serve: bool = False) -> Dict[str, Axis]:
+    """Rules keyed by logical axis name.
+
+    data-like axes map to every non-model mesh axis (so the "pod" axis of the
+    multi-pod mesh shards batch/FSDP too — that is what the multi-pod dry-run
+    proves out).
+
+    ``serve=True`` switches to weight-stationary sharding: no FSDP (weights
+    are never re-gathered per step — the dominant collective at decode), and
+    MoE expert weights shard 2-D (experts → model, ff → data axes) so giant
+    expert tables still fully shard without per-step gathers.
+    """
+    data_axes = tuple(a for a in mesh.axis_names if a != "model")
+    return {
+        # activations
+        "batch": data_axes,
+        "seq": None,
+        "act_heads": "model",
+        "act_kv_heads": "model",
+        "act_mlp": "model",
+        "act_vocab": "model",
+        "act_experts": "model",
+        # weights
+        "embed": None if serve else (data_axes if fsdp else None),
+        "model": "model",                        # TP dim (heads, mlp, vocab)
+        "experts": "model",                      # expert parallelism
+        "moe_ff": data_axes if serve else None,  # 2-D EP for serving
+        "layers": None,
+        "units": None,
+        "none": None,
+    }
+
+
+def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def axis_size(mesh: Mesh, axes: Axis) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def divisible_spec(mesh: Mesh, shape, axes_per_dim) -> P:
+    """P(...) where any dim whose size does not divide its mapped mesh axes
+    falls back to replicated (e.g. batch=1 decode cells)."""
+    spec = []
+    for dim, ax in zip(shape, axes_per_dim):
+        if ax is None or dim % axis_size(mesh, ax):
+            spec.append(None)
+        else:
+            spec.append(ax)
+    return P(*spec)
+
+
+def batch_spec(mesh: Mesh, ndim: int) -> P:
+    """P over batch dim 0, replicated elsewhere."""
+    return P(data_axes(mesh), *([None] * (ndim - 1)))
+
+
+def batch_sharding(mesh: Mesh, ndim: int) -> NamedSharding:
+    return NamedSharding(mesh, batch_spec(mesh, ndim))

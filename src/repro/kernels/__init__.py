@@ -1,0 +1,27 @@
+"""repro.kernels — Pallas TPU kernels for the solver's compute hot-spots.
+
+  cd_sweep.py      VMEM-resident CD sweep (Alg. 1) + block-Jacobi sweep
+                   (Alg. 2) — x streamed HBM->VMEM once per sweep, residual
+                   resident in VMEM scratch across the grid.
+  block_update.py  obs-streamed rank-thr residual correction + fused
+                   SolveBakF feature scoring.
+  ops.py           jit'd wrappers (interpret=True off-TPU).
+  ref.py           pure-jnp oracles, tested via shape/dtype sweeps.
+"""
+from repro.kernels.block_update import block_update, score_features
+from repro.kernels.cd_sweep import bakp_sweep, cd_sweep
+from repro.kernels.ops import (
+    block_update_kernel,
+    score_features_kernel,
+    solvebakp_kernel,
+)
+
+__all__ = [
+    "bakp_sweep",
+    "block_update",
+    "block_update_kernel",
+    "cd_sweep",
+    "score_features",
+    "score_features_kernel",
+    "solvebakp_kernel",
+]

@@ -1,0 +1,92 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+``solvebakp_kernel`` runs the full SolveBakP iteration built from the
+``bakp_sweep``/``cd_sweep`` kernels — the TPU production path of the paper's
+solver for problems whose residual fits VMEM (the distributed layer in
+``repro.core.distributed`` shards obs so each device lands in this regime).
+
+Off TPU all kernels run in interpret mode (Python execution of the kernel
+body) — numerically identical, used by the test suite.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.types import SolveResult, column_norms_sq, safe_inv
+from repro.kernels.block_update import block_update, score_features
+from repro.kernels.cd_sweep import bakp_sweep, cd_sweep
+
+
+@functools.partial(jax.jit, static_argnames=("block", "max_iter", "variant",
+                                             "interpret"))
+def solvebakp_kernel(
+    x_t: jax.Array,
+    y: jax.Array,
+    *,
+    block: int = 256,
+    max_iter: int = 50,
+    atol: float = 0.0,
+    rtol: float = 0.0,
+    omega: float = 1.0,
+    variant: str = "bakp",
+    interpret: Optional[bool] = None,
+) -> SolveResult:
+    """Kernel-accelerated SolveBak/SolveBakP.
+
+    Args:
+      x_t: (vars, obs) TRANSPOSED input matrix (kernel layout; see
+        repro.kernels.ref docstring).  vars must be a multiple of ``block``.
+      y: (obs,) right-hand side.
+      variant: "bakp" (Algorithm 2 sweeps, MXU) or "bak" (Algorithm 1
+        sequential sweeps, bit-faithful).
+    """
+    nvars, obs = x_t.shape
+    inv_cn = safe_inv(column_norms_sq(x_t.T))
+    sweep = cd_sweep if variant == "bak" else functools.partial(
+        bakp_sweep, omega=omega)
+
+    a0 = jnp.zeros((nvars,), jnp.float32)
+    e0 = y.astype(jnp.float32)
+    sse0 = jnp.vdot(e0, e0)
+    history0 = jnp.full((max_iter,), jnp.nan, jnp.float32)
+    atol_sse = jnp.float32(obs) * jnp.float32(atol) ** 2
+
+    def body(state):
+        a, e, i, sse_prev, history, converged = state
+        da, e = sweep(x_t, e, inv_cn, block=block, interpret=interpret)
+        a = a + da
+        sse = jnp.vdot(e, e)
+        history = history.at[i].set(sse)
+        hit_atol = (atol_sse > 0.0) & (sse <= atol_sse)
+        hit_rtol = (rtol > 0.0) & ((sse_prev - sse) <= rtol * sse_prev)
+        return a, e, i + 1, sse, history, hit_atol | hit_rtol
+
+    def cond(state):
+        _, _, i, _, _, converged = state
+        return (i < max_iter) & ~converged
+
+    a, e, n, sse, history, converged = lax.while_loop(
+        cond, body, (a0, e0, jnp.int32(0), sse0, history0, jnp.bool_(False)))
+    return SolveResult(a, e, sse, n, converged, history)
+
+
+@functools.partial(jax.jit, static_argnames=("col_block", "obs_tile",
+                                             "interpret"))
+def score_features_kernel(x_t, e, *, col_block=512, obs_tile=4096,
+                          interpret=None):
+    """Fused SolveBakF feature scoring (see block_update.score_features)."""
+    inv_cn = safe_inv(column_norms_sq(x_t.T))
+    return score_features(x_t, e, inv_cn, col_block=col_block,
+                          obs_tile=obs_tile, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("obs_tile", "interpret"))
+def block_update_kernel(x_t_blk, e, da, *, obs_tile=4096, interpret=None):
+    """Fused rank-CB residual correction (paper Alg. 2 line 9)."""
+    return block_update(x_t_blk, e, da, obs_tile=obs_tile,
+                        interpret=interpret)

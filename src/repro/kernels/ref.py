@@ -1,0 +1,84 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Every kernel in this package has a reference here with identical semantics
+(same update order, same fp32 accumulation).  Tests sweep shapes/dtypes and
+assert_allclose kernel-vs-oracle.
+
+Layout convention: the kernels consume ``x_t`` — the TRANSPOSED input matrix
+with shape (vars, obs) — so that each of the paper's "columns" is a
+contiguous row, which (a) makes the HBM→VMEM stream of a column block
+contiguous and (b) puts the sequential-update axis on TPU sublanes where
+dynamic indexing is cheap (DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def ref_cd_sweep(x_t: jax.Array, e: jax.Array, inv_cn: jax.Array):
+    """Sequential (Gauss–Seidel) CD sweep over all rows of x_t.
+
+    Args:
+      x_t: (vars, obs) transposed input matrix.
+      e:   (obs,) residual (fp32).
+      inv_cn: (vars,) 1/⟨x_j,x_j⟩ (0 for zero columns).
+    Returns:
+      (da, e'): per-column coefficient increments (vars,), updated residual.
+    """
+    nvars = x_t.shape[0]
+
+    def step(j, carry):
+        da_acc, e = carry
+        xj = lax.dynamic_slice_in_dim(x_t, j, 1, axis=0)[0].astype(jnp.float32)
+        da = jnp.dot(xj, e) * inv_cn[j]
+        e = e - xj * da
+        return da_acc.at[j].set(da), e
+
+    da0 = jnp.zeros((nvars,), jnp.float32)
+    return lax.fori_loop(0, nvars, step, (da0, e.astype(jnp.float32)))
+
+
+def ref_bakp_sweep(x_t: jax.Array, e: jax.Array, inv_cn: jax.Array, *,
+                   block: int, omega: float = 1.0):
+    """Block-Jacobi (SolveBakP) sweep: Gauss–Seidel across blocks of rows of
+    x_t, Jacobi within a block.
+
+    Args / returns as ``ref_cd_sweep``; ``vars`` must be a multiple of
+    ``block``.
+    """
+    nvars, obs = x_t.shape
+    assert nvars % block == 0, (nvars, block)
+    nblocks = nvars // block
+    xb = x_t.reshape(nblocks, block, obs)
+    invb = inv_cn.reshape(nblocks, block)
+
+    def step(carry, b):
+        e = carry
+        xblk = lax.dynamic_index_in_dim(xb, b, 0, keepdims=False)
+        xblk = xblk.astype(jnp.float32)
+        g = xblk @ e  # (block,)
+        da = omega * g * lax.dynamic_index_in_dim(invb, b, 0, keepdims=False)
+        e = e - da @ xblk
+        return e, da
+
+    e_out, da = lax.scan(step, e.astype(jnp.float32), jnp.arange(nblocks))
+    return da.reshape(-1), e_out
+
+
+def ref_block_update(x_t: jax.Array, e: jax.Array, da: jax.Array):
+    """Residual correction e' = e - x_blkᵀ·da  (paper Alg. 2 line 9).
+
+    x_t: (block, obs); e: (obs,); da: (block,).
+    """
+    return e.astype(jnp.float32) - da.astype(jnp.float32) @ x_t.astype(jnp.float32)
+
+
+def ref_score_features(x_t: jax.Array, e: jax.Array, inv_cn: jax.Array):
+    """SolveBakF scoring: SSE reduction of a single CD step per feature.
+
+    score_j = ⟨x_j, e⟩² / ⟨x_j, x_j⟩   (vars,)
+    """
+    g = x_t.astype(jnp.float32) @ e.astype(jnp.float32)
+    return g * g * inv_cn

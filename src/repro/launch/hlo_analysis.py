@@ -1,0 +1,416 @@
+"""Trip-count-aware cost extraction from partitioned HLO text.
+
+Why: XLA's ``compiled.cost_analysis()`` visits every ``while`` body ONCE —
+a 48-layer ``lax.scan`` reports 1/48th of its real FLOPs (verified in
+EXPERIMENTS.md §Dry-run methodology).  Since the whole zoo scans over layers,
+roofline terms derived from raw cost_analysis would be off by 30-80×.
+
+This module parses ``compiled.as_text()`` (the partitioned, per-device
+module) into computations, walks the callgraph, multiplies ``while`` bodies
+by their static trip count (parsed from the loop-condition comparison
+constant — every scan emits one), and produces:
+
+  flops      — 2·M·N·K for dots (+1/elem for non-dot instructions as a
+               floor estimate of VPU work),
+  hbm_bytes  — operand+result bytes at fusion/op boundaries (fusion
+               internals live in registers/VMEM),
+  collectives— result-shape bytes per collective opcode × trips (with
+               group-size scaling for reduce-scatter).
+
+All quantities are PER DEVICE (the module is the SPMD program of one chip).
+This is an analytic model, not a profile: precise for dot/collective volume,
+a floor for elementwise — exactly what the three-term roofline needs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1,
+                "f8e5m2": 1, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+                "s8": 1, "u8": 1, "pred": 1, "s64": 8, "u64": 8,
+                "c64": 8, "c128": 16, "s4": 1, "u4": 1}
+_SHAPE_RE = re.compile(
+    r"(f64|f32|bf16|f16|f8e4m3fn|f8e5m2|s64|u64|s32|u32|s16|u16|s8|u8|s4|u4|"
+    r"pred|c64|c128)\[([0-9,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?(?P<name>[\w.\-]+)\s*=\s*(?P<rest>.*)$")
+_OP_RE = re.compile(r"\s([a-z][\w\-]*)\(")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_CALL_ATTR_RE = re.compile(
+    r"(?:calls|to_apply|condition|body|branch_computations)=\{?%?([\w.\-]+)")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_SKIP = {"parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+         "after-all", "iota", "reshape", "broadcast", "copy-done",
+         "partition-id", "replica-id", "opt-barrier", "custom-call"}
+
+
+def _shape_info(text: str) -> Tuple[int, List[int]]:
+    """(total bytes, dims of the first array shape) from a shape string."""
+    total = 0
+    first_dims: Optional[List[int]] = None
+    for m in _SHAPE_RE.finditer(text):
+        dims = [int(d) for d in m.group(2).split(",") if d] if m.group(2) \
+            else []
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[m.group(1)]
+        if first_dims is None:
+            first_dims = dims
+    return total, (first_dims or [])
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    opcode: str
+    result_bytes: int
+    result_dims: List[int]
+    operands: List[str]
+    line: str
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    coll: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in _COLLECTIVES})
+
+    def __iadd__(self, o: "Cost"):
+        self.flops += o.flops
+        self.hbm_bytes += o.hbm_bytes
+        for k in self.coll:
+            self.coll[k] += o.coll[k]
+        return self
+
+    def scaled(self, t: float) -> "Cost":
+        return Cost(self.flops * t, self.hbm_bytes * t,
+                    {k: v * t for k, v in self.coll.items()})
+
+
+class HloCostModel:
+    def __init__(self, hlo_text: str):
+        self.computations: Dict[str, List[Instr]] = {}
+        self._parse(hlo_text)
+        self.entry = self._entry_name
+        self._memo: Dict[str, Cost] = {}
+        self._trip_memo: Dict[str, int] = {}
+
+    # -- parsing -----------------------------------------------------------
+    def _parse(self, text: str):
+        cur: Optional[str] = None
+        self._entry_name = None
+        for raw in text.splitlines():
+            line = raw.rstrip()
+            s = line.strip()
+            if not s:
+                continue
+            if s.endswith("{") and ("(" in s) and ("->" in s or "ENTRY" in s):
+                # computation header: `%name (args) -> type {` or `ENTRY ...`
+                m = re.match(r"(?:ENTRY\s+)?%?([\w.\-]+)\s*\(", s)
+                if m:
+                    cur = m.group(1)
+                    self.computations[cur] = []
+                    if s.startswith("ENTRY"):
+                        self._entry_name = cur
+                continue
+            if s == "}" or s.startswith("}"):
+                cur = None
+                continue
+            if cur is None:
+                continue
+            mi = _INSTR_RE.match(line)
+            if not mi:
+                continue
+            rest = mi.group("rest").strip()
+            # split off the result shape: either a tuple `( ... )` or a
+            # single `dtype[dims]{layout}` token.
+            if rest.startswith("("):
+                depth = 0
+                shape_end = -1
+                for i, ch in enumerate(rest):
+                    if ch == "(":
+                        depth += 1
+                    elif ch == ")":
+                        depth -= 1
+                        if depth == 0:
+                            shape_end = i + 1
+                            break
+                if shape_end < 0:
+                    continue
+                shape_str, remainder = rest[:shape_end], rest[shape_end:]
+            else:
+                sp = rest.find(" ")
+                if sp < 0:
+                    continue
+                shape_str, remainder = rest[:sp], rest[sp:]
+            mop = re.match(r"\s*([a-z][\w\-]*)\(", remainder)
+            if not mop:
+                continue
+            opcode = mop.group(1)
+            rbytes, rdims = _shape_info(shape_str)
+            args = remainder[mop.end():]
+            # cut operand list at closing paren of the call
+            depth, end = 1, len(args)
+            for i, ch in enumerate(args):
+                if ch == "(":
+                    depth += 1
+                elif ch == ")":
+                    depth -= 1
+                    if depth == 0:
+                        end = i
+                        break
+            operands = _OPERAND_RE.findall(args[:end])
+            self.computations[cur].append(
+                Instr(mi.group("name"), opcode, rbytes, rdims, operands,
+                      line))
+
+    # -- helpers -------------------------------------------------------------
+    def _symtab(self, comp: str) -> Dict[str, Instr]:
+        return {i.name: i for i in self.computations.get(comp, [])}
+
+    def _called(self, instr: Instr) -> List[str]:
+        names = []
+        for m in _CALL_ATTR_RE.finditer(instr.line):
+            names.append(m.group(1))
+        # branch_computations={%a, %b}
+        mb = re.search(r"branch_computations=\{([^}]*)\}", instr.line)
+        if mb:
+            names = [n.strip().lstrip("%") for n in mb.group(1).split(",")]
+            names = [n for n in names if n]
+        return [n for n in names if n in self.computations]
+
+    def _trip_count(self, cond_comp: str) -> int:
+        """Static trip count from the scan/while condition.
+
+        lax.scan conditions compare the induction variable against a
+        constant (`compare(gte, constant(L)), direction=LT`), but XLA often
+        wraps the compare in a kLoop fusion, so we take the max integer
+        constant reachable from the condition computation (including its
+        fused calls).  Dynamic-bound while loops (tolerance-based solver
+        loops) have no such constant and conservatively count as 1 trip.
+        """
+        if cond_comp in self._trip_memo:
+            return self._trip_memo[cond_comp]
+        trip = 1
+
+        def scan_comp(name):
+            nonlocal trip
+            for i in self.computations.get(name, []):
+                if i.opcode == "constant":
+                    m = re.search(r"constant\((\d+)\)", i.line)
+                    if m:
+                        trip = max(trip, int(m.group(1)))
+                elif i.opcode == "fusion":
+                    for c in self._called(i):
+                        scan_comp(c)
+
+        scan_comp(cond_comp)
+        self._trip_memo[cond_comp] = max(trip, 1)
+        return self._trip_memo[cond_comp]
+
+    def _dot_flops(self, instr: Instr, symtab) -> float:
+        out = 1
+        for d in instr.result_dims:
+            out *= d
+        m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", instr.line)
+        k = 1
+        if m and instr.operands:
+            lhs = symtab.get(instr.operands[0])
+            if lhs is not None:
+                for idx in (int(x) for x in m.group(1).split(",") if x):
+                    if idx < len(lhs.result_dims):
+                        k *= lhs.result_dims[idx]
+        return 2.0 * out * k
+
+    def _operand_bytes(self, instr: Instr, symtab) -> int:
+        b = 0
+        for op in instr.operands:
+            src = symtab.get(op)
+            if src is not None:
+                b += src.result_bytes
+        return b
+
+    def _fusion_footprint(self, instr: Instr, symtab) -> float:
+        """HBM bytes touched by a fusion: operands count at their *access
+        footprint* — a parameter consumed only through dynamic-slice ops
+        contributes the slice bytes (scan reading one layer of a stacked
+        buffer), and a dynamic-update-slice root writes only the update
+        (in-place stack append), not the whole buffer."""
+        called = self._called(instr)
+        comp = next((c for c in called if c in self.computations), None)
+        if comp is None:
+            return instr.result_bytes + self._operand_bytes(instr, symtab)
+        instrs = self.computations[comp]
+        fsym = {i.name: i for i in instrs}
+        outer_bytes = []
+        for op in instr.operands:
+            src = symtab.get(op)
+            outer_bytes.append(src.result_bytes if src else 0)
+        root = next((j for j in instrs if "ROOT" in j.line),
+                    instrs[-1] if instrs else None)
+
+        passthrough = {"bitcast", "reshape", "copy", "transpose"}
+
+        def effective_consumers(name, seen=None):
+            """Transitive consumers through passthrough ops."""
+            seen = seen or set()
+            out = []
+            for j in instrs:
+                if name in j.operands and j.name not in seen:
+                    seen.add(j.name)
+                    if j.opcode in passthrough:
+                        out.extend(effective_consumers(j.name, seen))
+                    else:
+                        out.append(j)
+            return out
+
+        def feeds_inplace_dest(param_name, j):
+            """True if j is the root DUS/scatter and the param reaches its
+            operand 0 (the aliased destination buffer)."""
+            if j is not root or j.opcode not in ("dynamic-update-slice",
+                                                 "scatter"):
+                return False
+            dest = j.operands[0] if j.operands else None
+            cur = dest
+            while cur is not None:
+                if cur == param_name:
+                    return True
+                src = fsym.get(cur)
+                if src is None or src.opcode not in passthrough:
+                    return False
+                cur = src.operands[0] if src.operands else None
+            return False
+
+        total = 0.0
+        for i in instrs:
+            if i.opcode != "parameter":
+                continue
+            m = re.search(r"parameter\((\d+)\)", i.line)
+            idx = int(m.group(1)) if m else 0
+            cons = effective_consumers(i.name)
+            if cons and all(
+                    c.opcode in ("dynamic-slice", "gather")
+                    or feeds_inplace_dest(i.name, c) for c in cons):
+                total += sum(c.result_bytes for c in cons
+                             if c.opcode in ("dynamic-slice", "gather"))
+            else:
+                total += outer_bytes[idx] if idx < len(outer_bytes) else 0
+
+        if root is not None and root.opcode == "dynamic-update-slice":
+            upd = fsym.get(root.operands[1]) if len(root.operands) > 1 \
+                else None
+            total += 2 * (upd.result_bytes if upd else 0)
+        elif root is not None and root.opcode == "scatter":
+            upd = fsym.get(root.operands[-1]) if root.operands else None
+            total += 2 * (upd.result_bytes if upd else instr.result_bytes)
+        else:
+            total += instr.result_bytes if root is None else \
+                root.result_bytes if root.opcode not in passthrough else \
+                instr.result_bytes
+        return total
+
+    # -- cost walk -------------------------------------------------------------
+    def cost_of(self, comp: str) -> Cost:
+        if comp in self._memo:
+            return self._memo[comp]
+        self._memo[comp] = Cost()  # cycle guard
+        symtab = self._symtab(comp)
+        total = Cost()
+        for i in self.computations.get(comp, []):
+            op = i.opcode
+            if op in _SKIP:
+                continue
+            if op == "while":
+                called = self._called(i)  # [condition, body] order varies
+                body = cond = None
+                mc = re.search(r"condition=%?([\w.\-]+)", i.line)
+                mb = re.search(r"body=%?([\w.\-]+)", i.line)
+                cond = mc.group(1) if mc else None
+                body = mb.group(1) if mb else None
+                trip = self._trip_count(cond) if cond else 1
+                inner = Cost()
+                if body in self.computations:
+                    inner += self.cost_of(body)
+                if cond in self.computations:
+                    inner += self.cost_of(cond)
+                total += inner.scaled(trip)
+            elif op == "fusion":
+                sub = Cost()
+                for c in self._called(i):
+                    sub += self.cost_of(c)
+                total.flops += sub.flops
+                for k in total.coll:
+                    total.coll[k] += sub.coll[k]
+                total.hbm_bytes += self._fusion_footprint(i, symtab)
+            elif op in ("call", "async-start"):
+                for c in self._called(i):
+                    total += self.cost_of(c)
+            elif op == "conditional":
+                branches = [self.cost_of(c) for c in self._called(i)]
+                if branches:
+                    best = max(branches, key=lambda c: c.flops + c.hbm_bytes)
+                    total += best
+            elif op == "dot":
+                total.flops += self._dot_flops(i, symtab)
+                total.hbm_bytes += i.result_bytes + \
+                    self._operand_bytes(i, symtab)
+            elif op == "convolution":
+                # rough: 2 * out_elems * (kernel elems / out channels)
+                out = 1
+                for d in i.result_dims:
+                    out *= d
+                total.flops += 2.0 * out
+                total.hbm_bytes += i.result_bytes + \
+                    self._operand_bytes(i, symtab)
+            elif op in ("dynamic-slice", "gather"):
+                total.flops += 0.0
+                total.hbm_bytes += 2 * i.result_bytes  # slice read + write
+            elif op == "dynamic-update-slice":
+                upd = symtab.get(i.operands[1]) if len(i.operands) > 1 \
+                    else None
+                total.hbm_bytes += 2 * (upd.result_bytes if upd
+                                        else i.result_bytes)
+            elif op == "scatter":
+                upd = symtab.get(i.operands[-1]) if i.operands else None
+                total.hbm_bytes += 2 * (upd.result_bytes if upd
+                                        else i.result_bytes)
+            else:
+                base = op.replace("-start", "")
+                if base in _COLLECTIVES:
+                    if op.endswith("-done"):
+                        continue
+                    b = float(i.result_bytes)
+                    if base == "reduce-scatter":
+                        mg = re.search(r"replica_groups=\[(\d+),(\d+)\]",
+                                       i.line)
+                        g = int(mg.group(2)) if mg else 1
+                        b *= g
+                    total.coll[base] += b
+                    total.hbm_bytes += i.result_bytes
+                    continue
+                out = 1
+                for d in i.result_dims:
+                    out *= d
+                total.flops += out  # 1 flop/elem floor
+                total.hbm_bytes += i.result_bytes + \
+                    self._operand_bytes(i, symtab)
+        self._memo[comp] = total
+        return total
+
+    def entry_cost(self) -> Cost:
+        assert self.entry is not None, "no ENTRY computation found"
+        return self.cost_of(self.entry)
+
+
+def analyze(hlo_text: str) -> Dict[str, float]:
+    cm = HloCostModel(hlo_text)
+    c = cm.entry_cost()
+    out = {"flops": c.flops, "hbm_bytes": c.hbm_bytes}
+    out.update({f"coll_{k}": v for k, v in c.coll.items()})
+    out["coll_total"] = sum(c.coll.values())
+    return out

@@ -1,0 +1,168 @@
+"""jit-able train / prefill / decode steps + abstract-state builders.
+
+``make_train_step`` closes over config and sharding context and returns the
+pure (params, opt_state, batch, step) → (params', opt_state', metrics)
+function; the dry-run lowers it against ShapeDtypeStruct trees so no memory
+is ever allocated for the full-size models.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeCell
+from repro.models.common import NULL_CTX, ShardCtx
+from repro.models.model import (abstract_model, forward_decode,
+                                forward_prefill, forward_train, input_specs,
+                                model_defs)
+from repro.models.kvcache import abstract_cache
+from repro.models.params import ParamDef, param_shardings, spec_for
+from repro.optim import make_optimizer
+from repro.optim.schedule import clip_by_global_norm, cosine_schedule
+
+
+def _split_microbatches(batch, k: int, ctx):
+    """(B, ...) leaves → (k, B/k, ...); M-RoPE positions carry batch on
+    axis 1.  Re-constrain so the microbatch axis stays unsharded (the batch
+    shards over the data axes within each microbatch)."""
+    def split(name, x):
+        if name == "positions":          # (3, B, S)
+            y = x.reshape((x.shape[0], k, x.shape[1] // k) + x.shape[2:])
+            y = jnp.moveaxis(y, 1, 0)    # (k, 3, B/k, S)
+            return ctx.constrain(y, None, None, "batch",
+                                 *([None] * (y.ndim - 3)))
+        y = x.reshape((k, x.shape[0] // k) + x.shape[1:])
+        return ctx.constrain(y, None, "batch", *([None] * (y.ndim - 2)))
+    return {name: split(name, x) for name, x in batch.items()}
+
+
+def make_train_step(cfg: ModelConfig, ctx: Optional[ShardCtx] = None,
+                    *, peak_lr: float = 3e-4, warmup: int = 100,
+                    total_steps: int = 10_000, clip_norm: float = 1.0):
+    ctx = ctx or NULL_CTX
+    _, opt_update = make_optimizer(cfg.optimizer)
+
+    def train_step(params, opt_state, batch, step):
+        if cfg.microbatch > 1:
+            # gradient accumulation: scan over k microbatches; activations
+            # live for one microbatch at a time (memory lever, §Perf).
+            k = cfg.microbatch
+            mbs = _split_microbatches(batch, k, ctx)
+
+            def loss_fn(p):
+                def body(carry, mb):
+                    l, m = forward_train(cfg, p, mb, ctx)
+                    return carry + l / k, m
+                loss, ms = jax.lax.scan(
+                    jax.checkpoint(body), jnp.float32(0.0), mbs)
+                return loss, jax.tree_util.tree_map(
+                    lambda x: jnp.mean(x, axis=0), ms)
+        else:
+            def loss_fn(p):
+                return forward_train(cfg, p, batch, ctx)
+
+        (_, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params)
+        if ctx.mesh is not None:
+            # pin gradient shardings to the parameter shardings so SPMD
+            # lowers the data-axis reduction as reduce-scatter into the
+            # FSDP shard instead of a full all-reduce (§Perf H7).
+            shardings = param_shardings(model_defs(cfg), ctx.mesh, ctx.rules)
+            grads = jax.tree_util.tree_map(
+                lambda g, s: jax.lax.with_sharding_constraint(g, s),
+                grads, shardings)
+        grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        lr = cosine_schedule(step, peak_lr=peak_lr, warmup_steps=warmup,
+                             total_steps=total_steps)
+        params, opt_state = opt_update(grads, opt_state, params, lr=lr)
+        metrics = dict(metrics)
+        metrics["grad_norm"] = gnorm
+        metrics["lr"] = lr
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, ctx: Optional[ShardCtx] = None):
+    ctx = ctx or NULL_CTX
+
+    def prefill_step(params, batch, cache):
+        return forward_prefill(cfg, params, batch, cache, ctx)
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, ctx: Optional[ShardCtx] = None):
+    ctx = ctx or NULL_CTX
+
+    def decode_step(params, tokens, cache):
+        return forward_decode(cfg, params, tokens, cache, ctx)
+
+    return decode_step
+
+
+# ---------------------------------------------------------------------------
+# Abstract optimizer state (for lowering train_step without allocation)
+# ---------------------------------------------------------------------------
+
+def _sds(shape, dtype, mesh, spec):
+    if mesh is None:
+        return jax.ShapeDtypeStruct(tuple(shape), dtype)
+    return jax.ShapeDtypeStruct(tuple(shape), dtype,
+                                sharding=NamedSharding(mesh, spec))
+
+
+def abstract_opt_state(cfg: ModelConfig, mesh: Optional[Mesh] = None,
+                       rules=None):
+    """ShapeDtypeStruct tree matching {adamw,adafactor}_init output, with
+    optimizer-state shardings inherited from the parameter logical axes."""
+    defs = model_defs(cfg)
+    rules = rules or {}
+    is_def = lambda x: isinstance(x, ParamDef)
+
+    def full(d: ParamDef):
+        return _sds(d.shape, jnp.float32, mesh, spec_for(d, rules))
+
+    count = _sds((), jnp.int32, mesh, P())
+    if cfg.optimizer == "adamw":
+        t = lambda: jax.tree_util.tree_map(full, defs, is_leaf=is_def)
+        return {"m": t(), "v": t(), "master": t(), "count": count}
+
+    def stat(d: ParamDef):
+        if len(d.shape) >= 2:
+            vr = ParamDef(d.shape[:-1], d.axes[:-1], d.init)
+            vc = ParamDef(d.shape[:-2] + d.shape[-1:],
+                          d.axes[:-2] + d.axes[-1:], d.init)
+            return {"vr": full(vr), "vc": full(vc)}
+        return {"v": full(d)}
+
+    return {
+        "stats": jax.tree_util.tree_map(stat, defs, is_leaf=is_def),
+        "master": jax.tree_util.tree_map(full, defs, is_leaf=is_def),
+        "count": count,
+    }
+
+
+def abstract_cell_args(cfg: ModelConfig, cell: ShapeCell,
+                       mesh: Optional[Mesh] = None, rules=None):
+    """(fn, args) ready for jit(fn).lower(*args) for this cell."""
+    ctx = ShardCtx(mesh, rules) if mesh is not None else NULL_CTX
+    params = abstract_model(cfg, mesh, rules)
+    batch = input_specs(cfg, cell, mesh, rules)
+    if cell.kind == "train":
+        fn = make_train_step(cfg, ctx)
+        opt = abstract_opt_state(cfg, mesh, rules)
+        step = _sds((), jnp.int32, mesh, P())
+        return fn, (params, opt, batch, step)
+    if cell.kind == "prefill":
+        fn = make_prefill_step(cfg, ctx)
+        cache = abstract_cache(cfg, cell.global_batch, cell.seq_len, mesh,
+                               rules)
+        return fn, (params, batch, cache)
+    fn = make_decode_step(cfg, ctx)
+    cache = abstract_cache(cfg, cell.global_batch, cell.seq_len, mesh, rules)
+    return fn, (params, batch["tokens"], cache)

@@ -1,0 +1,85 @@
+"""Run the full dry-run matrix (every arch × applicable cell × mesh) as
+subprocesses (fresh XLA device state per cell) and tabulate the results.
+
+    PYTHONPATH=src python -m repro.launch.sweep --out results/dryrun \
+        [--archs a,b] [--cells c1,c2] [--meshes pod,multipod] [-j 2]
+"""
+from __future__ import annotations
+
+import argparse
+import concurrent.futures as cf
+import json
+import os
+import subprocess
+import sys
+import time
+
+
+def run_one(arch, cell, multi_pod, outdir, override=None, tag=""):
+    suffix = ("_mp" if multi_pod else "_sp") + (f"_{tag}" if tag else "")
+    out = os.path.join(outdir, f"{arch}__{cell}{suffix}.json")
+    if os.path.exists(out):
+        return arch, cell, multi_pod, "cached", 0.0
+    cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+           "--cell", cell, "--out", out]
+    if multi_pod:
+        cmd.append("--multi-pod")
+    if override:
+        cmd += ["--override", json.dumps(override)]
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    t0 = time.time()
+    p = subprocess.run(cmd, capture_output=True, text=True, env=env,
+                       cwd="/root/repo")
+    dt = time.time() - t0
+    if p.returncode != 0:
+        err_path = out.replace(".json", ".err")
+        with open(err_path, "w") as f:
+            f.write(p.stdout[-4000:] + "\n---\n" + p.stderr[-8000:])
+        return arch, cell, multi_pod, f"FAIL({err_path})", dt
+    return arch, cell, multi_pod, "ok", dt
+
+
+def main():
+    from repro.configs.registry import all_cells
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--archs", default=None)
+    ap.add_argument("--cells", default=None)
+    ap.add_argument("--meshes", default="pod,multipod")
+    ap.add_argument("-j", type=int, default=2)
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    wanted_archs = set(args.archs.split(",")) if args.archs else None
+    wanted_cells = set(args.cells.split(",")) if args.cells else None
+    meshes = [m == "multipod" for m in args.meshes.split(",")]
+
+    jobs = []
+    for arch, cell in all_cells():
+        if wanted_archs and arch not in wanted_archs:
+            continue
+        if wanted_cells and cell.name not in wanted_cells:
+            continue
+        for mp in meshes:
+            jobs.append((arch, cell.name, mp))
+
+    print(f"{len(jobs)} dry-run cells -> {args.out}", flush=True)
+    results = []
+    with cf.ThreadPoolExecutor(max_workers=args.j) as ex:
+        futs = [ex.submit(run_one, a, c, m, args.out) for a, c, m in jobs]
+        for f in cf.as_completed(futs):
+            a, c, m, status, dt = f.result()
+            print(f"[{len(results)+1}/{len(jobs)}] {a:24s} {c:12s} "
+                  f"{'mp' if m else 'sp'}  {status:8s} {dt:6.0f}s",
+                  flush=True)
+            results.append((a, c, m, status))
+    bad = [r for r in results if r[3].startswith("FAIL")]
+    print(f"done: {len(results) - len(bad)} ok, {len(bad)} failed")
+    for r in bad:
+        print("  FAILED:", r)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+"""repro.models — architecture zoo (10 assigned archs; DESIGN.md §5)."""

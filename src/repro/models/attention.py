@@ -1,0 +1,387 @@
+"""Attention: GQA (+qk-norm, softcap, SWA, M-RoPE) and MLA, with
+flash-style chunked computation (pure-JAX online softmax) so no (S×S) score
+tensor ever materialises — required for the 32k-prefill and 4k-train cells.
+
+Two causal schedules (perf lever, EXPERIMENTS.md §Perf):
+  * ``masked``      — scan over all K/V chunks and mask.  Simple, small HLO,
+                      but compiles ~2× the useful attention FLOPs.
+  * ``triangular``  — static Python loop over Q chunks; each only visits the
+                      K/V chunks its causal/window footprint can reach.
+                      Bigger HLO, near-zero wasted FLOPs.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.common import apply_mrope, apply_rope, rmsnorm, rmsnorm_def
+from repro.models.params import ParamDef
+
+_NEG = -2.0e30
+
+
+# ---------------------------------------------------------------------------
+# Flash-style chunked attention core
+# ---------------------------------------------------------------------------
+
+def _attn_block(qc, kc, vc, q_pos, k_pos, *, causal, window, softcap, scale,
+                kv_valid):
+    """One (q_chunk × k_chunk) attention block with online-softmax stats.
+
+    qc: (B, Qc, Hkv, G, D); kc/vc: (B, Kc, Hkv, D).
+    Returns (m, l, acc) contributions: s-max (B,Hkv,G,Qc), sumexp, weighted V.
+    """
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qc.astype(jnp.float32),
+                   kc.astype(jnp.float32)) * scale
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    mask = k_pos[None, :] < kv_valid          # padded KV masked out
+    if causal:
+        mask &= k_pos[None, :] <= q_pos[:, None]
+    if window:
+        mask &= k_pos[None, :] > q_pos[:, None] - window
+    s = jnp.where(mask[None, None, None], s, _NEG)
+    m = jnp.max(s, axis=-1)
+    p = jnp.exp(s - m[..., None])
+    l = jnp.sum(p, axis=-1)
+    acc = jnp.einsum("bhgqk,bkhd->bhgqd", p, vc.astype(jnp.float32))
+    return m, l, acc
+
+
+def _merge(m1, l1, a1, m2, l2, a2):
+    m = jnp.maximum(m1, m2)
+    c1 = jnp.exp(m1 - m)
+    c2 = jnp.exp(m2 - m)
+    return m, l1 * c1 + l2 * c2, a1 * c1[..., None] + a2 * c2[..., None]
+
+
+def flash_attention(
+    q: jax.Array, k: jax.Array, v: jax.Array, *,
+    causal: bool = True,
+    window: int = 0,
+    softcap: float = 0.0,
+    q_chunk: int = 512,
+    k_chunk: int = 1024,
+    q_offset: int = 0,
+    causal_mode: str = "masked",
+) -> jax.Array:
+    """q: (B,Sq,H,D); k/v: (B,Sk,Hkv,D) → (B,Sq,H,D).
+
+    ``q_offset`` is the absolute position of q[.,0] (prefill continuation).
+    """
+    b, sq0, h, d = q.shape
+    _, sk0, hkv, _ = k.shape
+    g = h // hkv
+    scale = d ** -0.5
+    q_chunk = min(q_chunk, sq0)
+    k_chunk = min(k_chunk, sk0)
+    # pad both sequence dims to chunk multiples; padded KV positions are
+    # masked below, padded Q rows are sliced off at the end.
+    sq = -(-sq0 // q_chunk) * q_chunk
+    sk = -(-sk0 // k_chunk) * k_chunk
+    if sq != sq0:
+        q = jnp.pad(q, ((0, 0), (0, sq - sq0), (0, 0), (0, 0)))
+    if sk != sk0:
+        k = jnp.pad(k, ((0, 0), (0, sk - sk0), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, sk - sk0), (0, 0), (0, 0)))
+    nq, nk = sq // q_chunk, sk // k_chunk
+    q5 = q.reshape(b, sq, hkv, g, d)
+
+    def init_stats():
+        m = jnp.full((b, hkv, g, q_chunk), _NEG, jnp.float32)
+        l = jnp.zeros((b, hkv, g, q_chunk), jnp.float32)
+        acc = jnp.zeros((b, hkv, g, q_chunk, d), jnp.float32)
+        return m, l, acc
+
+    def q_pos_of(qi):
+        return q_offset + qi * q_chunk + jnp.arange(q_chunk)
+
+    def kv_block(ki):
+        kc = lax.dynamic_slice_in_dim(k, ki * k_chunk, k_chunk, axis=1)
+        vc = lax.dynamic_slice_in_dim(v, ki * k_chunk, k_chunk, axis=1)
+        return kc, vc, ki * k_chunk + jnp.arange(k_chunk)
+
+    def run_q_chunk(qi, kv_range):
+        qc = lax.dynamic_slice_in_dim(q5, qi * q_chunk, q_chunk, axis=1)
+        qp = q_pos_of(qi)
+
+        def kv_step(carry, ki):
+            kc, vc, kp = kv_block(ki)
+            blk = _attn_block(qc, kc, vc, qp, kp, causal=causal,
+                              window=window, softcap=softcap, scale=scale,
+                              kv_valid=sk0)
+            return _merge(*carry, *blk), None
+
+        (m, l, acc), _ = lax.scan(kv_step, init_stats(), kv_range)
+        out = acc / jnp.maximum(l, 1e-30)[..., None]       # (B,Hkv,G,Qc,D)
+        return jnp.moveaxis(out, 3, 1).reshape(b, q_chunk, h, d)
+
+    if causal_mode == "triangular" and causal:
+        outs = []
+        for qi in range(nq):
+            hi = min(nk, (q_offset + (qi + 1) * q_chunk - 1) // k_chunk + 1)
+            lo = 0
+            if window:
+                lo = max(0, (q_offset + qi * q_chunk - window) // k_chunk)
+            outs.append(run_q_chunk(qi, jnp.arange(lo, hi)))
+        out = jnp.concatenate(outs, axis=1)
+    else:
+        out = lax.map(lambda qi: run_q_chunk(qi, jnp.arange(nk)),
+                      jnp.arange(nq))                       # (nq,B,Qc,H,D)
+        out = jnp.moveaxis(out, 0, 1).reshape(b, sq, h, d)
+    return out[:, :sq0].astype(q.dtype)
+
+
+def decode_attention(
+    q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+    lengths: jax.Array, *,
+    window: int = 0,
+    softcap: float = 0.0,
+) -> jax.Array:
+    """Single-token attention against a (possibly ring-buffer) cache.
+
+    q: (B,1,H,D); caches: (B,Smax,Hkv,D); lengths: (B,) tokens already in
+    cache INCLUDING the current one.  For ring buffers (window>0, Smax ==
+    window) every slot older than ``window`` has been overwritten, so all
+    written slots are valid.
+    """
+    b, _, h, d = q.shape
+    _, smax, hkv, _ = k_cache.shape
+    g = h // hkv
+    scale = d ** -0.5
+    q5 = q.reshape(b, hkv, g, d)
+    s = jnp.einsum("bhgd,bkhd->bhgk", q5.astype(jnp.float32),
+                   k_cache.astype(jnp.float32)) * scale
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    slot = jnp.arange(smax)
+    valid = slot[None, :] < jnp.minimum(lengths, smax)[:, None]   # (B,Smax)
+    s = jnp.where(valid[:, None, None], s, _NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, 1, h, d).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# int8 KV-cache quantization (serving lever, EXPERIMENTS.md §Perf-5)
+# ---------------------------------------------------------------------------
+
+def quantize_kv(x: jax.Array):
+    """Per-(token, head) symmetric int8.  x: (..., hkv, hd) →
+    (q int8, scale fp32 (..., hkv))."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(xf), axis=-1), 1e-6) / 127.0
+    q = jnp.round(xf / scale[..., None]).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_kv(q: jax.Array, scale: jax.Array, dtype) -> jax.Array:
+    return (q.astype(jnp.float32) * scale[..., None].astype(jnp.float32)
+            ).astype(dtype)
+
+
+def gqa_decode_quant(cfg, p, x, positions, kq8, vq8, ks, vs, lengths, *,
+                     window=0):
+    """One-token decode against an int8-quantized ring/linear cache.
+
+    kq8/vq8: (B, Smax, Hkv, hd) int8; ks/vs: (B, Smax, Hkv) fp32.
+    Returns (out, kq8', vq8', ks', vs').
+    """
+    b = x.shape[0]
+    q, k, v = gqa_qkv(cfg, p, x, positions)        # k/v: (B,1,Hkv,hd)
+    smax = kq8.shape[1]
+    if window and smax == window:
+        slot = (lengths - 1) % smax
+    else:
+        slot = jnp.minimum(lengths - 1, smax - 1)
+    bidx = jnp.arange(b)
+    kq_new, ks_new = quantize_kv(k[:, 0])
+    vq_new, vs_new = quantize_kv(v[:, 0])
+    kq8 = kq8.at[bidx, slot].set(kq_new)
+    vq8 = vq8.at[bidx, slot].set(vq_new)
+    ks = ks.at[bidx, slot].set(ks_new)
+    vs = vs.at[bidx, slot].set(vs_new)
+    k4 = dequantize_kv(kq8, ks, x.dtype)
+    v4 = dequantize_kv(vq8, vs, x.dtype)
+    o = decode_attention(q, k4, v4, lengths, window=window,
+                         softcap=cfg.attn_softcap)
+    return o.reshape(b, 1, -1) @ p["wo"], kq8, vq8, ks, vs
+
+
+# ---------------------------------------------------------------------------
+# GQA attention layer
+# ---------------------------------------------------------------------------
+
+def gqa_defs(cfg) -> Dict[str, ParamDef]:
+    d, h, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    kv_axis = None if cfg.replicate_kv else "model"
+    defs = {
+        "wq": ParamDef((d, h * hd), ("embed", "model")),
+        "wk": ParamDef((d, hkv * hd), ("embed", kv_axis)),
+        "wv": ParamDef((d, hkv * hd), ("embed", kv_axis)),
+        "wo": ParamDef((h * hd, d), ("model", "embed")),
+    }
+    if cfg.qk_norm:
+        defs["q_norm"] = rmsnorm_def(hd)
+        defs["k_norm"] = rmsnorm_def(hd)
+    return defs
+
+
+def gqa_qkv(cfg, p, x, positions, *, rope=True):
+    """Project + normalise + rope.  x: (B,S,d) → q (B,S,H,hd), k/v (B,S,Hkv,hd)."""
+    b, s, _ = x.shape
+    h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    q = (x @ p["wq"]).reshape(b, s, h, hd)
+    k = (x @ p["wk"]).reshape(b, s, hkv, hd)
+    v = (x @ p["wv"]).reshape(b, s, hkv, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"])
+        k = rmsnorm(k, p["k_norm"])
+    if rope:
+        if cfg.mrope_sections:
+            q = apply_mrope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+            k = apply_mrope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+        else:
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def gqa_attend(cfg, p, x, positions, *, window=0, causal=True, q_offset=0,
+               kv_override=None):
+    """Full-sequence attention (train / prefill).  Returns (out, (k, v))."""
+    b, s, _ = x.shape
+    q, k, v = gqa_qkv(cfg, p, x, positions, rope=kv_override is None)
+    if kv_override is not None:        # enc-dec cross attention
+        k, v = kv_override
+        causal = False
+    o = flash_attention(
+        q, k, v, causal=causal, window=window, softcap=cfg.attn_softcap,
+        q_chunk=cfg.q_chunk, k_chunk=cfg.k_chunk, q_offset=q_offset,
+        causal_mode=cfg.causal_mode)
+    return o.reshape(b, s, -1) @ p["wo"], (k, v)
+
+
+def gqa_decode(cfg, p, x, positions, k_cache, v_cache, lengths, *, window=0):
+    """One-token decode.  x: (B,1,d).  Returns (out, k_cache', v_cache')."""
+    b = x.shape[0]
+    q, k, v = gqa_qkv(cfg, p, x, positions)     # k/v: (B,1,Hkv,hd)
+    smax = k_cache.shape[1]
+    if window and smax == window:       # ring buffer (SWA)
+        slot = (lengths - 1) % smax
+    else:
+        slot = jnp.minimum(lengths - 1, smax - 1)
+    bidx = jnp.arange(b)
+    k_cache = k_cache.at[bidx, slot].set(k[:, 0])
+    v_cache = v_cache.at[bidx, slot].set(v[:, 0])
+    o = decode_attention(q, k_cache, v_cache, lengths,
+                         window=window, softcap=cfg.attn_softcap)
+    return o.reshape(b, 1, -1) @ p["wo"], k_cache, v_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA (multi-head latent attention, MiniCPM3 / DeepSeek style)
+# ---------------------------------------------------------------------------
+
+def mla_defs(cfg) -> Dict[str, ParamDef]:
+    d, h = cfg.d_model, cfg.n_heads
+    qr, kvr = cfg.q_lora_rank, cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    return {
+        "q_down": ParamDef((d, qr), ("embed", None)),
+        "q_norm": rmsnorm_def(qr),
+        "q_up": ParamDef((qr, h * (dn + dr)), (None, "model")),
+        "kv_down": ParamDef((d, kvr + dr), ("embed", None)),
+        "kv_norm": rmsnorm_def(kvr),
+        "k_up": ParamDef((kvr, h * dn), (None, "model")),
+        "v_up": ParamDef((kvr, h * dv), (None, "model")),
+        "wo": ParamDef((h * dv, d), ("model", "embed")),
+    }
+
+
+def _mla_project_q(cfg, p, x, positions):
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    dn, dr = cfg.qk_nope_dim, cfg.qk_rope_dim
+    ql = rmsnorm(x @ p["q_down"], p["q_norm"])
+    q = (ql @ p["q_up"]).reshape(b, s, h, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _mla_latent(cfg, p, x, positions):
+    """Compressed KV stream: (c_kv (B,S,kvr) normed, k_rope (B,S,dr) roped)."""
+    dr = cfg.qk_rope_dim
+    kv = x @ p["kv_down"]
+    c_kv = rmsnorm(kv[..., :cfg.kv_lora_rank], p["kv_norm"])
+    k_rope = apply_rope(kv[..., cfg.kv_lora_rank:][:, :, None, :],
+                        positions, cfg.rope_theta)[:, :, 0]
+    return c_kv, k_rope
+
+
+def mla_attend(cfg, p, x, positions, *, q_offset=0):
+    """Train/prefill MLA: materialise per-head K/V from the latent stream and
+    run flash attention (Hkv == H).  Returns (out, (c_kv, k_rope)) — the
+    latent pair is what the cache stores (the paper-level MLA memory win).
+    """
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    dn, dv = cfg.qk_nope_dim, cfg.v_head_dim
+    q_nope, q_rope = _mla_project_q(cfg, p, x, positions)
+    c_kv, k_rope = _mla_latent(cfg, p, x, positions)
+    k_nope = (c_kv @ p["k_up"]).reshape(b, s, h, dn)
+    v = (c_kv @ p["v_up"]).reshape(b, s, h, dv)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope,
+                         jnp.broadcast_to(k_rope[:, :, None, :],
+                                          (b, s, h, cfg.qk_rope_dim))], axis=-1)
+    # pad v to qk dim for the shared flash kernel, slice after.
+    dq = dn + cfg.qk_rope_dim
+    v_pad = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, dq - dv)))
+    o = flash_attention(q, k, v_pad, causal=True, q_chunk=cfg.q_chunk,
+                        k_chunk=cfg.k_chunk, q_offset=q_offset,
+                        causal_mode=cfg.causal_mode)[..., :dv]
+    return o.reshape(b, s, -1) @ p["wo"], (c_kv, k_rope)
+
+
+def mla_decode(cfg, p, x, positions, ckv_cache, krope_cache, lengths):
+    """Absorbed-matmul MLA decode: score directly in latent space —
+    q_nope' = q_nope @ k_upᵀ (per head) lands in the kv_lora space, so the
+    cache is never expanded to per-head K/V (O(S·kvr) instead of O(S·H·hd)).
+    """
+    b = x.shape[0]
+    h = cfg.n_heads
+    dn, dr, dv, kvr = (cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim,
+                       cfg.kv_lora_rank)
+    q_nope, q_rope = _mla_project_q(cfg, p, x, positions)   # (B,1,H,·)
+    c_kv, k_rope = _mla_latent(cfg, p, x, positions)        # (B,1,kvr),(B,1,dr)
+
+    bidx = jnp.arange(b)
+    slot = jnp.minimum(lengths - 1, ckv_cache.shape[1] - 1)
+    ckv_cache = ckv_cache.at[bidx, slot].set(c_kv[:, 0])
+    krope_cache = krope_cache.at[bidx, slot].set(k_rope[:, 0])
+
+    k_up = p["k_up"].reshape(kvr, h, dn)
+    # absorb: q' (B,H,kvr)
+    q_lat = jnp.einsum("bhd,khd->bhk", q_nope[:, 0].astype(jnp.float32),
+                       k_up.astype(jnp.float32))
+    s_lat = jnp.einsum("bhk,bsk->bhs", q_lat,
+                       ckv_cache.astype(jnp.float32))
+    s_rope = jnp.einsum("bhd,bsd->bhs", q_rope[:, 0].astype(jnp.float32),
+                        krope_cache.astype(jnp.float32))
+    scale = (dn + dr) ** -0.5
+    s = (s_lat + s_rope) * scale
+    valid = jnp.arange(ckv_cache.shape[1])[None] < lengths[:, None]
+    s = jnp.where(valid[:, None], s, _NEG)
+    pattn = jax.nn.softmax(s, axis=-1)
+    o_lat = jnp.einsum("bhs,bsk->bhk", pattn,
+                       ckv_cache.astype(jnp.float32))       # (B,H,kvr)
+    v_up = p["v_up"].reshape(kvr, h, dv)
+    o = jnp.einsum("bhk,khd->bhd", o_lat, v_up.astype(jnp.float32))
+    o = o.reshape(b, 1, h * dv).astype(x.dtype)
+    return o @ p["wo"], ckv_cache, krope_cache

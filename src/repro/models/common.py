@@ -1,0 +1,183 @@
+"""Shared model components: norms, RoPE/M-RoPE, SwiGLU MLP, embeddings.
+
+All modules follow the defs/apply pattern: ``*_defs`` returns a pytree of
+ParamDef, ``apply_*``/functions consume a matching pytree of arrays.
+Activations stay in the model dtype; norms/softmax/rope accumulate fp32.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.params import ParamDef
+
+
+def stacked(defs, n: int, axis_name: str = "layers"):
+    """Prepend a stacking dim (for lax.scan over layers) to every ParamDef."""
+    return jax.tree_util.tree_map(
+        lambda d: ParamDef((n,) + d.shape, (axis_name,) + d.axes, d.init,
+                           d.scale),
+        defs, is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+def rmsnorm_def(dim: int) -> ParamDef:
+    return ParamDef((dim,), (None,), "ones")
+
+
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * lax.rsqrt(var + eps) * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def gated_rmsnorm(x: jax.Array, z: jax.Array, w: jax.Array,
+                  eps: float = 1e-6) -> jax.Array:
+    """Mamba2 out-norm: RMSNorm(x) * silu(z)."""
+    return rmsnorm(x, w, eps) * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE / M-RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    """(head_dim//2,) inverse frequencies."""
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotate pairs (x[..., :d/2], x[..., d/2:]).
+
+    x: (B, S, H, D); positions: (B, S) int32.
+    """
+    d = x.shape[-1]
+    inv = rope_freqs(d, theta)                          # (D/2,)
+    ang = positions.astype(jnp.float32)[..., None] * inv  # (B, S, D/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jax.Array, positions: jax.Array, theta: float,
+                sections: Tuple[int, ...]) -> jax.Array:
+    """Qwen2-VL multimodal RoPE.
+
+    The D/2 frequency slots are split into ``sections`` = (t, h, w) groups;
+    group g uses position stream g.  positions: (3, B, S).
+    """
+    d = x.shape[-1]
+    assert sum(sections) == d // 2, (sections, d)
+    inv = rope_freqs(d, theta)                           # (D/2,)
+    sec_id = jnp.repeat(jnp.arange(len(sections)),
+                        jnp.array(sections), total_repeat_length=d // 2)
+    pos_per_freq = jnp.take(positions.astype(jnp.float32), sec_id,
+                            axis=0)                      # (D/2, B, S)
+    ang = jnp.moveaxis(pos_per_freq, 0, -1) * inv        # (B, S, D/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+def mlp_defs(d_model: int, d_ff: int) -> Dict[str, ParamDef]:
+    return {
+        "w_gate": ParamDef((d_model, d_ff), ("embed", "model")),
+        "w_up": ParamDef((d_model, d_ff), ("embed", "model")),
+        "w_down": ParamDef((d_ff, d_model), ("model", "embed")),
+    }
+
+
+def apply_mlp(p, x: jax.Array) -> jax.Array:
+    h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+    return h @ p["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def embedding_defs(vocab: int, d_model: int, tie: bool) -> Dict[str, ParamDef]:
+    defs = {"tok": ParamDef((vocab, d_model), ("model", "embed"), "small")}
+    if not tie:
+        defs["out"] = ParamDef((d_model, vocab), ("embed", "model"), "small")
+    return defs
+
+
+def embed_tokens(p, tokens: jax.Array, dtype) -> jax.Array:
+    return jnp.take(p["tok"], tokens, axis=0).astype(dtype)
+
+
+def unembed(p, x: jax.Array, *, tie: bool,
+            final_softcap: float = 0.0) -> jax.Array:
+    w = p["tok"].T if tie else p["out"]
+    logits = (x @ w.astype(x.dtype)).astype(jnp.float32)
+    if final_softcap:
+        logits = final_softcap * jnp.tanh(logits / final_softcap)
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# Losses
+# ---------------------------------------------------------------------------
+
+def softmax_xent(logits: jax.Array, labels: jax.Array,
+                 mask: Optional[jax.Array] = None) -> jax.Array:
+    """Token-mean cross entropy in fp32.  logits (..., V), labels (...)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    if mask is not None:
+        maskf = mask.astype(jnp.float32)
+        return jnp.sum(nll * maskf) / jnp.maximum(jnp.sum(maskf), 1.0)
+    return jnp.mean(nll)
+
+
+class ShardCtx:
+    """Optional sharding context threaded through the forward pass.
+
+    Holds the logical-axis rules; ``constrain(x, *axes)`` applies a
+    with_sharding_constraint when a mesh is active, else no-ops (CPU smoke
+    tests run without a mesh).
+    """
+
+    def __init__(self, mesh=None, rules=None):
+        self.mesh = mesh
+        self.rules = rules or {}
+        if mesh is not None:
+            self.data_shards = 1
+            for name in mesh.axis_names:
+                if name != "model":
+                    self.data_shards *= mesh.shape[name]
+        else:
+            self.data_shards = 1
+
+    def constrain(self, x, *axes):
+        if self.mesh is None:
+            return x
+        from jax.sharding import NamedSharding
+        from repro.distributed.sharding import divisible_spec
+        spec = divisible_spec(
+            self.mesh, x.shape,
+            [self.rules.get(a) if a is not None else None for a in axes])
+        return lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, spec))
+
+
+NULL_CTX = ShardCtx()

@@ -1,0 +1,132 @@
+"""Encoder-decoder backbone (seamless-m4t style, audio frontend stubbed).
+
+Encoder: bidirectional transformer over precomputed frame embeddings
+(the speech frontend is a stub by contract — ``input_specs`` supplies
+(B, S_src, d) frames).  Decoder: causal self-attention + cross-attention to
+the encoder output.  Prefill computes the encoder pass once and caches the
+cross-attention K/V per decoder layer.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import attention as attn_lib
+from repro.models.common import (NULL_CTX, apply_mlp, mlp_defs, rmsnorm,
+                                 rmsnorm_def, stacked)
+from repro.models.transformer import ZERO_AUX, _remat
+
+
+def enc_block_defs(cfg) -> Dict[str, Any]:
+    d = cfg.d_model
+    return {"ln1": rmsnorm_def(d), "attn": attn_lib.gqa_defs(cfg),
+            "ln2": rmsnorm_def(d), "ffn": mlp_defs(d, cfg.d_ff)}
+
+
+def dec_block_defs(cfg) -> Dict[str, Any]:
+    d = cfg.d_model
+    return {"ln1": rmsnorm_def(d), "self_attn": attn_lib.gqa_defs(cfg),
+            "ln_x": rmsnorm_def(d), "cross_attn": attn_lib.gqa_defs(cfg),
+            "ln2": rmsnorm_def(d), "ffn": mlp_defs(d, cfg.d_ff)}
+
+
+def encdec_defs(cfg) -> Dict[str, Any]:
+    return {"enc": stacked(enc_block_defs(cfg), cfg.n_enc_layers),
+            "enc_ln": rmsnorm_def(cfg.d_model),
+            "dec": stacked(dec_block_defs(cfg), cfg.n_dec_layers)}
+
+
+def run_encoder(cfg, params, frames, ctx=NULL_CTX):
+    """frames: (B, S_src, d) stub-frontend embeddings → (B, S_src, d)."""
+    b, s, _ = frames.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+
+    def body(x, p):
+        h = rmsnorm(x, p["ln1"])
+        o, _ = attn_lib.gqa_attend(cfg, p["attn"], h, positions, causal=False)
+        x = ctx.constrain(x + o, "batch", None, None)
+        x = x + apply_mlp(p["ffn"], rmsnorm(x, p["ln2"]))
+        return ctx.constrain(x, "batch", None, None), None
+
+    x, _ = lax.scan(_remat(body, cfg), frames, params["enc"])
+    return rmsnorm(x, params["enc_ln"])
+
+
+def run_decoder(cfg, params, x, enc_out, *, mode, positions, cache=None,
+                lengths=None, ctx=NULL_CTX):
+    """Decoder stack.  x: (B, S_tgt, d) embedded target tokens.
+
+    Returns (hidden, new_cache_entries).
+    mode "train"/"prefill": full teacher forcing, cross K/V from enc_out.
+    mode "decode": one token; cross K/V come from the cache.
+    """
+    b = x.shape[0]
+    hkv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    new_cache: Dict[str, jax.Array] = {}
+
+    if mode != "decode":
+        s_src = enc_out.shape[1]
+        src_pos = jnp.broadcast_to(jnp.arange(s_src)[None], (b, s_src))
+
+    def body(carry, xs):
+        x = carry
+        if mode == "decode":
+            p, k, v, kx, vx = xs
+        else:
+            p = xs
+        h = rmsnorm(x, p["ln1"])
+        if mode == "decode":
+            k4 = k.reshape(b, -1, hkv, hd)
+            v4 = v.reshape(b, -1, hkv, hd)
+            o, k4, v4 = attn_lib.gqa_decode(
+                cfg, p["self_attn"], h, positions, k4, v4, lengths)
+            kv_self = (k4.reshape(b, -1, hkv * hd),
+                       v4.reshape(b, -1, hkv * hd))
+        else:
+            o, (k4, v4) = attn_lib.gqa_attend(
+                cfg, p["self_attn"], h, positions)
+            s = x.shape[1]
+            kv_self = None if mode == "train" else (
+                k4.reshape(b, s, hkv * hd), v4.reshape(b, s, hkv * hd))
+        x = ctx.constrain(x + o, "batch", None, None)
+
+        h = rmsnorm(x, p["ln_x"])
+        if mode == "decode":
+            kx4 = kx.reshape(b, -1, hkv, hd)
+            vx4 = vx.reshape(b, -1, hkv, hd)
+            q, _, _ = attn_lib.gqa_qkv(cfg, p["cross_attn"], h, positions,
+                                       rope=False)
+            src_len = jnp.full((b,), kx4.shape[1], jnp.int32)
+            o = attn_lib.decode_attention(q, kx4, vx4, src_len)
+            o = o.reshape(b, 1, -1) @ p["cross_attn"]["wo"]
+            kv_cross = (kx, vx)
+        else:
+            # cross K/V from encoder output (no rope in cross attention)
+            kc = (enc_out @ p["cross_attn"]["wk"]).reshape(b, -1, hkv, hd)
+            vc = (enc_out @ p["cross_attn"]["wv"]).reshape(b, -1, hkv, hd)
+            o, _ = attn_lib.gqa_attend(
+                cfg, p["cross_attn"], h, positions, kv_override=(kc, vc))
+            s_src_ = kc.shape[1]
+            kv_cross = None if mode == "train" else (
+                kc.reshape(b, s_src_, hkv * hd),
+                vc.reshape(b, s_src_, hkv * hd))
+        x = ctx.constrain(x + o, "batch", None, None)
+        x = x + apply_mlp(p["ffn"], rmsnorm(x, p["ln2"]))
+        x = ctx.constrain(x, "batch", None, None)
+        if mode == "train":
+            return x, None
+        return x, (kv_self, kv_cross)
+
+    if mode == "decode":
+        xs = (params["dec"], cache["k"], cache["v"],
+              cache["k_cross"], cache["v_cross"])
+    else:
+        xs = params["dec"]
+    x, ys = lax.scan(_remat(body, cfg), x, xs)
+    if mode != "train":
+        (k, v), (kx, vx) = ys
+        new_cache = {"k": k, "v": v, "k_cross": kx, "v_cross": vx}
+    return x, new_cache

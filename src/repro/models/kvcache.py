@@ -1,0 +1,151 @@
+"""KV / state cache structures for every architecture family.
+
+Caches are plain pytrees (dicts of arrays) with a leading stacking dim that
+matches the layer scan, plus ``lengths`` (B,) int32.  ``abstract_cache``
+returns ShapeDtypeStruct stand-ins (with shardings) for the dry-run.
+
+Sharding note: K/V are stored FLAT on the trailing dim (…, Hkv·hd) and
+sharded over the model axis there.  Several assigned archs have Hkv (8, 2)
+smaller than the 16-wide model axis; the flat dim (Hkv·hd) is always a
+multiple of 16, and GSPMD factors the flat sharding across the (Hkv, hd)
+reshape inside the attention layer (hd-partial dots turn into psums).
+
+Cache kinds per family:
+  dense/moe/vlm : k/v (L, B, Smax, Hkv·hd); SWA archs use Smax = window
+                  (ring buffer).
+  gemma2-style  : separate "local" (ring, window) and "global" (full) stacks,
+                  one per layer pair.
+  mla           : latent c_kv (L, B, Smax, kvr) + k_rope (L, B, Smax, dr) —
+                  the MLA cache-compression win (no per-head K/V ever stored).
+  ssm           : conv_state (L, B, K-1, conv_dim) + ssm_state
+                  (L, B, H, P, N) — O(1) in sequence length.
+  hybrid        : mamba states per unit + trailing + attention k/v per shared
+                  block invocation.
+  encdec        : decoder self-attn k/v + cross-attn k/v (computed once at
+                  prefill from the encoder output).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.ssm import ssm_dims
+
+_KV_AXES = (None, "batch", None, "model")  # (layers, B, S, Hkv·hd)
+
+
+def _kv_axes(cfg):
+    return (None, "batch", None, None if cfg.replicate_kv else "model")
+
+
+def cache_spec_tree(cfg, batch: int, max_len: int) -> Dict[str, Any]:
+    """Returns {name: (shape, dtype, logical_axes)} description of the cache."""
+    hd = cfg.resolved_head_dim
+    hkv = cfg.n_kv_heads
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    out: Dict[str, Any] = {
+        "lengths": ((batch,), jnp.int32, ("batch",)),
+    }
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        if cfg.layer_pattern == "alt_local_global":
+            npairs = cfg.n_layers // 2
+            w = min(cfg.sliding_window, max_len)
+            out["k_local"] = ((npairs, batch, w, hkv * hd), dt, _kv_axes(cfg))
+            out["v_local"] = out["k_local"]
+            out["k_global"] = ((npairs, batch, max_len, hkv * hd), dt, _kv_axes(cfg))
+            out["v_global"] = out["k_global"]
+        elif cfg.attn_type == "mla":
+            l = cfg.n_layers
+            out["c_kv"] = ((l, batch, max_len, cfg.kv_lora_rank), dt,
+                           (None, "batch", None, "model"))
+            out["k_rope"] = ((l, batch, max_len, cfg.qk_rope_dim), dt,
+                             (None, "batch", None, None))
+        else:
+            smax = min(cfg.sliding_window, max_len) if cfg.sliding_window \
+                else max_len
+            if cfg.kv_quant == "int8":
+                out["k"] = ((cfg.n_layers, batch, smax, hkv * hd), jnp.int8,
+                            _kv_axes(cfg))
+                out["v"] = out["k"]
+                out["k_scale"] = ((cfg.n_layers, batch, smax, hkv),
+                                  jnp.float32, (None, "batch", None, None))
+                out["v_scale"] = out["k_scale"]
+            else:
+                out["k"] = ((cfg.n_layers, batch, smax, hkv * hd), dt,
+                            _kv_axes(cfg))
+                out["v"] = out["k"]
+    elif fam == "ssm":
+        din, nh, conv_dim = ssm_dims(cfg)
+        l = cfg.n_layers
+        out["conv"] = ((l, batch, cfg.ssm_conv - 1, conv_dim), dt,
+                       (None, "batch", None, "act_mlp"))
+        out["ssm"] = ((l, batch, nh, cfg.ssm_head_dim, cfg.ssm_state),
+                      jnp.float32, (None, "batch", "act_heads", None, None))
+    elif fam == "hybrid":
+        din, nh, conv_dim = ssm_dims(cfg)
+        u, m = cfg.hybrid_units, cfg.mamba_per_unit
+        out["conv"] = ((u, m, batch, cfg.ssm_conv - 1, conv_dim), dt,
+                       (None, None, "batch", None, "act_mlp"))
+        out["ssm"] = ((u, m, batch, nh, cfg.ssm_head_dim, cfg.ssm_state),
+                      jnp.float32,
+                      (None, None, "batch", "act_heads", None, None))
+        t = cfg.trailing_mamba
+        out["conv_tail"] = ((t, batch, cfg.ssm_conv - 1, conv_dim), dt,
+                            (None, "batch", None, "act_mlp"))
+        out["ssm_tail"] = ((t, batch, nh, cfg.ssm_head_dim, cfg.ssm_state),
+                           jnp.float32,
+                           (None, "batch", "act_heads", None, None))
+        out["k"] = ((u, batch, max_len, hkv * hd), dt, _kv_axes(cfg))
+        out["v"] = out["k"]
+    elif fam == "encdec":
+        l = cfg.n_dec_layers
+        out["k"] = ((l, batch, max_len, hkv * hd), dt, _kv_axes(cfg))
+        out["v"] = out["k"]
+        src = cfg.src_len_for_decode
+        out["k_cross"] = ((l, batch, src, hkv * hd), dt, _kv_axes(cfg))
+        out["v_cross"] = out["k_cross"]
+    else:
+        raise ValueError(fam)
+    return out
+
+
+def init_cache(cfg, batch: int, max_len: int) -> Dict[str, jax.Array]:
+    tree = cache_spec_tree(cfg, batch, max_len)
+    return {k: jnp.zeros(shape, dtype) for k, (shape, dtype, _) in tree.items()}
+
+
+def abstract_cache(cfg, batch: int, max_len: int,
+                   mesh: Optional[Mesh] = None, rules=None):
+    tree = cache_spec_tree(cfg, batch, max_len)
+
+    def mk(shape, dtype, axes):
+        if mesh is None:
+            return jax.ShapeDtypeStruct(shape, dtype)
+        from repro.distributed.sharding import divisible_spec
+        spec = divisible_spec(
+            mesh, shape,
+            [(rules or {}).get(a) if a is not None else None for a in axes])
+        return jax.ShapeDtypeStruct(shape, dtype,
+                                    sharding=NamedSharding(mesh, spec))
+    return {k: mk(*v) for k, v in tree.items()}
+
+
+def cache_shardings(cfg, batch, max_len, mesh: Mesh, rules):
+    from repro.distributed.sharding import divisible_spec
+    tree = cache_spec_tree(cfg, batch, max_len)
+    return {k: NamedSharding(
+        mesh, divisible_spec(
+            mesh, shape,
+            [rules.get(a) if a is not None else None for a in axes]))
+        for k, (shape, dtype, axes) in tree.items()}
+
+
+def cache_bytes(cfg, batch, max_len) -> int:
+    tree = cache_spec_tree(cfg, batch, max_len)
+    return int(sum(np.prod(shape) * np.dtype(dtype).itemsize
+                   for shape, dtype, _ in tree.values()))

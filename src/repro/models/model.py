@@ -1,0 +1,250 @@
+"""Top-level model API: parameter tree, train/prefill/decode forwards, and
+the ShapeDtypeStruct ``input_specs`` consumed by the multi-pod dry-run.
+
+Batch layouts per family:
+  dense/moe/ssm/hybrid : {"tokens": (B,S) int32, "labels": (B,S) int32}
+  vlm                  : + {"positions": (3,B,S) int32} (M-RoPE streams);
+                         tokens are text ids, the patch frontend is stubbed
+                         as extra embedded positions — the backbone is real.
+  encdec               : {"frames": (B,S_src,d) float} (stub frontend)
+                         + {"tokens"/"labels": (B,S_tgt)}.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeCell
+from repro.models import encdec as encdec_lib
+from repro.models.common import (NULL_CTX, ShardCtx, embed_tokens,
+                                 embedding_defs, rmsnorm, rmsnorm_def,
+                                 softmax_xent, unembed)
+from repro.models.kvcache import abstract_cache, cache_spec_tree, init_cache
+from repro.models.params import ParamDef, abstract_params, init_params
+from repro.models.transformer import backbone_defs, run_backbone
+
+
+def model_defs(cfg: ModelConfig) -> Dict[str, Any]:
+    defs: Dict[str, Any] = {
+        "embed": embedding_defs(cfg.padded_vocab, cfg.d_model,
+                                cfg.tie_embeddings),
+        "final_ln": rmsnorm_def(cfg.d_model),
+    }
+    if cfg.family == "encdec":
+        defs["backbone"] = encdec_lib.encdec_defs(cfg)
+    else:
+        defs["backbone"] = backbone_defs(cfg)
+    return defs
+
+
+def _dtype(cfg):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def _positions(cfg, batch, start, s):
+    pos = jnp.broadcast_to(start[:, None] + jnp.arange(s)[None], (batch, s))
+    return pos
+
+
+def _embed_inputs(cfg, params, batch_inputs, ctx):
+    dt = _dtype(cfg)
+    x = embed_tokens(params["embed"], batch_inputs["tokens"], dt)
+    return ctx.constrain(x, "batch", None, None)
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+def forward_train(cfg, params, batch, ctx=NULL_CTX):
+    """Returns (loss, metrics)."""
+    if cfg.family == "encdec":
+        enc_out = encdec_lib.run_encoder(cfg, params["backbone"],
+                                         batch["frames"].astype(_dtype(cfg)),
+                                         ctx)
+        b, s = batch["tokens"].shape
+        x = _embed_inputs(cfg, params, batch, ctx)
+        pos = _positions(cfg, b, jnp.zeros((b,), jnp.int32), s)
+        x, _ = encdec_lib.run_decoder(cfg, params["backbone"], x, enc_out,
+                                      mode="train", positions=pos, ctx=ctx)
+        aux = {}
+    else:
+        b, s = batch["tokens"].shape
+        x = _embed_inputs(cfg, params, batch, ctx)
+        if cfg.family == "vlm":
+            pos = batch["positions"]          # (3, B, S) M-RoPE streams
+        else:
+            pos = _positions(cfg, b, jnp.zeros((b,), jnp.int32), s)
+        x, _, aux = run_backbone(cfg, params["backbone"], x, mode="train",
+                                 positions=pos, ctx=ctx)
+
+    x = rmsnorm(x, params["final_ln"])
+    logits = unembed(params["embed"], x, tie=cfg.tie_embeddings,
+                     final_softcap=cfg.final_softcap)
+    logits = ctx.constrain(logits, "batch", None, "act_vocab")
+    loss = softmax_xent(logits, batch["labels"])
+    metrics = {"ce_loss": loss}
+    for k, v in (aux or {}).items():
+        loss = loss + v
+        metrics[k] = v
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+def _pad_cache_seq(entry, target_shape):
+    """Pad a produced prefill cache entry to the cache buffer shape."""
+    if entry.shape == tuple(target_shape):
+        return entry
+    pads = [(0, t - s) for s, t in zip(entry.shape, target_shape)]
+    return jnp.pad(entry, pads)
+
+
+def forward_prefill(cfg, params, batch, cache, ctx=NULL_CTX):
+    """Fill the cache from a full prompt.  Returns (last_logits, cache')."""
+    spec = cache_spec_tree(cfg, cache["lengths"].shape[0],
+                           _max_len_of(cfg, cache))
+    if cfg.family == "encdec":
+        enc_out = encdec_lib.run_encoder(cfg, params["backbone"],
+                                         batch["frames"].astype(_dtype(cfg)),
+                                         ctx)
+        b, s = batch["tokens"].shape
+        x = _embed_inputs(cfg, params, batch, ctx)
+        pos = _positions(cfg, b, jnp.zeros((b,), jnp.int32), s)
+        x, new_entries = encdec_lib.run_decoder(
+            cfg, params["backbone"], x, enc_out, mode="prefill",
+            positions=pos, ctx=ctx)
+    else:
+        b, s = batch["tokens"].shape
+        x = _embed_inputs(cfg, params, batch, ctx)
+        if cfg.family == "vlm":
+            pos = batch["positions"]
+        else:
+            pos = _positions(cfg, b, jnp.zeros((b,), jnp.int32), s)
+        x, new_entries, _ = run_backbone(cfg, params["backbone"], x,
+                                         mode="prefill", positions=pos,
+                                         cache=cache, ctx=ctx)
+
+    new_cache = dict(cache)
+    for k, v in new_entries.items():
+        new_cache[k] = _pad_cache_seq(v, spec[k][0]).astype(spec[k][1])
+    new_cache["lengths"] = jnp.full_like(cache["lengths"], s)
+
+    x_last = x[:, -1:]
+    x_last = rmsnorm(x_last, params["final_ln"])
+    logits = unembed(params["embed"], x_last, tie=cfg.tie_embeddings,
+                     final_softcap=cfg.final_softcap)
+    return logits[:, 0], new_cache
+
+
+def forward_decode(cfg, params, tokens, cache, ctx=NULL_CTX,
+                   positions=None):
+    """One decode step.  tokens: (B, 1).  Returns (logits (B,V), cache')."""
+    b = tokens.shape[0]
+    lengths = cache["lengths"] + 1
+    pos_scalar = cache["lengths"]                      # 0-based new position
+    if cfg.family == "vlm":
+        pos = positions if positions is not None else \
+            jnp.broadcast_to(pos_scalar[None, :, None], (3, b, 1))
+    else:
+        pos = pos_scalar[:, None]
+
+    x = embed_tokens(params["embed"], tokens, _dtype(cfg))
+    if cfg.family == "encdec":
+        x, new_entries = encdec_lib.run_decoder(
+            cfg, params["backbone"], x, None, mode="decode", positions=pos,
+            cache=cache, lengths=lengths, ctx=ctx)
+    else:
+        x, new_entries, _ = run_backbone(
+            cfg, params["backbone"], x, mode="decode", positions=pos,
+            cache=cache, lengths=lengths, ctx=ctx)
+
+    new_cache = dict(cache)
+    new_cache.update(new_entries)
+    new_cache["lengths"] = lengths
+
+    x = rmsnorm(x, params["final_ln"])
+    logits = unembed(params["embed"], x, tie=cfg.tie_embeddings,
+                     final_softcap=cfg.final_softcap)
+    return logits[:, 0], new_cache
+
+
+def _max_len_of(cfg, cache) -> int:
+    for k in ("k", "k_global", "c_kv"):
+        if k in cache:
+            return cache[k].shape[2]
+    return cfg.max_cache_len
+
+
+# ---------------------------------------------------------------------------
+# Input specs (dry-run) and concrete batch builders (smoke tests)
+# ---------------------------------------------------------------------------
+
+def _tok_sds(shape, mesh, rules, dtype=jnp.int32):
+    if mesh is None:
+        return jax.ShapeDtypeStruct(shape, dtype)
+    from repro.distributed.sharding import divisible_spec
+    spec = divisible_spec(mesh, shape,
+                          [rules["batch"]] + [None] * (len(shape) - 1))
+    return jax.ShapeDtypeStruct(shape, dtype,
+                                sharding=NamedSharding(mesh, spec))
+
+
+def input_specs(cfg: ModelConfig, cell: ShapeCell,
+                mesh: Optional[Mesh] = None, rules=None) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    rules = rules or {}
+    b, s = cell.global_batch, cell.seq_len
+    dt = _dtype(cfg)
+    if cell.kind == "train" or cell.kind == "prefill":
+        batch = {"tokens": _tok_sds((b, s), mesh, rules),
+                 "labels": _tok_sds((b, s), mesh, rules)}
+        if cfg.family == "vlm":
+            pos = jax.ShapeDtypeStruct((3, b, s), jnp.int32) if mesh is None \
+                else jax.ShapeDtypeStruct(
+                    (3, b, s), jnp.int32,
+                    sharding=NamedSharding(mesh, P(None, rules["batch"], None)))
+            batch["positions"] = pos
+        if cfg.family == "encdec":
+            # encoder (stub frontend) length: the shape cell's seq_len is
+            # the decoder context; the encoder side uses the configured
+            # source length except in training where both run at seq_len.
+            src = s if cell.kind == "train" else cfg.src_len_for_decode
+            batch["frames"] = _tok_sds((b, src, cfg.d_model), mesh, rules,
+                                       dt)
+        if cell.kind == "prefill":
+            batch.pop("labels")
+        return batch
+    # decode: one token + cache of seq_len
+    batch = {"tokens": _tok_sds((b, 1), mesh, rules)}
+    return batch
+
+
+def abstract_decode_cache(cfg, cell, mesh=None, rules=None):
+    return abstract_cache(cfg, cell.global_batch, cell.seq_len, mesh, rules)
+
+
+def make_smoke_batch(cfg, key, batch=2, seq=32) -> Dict[str, jax.Array]:
+    ks = jax.random.split(key, 3)
+    out = {"tokens": jax.random.randint(ks[0], (batch, seq), 0,
+                                        cfg.vocab_size),
+           "labels": jax.random.randint(ks[1], (batch, seq), 0,
+                                        cfg.vocab_size)}
+    if cfg.family == "vlm":
+        pos = jnp.broadcast_to(jnp.arange(seq)[None, None], (3, batch, seq))
+        out["positions"] = pos.astype(jnp.int32)
+    if cfg.family == "encdec":
+        out["frames"] = jax.random.normal(ks[2], (batch, seq, cfg.d_model),
+                                          jnp.float32)
+    return out
+
+
+def init_model(cfg, key, dtype=None):
+    return init_params(model_defs(cfg), key, dtype or _dtype(cfg))
+
+
+def abstract_model(cfg, mesh=None, rules=None, dtype=None):
+    return abstract_params(model_defs(cfg), dtype or _dtype(cfg), mesh, rules)

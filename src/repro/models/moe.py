@@ -1,0 +1,122 @@
+"""Mixture-of-Experts block: top-k routing with capacity-bounded scatter
+dispatch (MaxText-"dropping"-style, but scatter/gather instead of the
+O(N·E·C) dispatch einsum so it scales to 128 experts).
+
+Expert weights carry the ("experts" → model axis) logical sharding = expert
+parallelism under pjit: XLA partitions the (E, C, d) dispatch buffer over the
+model axis and inserts the token exchange collectives.  The explicit
+shard_map all_to_all variant is a §Perf hillclimb of the arctic train cell.
+
+Arctic-style ``dense_residual_d_ff`` adds a small dense SwiGLU MLP in
+parallel with the MoE output (Snowflake's dense+MoE hybrid).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import apply_mlp, mlp_defs
+from repro.models.params import ParamDef
+
+
+def moe_defs(cfg) -> Dict[str, ParamDef]:
+    d, e, f = cfg.d_model, cfg.n_experts, cfg.moe_d_ff
+    # experts shard over the model axis (EP); d over the FSDP axes; the ff
+    # dim carries the "moe_ff" logical axis — None under training rules
+    # ("experts" and "model" both map to the model mesh axis and a mesh axis
+    # can appear only once), mapped to the data axes under the
+    # weight-stationary serve rules (2-D expert sharding, no per-step
+    # gathers; EXPERIMENTS.md §Perf H1).
+    defs = {
+        "router": ParamDef((d, e), ("embed", None), "small"),
+        "w_gate": ParamDef((e, d, f), ("experts", "embed", "moe_ff")),
+        "w_up": ParamDef((e, d, f), ("experts", "embed", "moe_ff")),
+        "w_down": ParamDef((e, f, d), ("experts", "moe_ff", "embed")),
+    }
+    if cfg.dense_residual_d_ff:
+        defs["dense"] = mlp_defs(d, cfg.dense_residual_d_ff)
+    return defs
+
+
+def _capacity(cfg, n_tokens: int) -> int:
+    c = int(cfg.capacity_factor * cfg.experts_per_token * n_tokens
+            / cfg.n_experts)
+    return max(8, -(-c // 8) * 8)  # round up to 8 (sublane alignment)
+
+
+def apply_moe(cfg, p, x: jax.Array, ctx) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """x: (B, S, d) → (B, S, d), aux-loss dict.
+
+    Grouped per-data-shard dispatch: tokens are reshaped to (G, N/G, d)
+    where G = number of data shards, so the routing cumsum, the capacity
+    scatter and the combine gather are all *batched per shard* — XLA
+    partitions them with zero cross-data-shard communication.  The expert
+    dim of the (G, E, C, d) buffer carries the model-axis sharding (expert
+    parallelism); the only model-axis collectives are the weight FSDP
+    all-gathers and the combine reduction.  (The naive single-buffer global
+    scatter is catastrophic under SPMD — it replicates and all-reduces the
+    whole dispatch buffer; see EXPERIMENTS.md §Perf for the measured delta.)
+
+    Capacity is per data shard (standard EP semantics); overflow tokens are
+    dropped (their residual path still carries them).
+    """
+    import math
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.experts_per_token
+    g = ctx.data_shards if ctx is not None else 1
+    g = math.gcd(b, g)
+    n = b * s
+    n_loc = n // g
+    cap = _capacity(cfg, n_loc)
+    xg = x.reshape(g, n_loc, d)
+
+    logits = (xg @ p["router"]).astype(jnp.float32)          # (G, N, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, idx = jax.lax.top_k(probs, k)                      # (G, N, k)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    # load-balance aux loss (Switch-style) + router z-loss
+    me = jnp.mean(probs, axis=(0, 1))                        # (E,)
+    ce = jnp.mean(
+        jax.nn.one_hot(idx[..., 0], e, dtype=jnp.float32), axis=(0, 1))
+    aux = {
+        "load_balance": e * jnp.sum(me * ce) * cfg.aux_loss_coef,
+        "router_z": jnp.mean(
+            jax.nn.logsumexp(logits, axis=-1) ** 2) * cfg.router_z_loss,
+    }
+
+    flat_e = idx.reshape(g, n_loc * k)                       # (G, Nk)
+    onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)      # (G, Nk, E)
+    ranks = jnp.take_along_axis(
+        jnp.cumsum(onehot, axis=1), flat_e[..., None], axis=2)[..., 0] - 1
+    keep = ranks < cap                                       # (G, Nk)
+    dest = jnp.where(keep, flat_e * cap + ranks, e * cap)
+
+    x_rep = jnp.repeat(xg, k, axis=1)                        # (G, Nk, d)
+    # vmap'd scatter: G stays a *batch* dim of the HLO scatter, so SPMD
+    # partitions it on the data axes (an explicit (g, dest) index pair
+    # defeats partitioning and replicates the updates — 100+GB/layer).
+    buf = jax.vmap(lambda d_, u: jnp.zeros((e * cap + 1, d), x.dtype)
+                   .at[d_].add(u))(dest, x_rep)
+    h = buf[:, : e * cap].reshape(g, e, cap, d)
+    if ctx is not None and g == ctx.data_shards:
+        h = ctx.constrain(h, "batch", "act_experts", None, None)
+
+    # expert FFN (SwiGLU), batched over (shard, expert)
+    hg = jnp.einsum("gecd,edf->gecf", h, p["w_gate"])
+    hu = jnp.einsum("gecd,edf->gecf", h, p["w_up"])
+    ho = jnp.einsum("gecf,efd->gecd", jax.nn.silu(hg) * hu, p["w_down"])
+    if ctx is not None and g == ctx.data_shards:
+        ho = ctx.constrain(ho, "batch", "act_experts", None, None)
+
+    out_buf = jnp.concatenate(
+        [ho.reshape(g, e * cap, d), jnp.zeros((g, 1, d), ho.dtype)], axis=1)
+    y = jax.vmap(lambda ob, d_: jnp.take(ob, d_, axis=0))(out_buf, dest)
+    y = y * (gate.reshape(g, -1, 1) * keep[..., None]).astype(y.dtype)
+    y = y.reshape(g, n_loc, k, d).sum(axis=2).reshape(b, s, d)
+
+    if cfg.dense_residual_d_ff:
+        y = y + apply_mlp(p["dense"], x)
+    return y, aux

@@ -1,0 +1,194 @@
+"""Mamba2 / SSD (state-space duality) block — arXiv:2405.21060.
+
+Training/prefill uses the chunked SSD algorithm: the sequence is split into
+chunks of ``ssm_chunk``; within a chunk the quadratic "attention-like" form
+runs on the MXU, across chunks a linear recurrence carries the
+(heads × head_dim × state) SSM state.  Decode is the O(1) recurrent update.
+
+Layer structure (Mamba2):
+  in_proj → [z | xBC | dt],  causal depthwise conv over xBC, SiLU,
+  SSD(x·dt, exp(dt·A), B, C) + D·x,  gated RMSNorm(·, z), out_proj.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.common import gated_rmsnorm, rmsnorm_def
+from repro.models.params import ParamDef
+
+
+def ssm_dims(cfg):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    n_heads = d_inner // cfg.ssm_head_dim
+    conv_dim = d_inner + 2 * cfg.ssm_ngroups * cfg.ssm_state
+    return d_inner, n_heads, conv_dim
+
+
+def ssm_defs(cfg) -> Dict[str, ParamDef]:
+    d = cfg.d_model
+    din, nh, conv_dim = ssm_dims(cfg)
+    gn = cfg.ssm_ngroups * cfg.ssm_state
+    return {
+        "in_proj": ParamDef((d, din + conv_dim + nh), ("embed", "model")),
+        "conv_w": ParamDef((cfg.ssm_conv, conv_dim), (None, "model")),
+        "conv_b": ParamDef((conv_dim,), ("model",), "zeros"),
+        "a_log": ParamDef((nh,), ("model",), "zeros"),
+        "d_skip": ParamDef((nh,), ("model",), "ones"),
+        "dt_bias": ParamDef((nh,), ("model",), "zeros"),
+        "norm": rmsnorm_def(din),
+        "out_proj": ParamDef((din, d), ("model", "embed")),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 state: Optional[jax.Array] = None):
+    """Depthwise causal conv1d.  x: (B,S,C); w: (K,C); state: (B,K-1,C).
+
+    Returns (y (B,S,C), new_state (B,K-1,C)).
+    """
+    k = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xx = jnp.concatenate([state, x], axis=1)          # (B, S+K-1, C)
+    y = sum(xx[:, i:i + x.shape[1]] * w[i][None, None] for i in range(k))
+    new_state = xx[:, -(k - 1):] if k > 1 else state
+    return y + b[None, None], new_state
+
+
+def _segsum(a: jax.Array) -> jax.Array:
+    """Lower-triangular pairwise cumulative sums: out[..., i, j] = sum over
+    (j, i] of a — the log-domain decay matrix of SSD.  a: (..., Q)."""
+    q = a.shape[-1]
+    cum = jnp.cumsum(a, axis=-1)
+    diff = cum[..., :, None] - cum[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x, dt, a_neg, bmat, cmat, *, chunk: int,
+                h0: Optional[jax.Array] = None):
+    """Chunked SSD scan.
+
+    x:    (B, S, H, P)   inputs (already includes dt factor via x*dt)
+    dt:   (B, S, H)      discretisation steps (softplus'd)
+    a_neg:(H,)           negative continuous-time A (so dA = dt * a_neg ≤ 0)
+    bmat: (B, S, G, N)   input mixers (broadcast G→H)
+    cmat: (B, S, G, N)   output mixers
+    Returns (y (B,S,H,P), h_final (B,H,P,N)).
+    """
+    b, s0, h, p = x.shape
+    g, n = bmat.shape[2], bmat.shape[3]
+    # pad sequence to a chunk multiple; padded steps carry dt=0 so the decay
+    # is exp(0)=1 and the state contribution dt·B⊗x is 0 — state-neutral.
+    s = -(-s0 // chunk) * chunk
+    if s != s0:
+        pad = ((0, 0), (0, s - s0), (0, 0), (0, 0))
+        x = jnp.pad(x, pad)
+        bmat = jnp.pad(bmat, pad)
+        cmat = jnp.pad(cmat, pad)
+        dt = jnp.pad(dt, ((0, 0), (0, s - s0), (0, 0)))
+    nc = s // chunk
+    rep = h // g
+
+    def to_chunks(t):
+        return t.reshape(b, nc, chunk, *t.shape[2:])
+
+    xc = to_chunks(x.astype(jnp.float32))
+    dac = to_chunks((dt * a_neg[None, None]).astype(jnp.float32))  # (B,nc,Q,H)
+    bc = to_chunks(bmat.astype(jnp.float32))
+    cc = to_chunks(cmat.astype(jnp.float32))
+    bc = jnp.repeat(bc, rep, axis=3)    # (B,nc,Q,H,N)
+    cc = jnp.repeat(cc, rep, axis=3)
+
+    da_h = jnp.moveaxis(dac, -1, 2)      # (B,nc,H,Q)
+    seg = jnp.exp(_segsum(da_h))         # (B,nc,H,Q,Q) intra-chunk decay
+    cum = jnp.cumsum(da_h, axis=-1)      # (B,nc,H,Q)
+    total = cum[..., -1]                 # (B,nc,H)
+
+    # intra-chunk (quadratic, MXU): y_ij = C_i·B_j seg_ij x_j
+    scores = jnp.einsum("bcqhn,bckhn->bchqk", cc, bc) * seg.transpose(
+        0, 1, 2, 3, 4)                   # (B,nc,H,Q,Q)
+    y_intra = jnp.einsum("bchqk,bckhp->bcqhp", scores, xc)
+
+    # chunk states: S_c = sum_j exp(total - cum_j) B_j ⊗ x_j
+    decay_tail = jnp.exp(total[..., None] - cum)          # (B,nc,H,Q)
+    states = jnp.einsum("bchq,bcqhn,bcqhp->bchpn",
+                        decay_tail, bc, xc)               # (B,nc,H,P,N)
+
+    # inter-chunk recurrence
+    if h0 is None:
+        h0 = jnp.zeros((b, h, p, n), jnp.float32)
+
+    def chunk_scan(hprev, inp):
+        st, tot = inp                                     # (B,H,P,N),(B,H)
+        hnew = hprev * jnp.exp(tot)[..., None, None] + st
+        return hnew, hprev
+
+    states_t = jnp.moveaxis(states, 1, 0)                 # (nc,B,H,P,N)
+    total_t = jnp.moveaxis(total, 1, 0)                   # (nc,B,H)
+    h_final, h_prevs = lax.scan(chunk_scan, h0, (states_t, total_t))
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)                 # (B,nc,H,P,N)
+
+    # inter-chunk output: y_i += C_i · h_prev * exp(cum_i)
+    y_inter = jnp.einsum("bcqhn,bchpn->bcqhp", cc, h_prevs) * \
+        jnp.exp(jnp.moveaxis(cum, 2, -1))[..., None]      # (B,nc,Q,H,1)
+
+    y = (y_intra + y_inter).reshape(b, s, h, p)[:, :s0]
+    return y, h_final
+
+
+def apply_ssm(cfg, p, x: jax.Array, *,
+              conv_state=None, ssm_state=None, mode: str = "train"):
+    """Mamba2 block.  x: (B,S,d).
+
+    mode "train"/"prefill": chunked SSD over the full sequence.
+    mode "decode": S == 1 recurrent update using (conv_state, ssm_state).
+    Returns (y, (conv_state', ssm_state')).
+    """
+    b, s, d = x.shape
+    din, nh, conv_dim = ssm_dims(cfg)
+    g, n = cfg.ssm_ngroups, cfg.ssm_state
+    hd = cfg.ssm_head_dim
+
+    zxbcdt = x @ p["in_proj"]
+    z = zxbcdt[..., :din]
+    xbc = zxbcdt[..., din:din + conv_dim]
+    dt_raw = zxbcdt[..., din + conv_dim:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) +
+                         p["dt_bias"].astype(jnp.float32))  # (B,S,H)
+    a_neg = -jnp.exp(p["a_log"].astype(jnp.float32))        # (H,)
+
+    xbc, conv_state = _causal_conv(xbc, p["conv_w"], p["conv_b"], conv_state)
+    xbc = jax.nn.silu(xbc)
+    xs = xbc[..., :din].reshape(b, s, nh, hd)
+    bmat = xbc[..., din:din + g * n].reshape(b, s, g, n)
+    cmat = xbc[..., din + g * n:].reshape(b, s, g, n)
+
+    if mode == "decode":
+        assert s == 1
+        da = jnp.exp(dt[:, 0] * a_neg[None])                # (B,H)
+        xdt = xs[:, 0].astype(jnp.float32) * dt[:, 0][..., None]  # (B,H,P)
+        bmat1 = jnp.repeat(bmat[:, 0], nh // g, axis=1)     # (B,H,N)
+        cmat1 = jnp.repeat(cmat[:, 0], nh // g, axis=1)
+        if ssm_state is None:
+            ssm_state = jnp.zeros((b, nh, hd, n), jnp.float32)
+        ssm_state = ssm_state * da[..., None, None] + \
+            jnp.einsum("bhp,bhn->bhpn", xdt, bmat1)
+        y = jnp.einsum("bhpn,bhn->bhp", ssm_state, cmat1)
+        y = y + p["d_skip"].astype(jnp.float32)[None, :, None] * \
+            xs[:, 0].astype(jnp.float32)
+        y = y.reshape(b, 1, din).astype(x.dtype)
+    else:
+        xdt = xs.astype(jnp.float32) * dt[..., None]
+        y, ssm_state = ssd_chunked(xdt, dt, a_neg, bmat, cmat,
+                                   chunk=min(cfg.ssm_chunk, s), h0=ssm_state)
+        y = y + p["d_skip"].astype(jnp.float32)[None, None, :, None] * \
+            xs.astype(jnp.float32)
+        y = y.reshape(b, s, din).astype(x.dtype)
+
+    y = gated_rmsnorm(y, z, p["norm"])
+    return y @ p["out_proj"], (conv_state, ssm_state)

@@ -1,0 +1,408 @@
+"""Decoder-only transformer assembly for the dense / moe / vlm / ssm / hybrid
+families: scan-over-layers (stacked params — keeps HLO size O(1) in depth),
+optional remat, KV-cache read/write per mode.
+
+Every family funnels through ``run_backbone(cfg, params, x, ...)`` which
+returns final hidden states + updated cache + aux losses; embedding/unembed
+and the loss live in model.py.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import attention as attn_lib
+from repro.models.common import (NULL_CTX, ShardCtx, mlp_defs, apply_mlp,
+                                 rmsnorm, rmsnorm_def, stacked)
+from repro.models.moe import apply_moe, moe_defs
+from repro.models.params import ParamDef
+from repro.models.ssm import apply_ssm, ssm_defs
+
+ZERO_AUX = {"load_balance": jnp.float32(0.0), "router_z": jnp.float32(0.0)}
+
+
+def _remat(fn, cfg):
+    """Wrap a scan body with remat + an activation barrier.
+
+    The optimization_barrier on the carried activations stops XLA from
+    hoisting downstream fp32 converts into the saved residual stack (which
+    would store an f32 copy of every layer's input — 2× activation memory;
+    observed on the CPU backend, EXPERIMENTS.md §Dry-run).
+    """
+    def barriered(carry, xs):
+        # barrier on the INPUT side: the residual stack saves body inputs,
+        # and an opaque consumer forces XLA to store them in their native
+        # dtype (bf16) instead of a pre-converted f32 copy.
+        carry = jax.tree_util.tree_map(
+            lambda t: lax.optimization_barrier(t) if t.ndim >= 3 else t,
+            carry)
+        return fn(carry, xs)
+
+    if cfg.remat == "none":
+        return barriered
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            barriered,
+            policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+    return jax.checkpoint(barriered)
+
+
+# ---------------------------------------------------------------------------
+# Dense / MoE / VLM block
+# ---------------------------------------------------------------------------
+
+def dense_block_defs(cfg) -> Dict[str, Any]:
+    d = cfg.d_model
+    attn = attn_lib.mla_defs(cfg) if cfg.attn_type == "mla" \
+        else attn_lib.gqa_defs(cfg)
+    ffn = moe_defs(cfg) if cfg.n_experts else mlp_defs(d, cfg.d_ff)
+    defs = {"ln1": rmsnorm_def(d), "attn": attn,
+            "ln2": rmsnorm_def(d), "ffn": ffn}
+    if cfg.post_norm:
+        defs["post1"] = rmsnorm_def(d)
+        defs["post2"] = rmsnorm_def(d)
+    return defs
+
+
+def apply_dense_block(cfg, p, x, *, positions, mode, window=0,
+                      kv=None, lengths=None, ctx=NULL_CTX, q_offset=0):
+    """One pre-norm block.  Returns (x', new_kv, aux).
+
+    ``kv``: decode-mode cache slice — (k_flat, v_flat) for GQA or
+    (c_kv, k_rope) for MLA, shapes (B, Smax, ·).
+    In prefill mode new_kv holds the produced keys/values (trimmed to the
+    ring window if SWA); in train mode new_kv is None.
+    """
+    b, s, d = x.shape
+    h = rmsnorm(x, p["ln1"])
+    aux = dict(ZERO_AUX)
+    hkv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+
+    if cfg.attn_type == "mla":
+        if mode == "decode":
+            o, ckv, krope = attn_lib.mla_decode(
+                cfg, p["attn"], h, positions, kv[0], kv[1], lengths)
+            new_kv = (ckv, krope)
+        else:
+            o, (ckv, krope) = attn_lib.mla_attend(
+                cfg, p["attn"], h, positions, q_offset=q_offset)
+            new_kv = None if mode == "train" else (ckv, krope)
+    else:
+        if mode == "decode" and cfg.kv_quant == "int8":
+            kq8 = kv[0].reshape(b, -1, hkv, hd)
+            vq8 = kv[1].reshape(b, -1, hkv, hd)
+            o, kq8, vq8, ks, vs = attn_lib.gqa_decode_quant(
+                cfg, p["attn"], h, positions, kq8, vq8, kv[2], kv[3],
+                lengths, window=window)
+            new_kv = (kq8.reshape(b, -1, hkv * hd),
+                      vq8.reshape(b, -1, hkv * hd), ks, vs)
+        elif mode == "decode":
+            k4 = kv[0].reshape(b, -1, hkv, hd)
+            v4 = kv[1].reshape(b, -1, hkv, hd)
+            o, k4, v4 = attn_lib.gqa_decode(
+                cfg, p["attn"], h, positions, k4, v4, lengths, window=window)
+            new_kv = (k4.reshape(b, -1, hkv * hd), v4.reshape(b, -1, hkv * hd))
+        else:
+            o, (k4, v4) = attn_lib.gqa_attend(
+                cfg, p["attn"], h, positions, window=window,
+                q_offset=q_offset)
+            if mode == "train":
+                new_kv = None
+            else:
+                smax = min(window, s) if window else s
+                k_keep, v_keep = k4[:, -smax:], v4[:, -smax:]
+                if window and s > smax:
+                    # ring-buffer semantics: token t lives at slot t % smax,
+                    # so the kept tail must be rolled into slot order.
+                    shift = s % smax
+                    k_keep = jnp.roll(k_keep, shift, axis=1)
+                    v_keep = jnp.roll(v_keep, shift, axis=1)
+                if cfg.kv_quant == "int8":
+                    kq8, ks = attn_lib.quantize_kv(k_keep)
+                    vq8, vs = attn_lib.quantize_kv(v_keep)
+                    new_kv = (kq8.reshape(b, smax, hkv * hd),
+                              vq8.reshape(b, smax, hkv * hd), ks, vs)
+                else:
+                    new_kv = (k_keep.reshape(b, smax, hkv * hd),
+                              v_keep.reshape(b, smax, hkv * hd))
+
+    if cfg.post_norm:
+        o = rmsnorm(o, p["post1"])
+    x = x + o
+    x = ctx.constrain(x, "batch", None, None)
+
+    h = rmsnorm(x, p["ln2"])
+    if cfg.n_experts:
+        f, aux = apply_moe(cfg, p["ffn"], h, ctx)
+    else:
+        f = apply_mlp(p["ffn"], h)
+    if cfg.post_norm:
+        f = rmsnorm(f, p["post2"])
+    x = x + f
+    x = ctx.constrain(x, "batch", None, None)
+    return x, new_kv, aux
+
+
+# ---------------------------------------------------------------------------
+# SSM (mamba2) block
+# ---------------------------------------------------------------------------
+
+def ssm_block_defs(cfg) -> Dict[str, Any]:
+    return {"ln": rmsnorm_def(cfg.d_model), "ssm": ssm_defs(cfg)}
+
+
+def apply_ssm_block(cfg, p, x, *, mode, conv_state=None, ssm_state=None,
+                    ctx=NULL_CTX):
+    h = rmsnorm(x, p["ln"])
+    y, (conv_state, ssm_state) = apply_ssm(
+        cfg, p["ssm"], h, conv_state=conv_state, ssm_state=ssm_state,
+        mode=mode)
+    x = ctx.constrain(x + y, "batch", None, None)
+    return x, conv_state, ssm_state
+
+
+# ---------------------------------------------------------------------------
+# Backbone stacks
+# ---------------------------------------------------------------------------
+
+def backbone_defs(cfg) -> Dict[str, Any]:
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        if cfg.layer_pattern == "alt_local_global":
+            pair = {"local": dense_block_defs(cfg),
+                    "global": dense_block_defs(cfg)}
+            return {"pairs": stacked(pair, cfg.n_layers // 2)}
+        return {"layers": stacked(dense_block_defs(cfg), cfg.n_layers)}
+    if fam == "ssm":
+        return {"layers": stacked(ssm_block_defs(cfg), cfg.n_layers)}
+    if fam == "hybrid":
+        shared = {"ln1": rmsnorm_def(cfg.d_model),
+                  "attn": attn_lib.gqa_defs(cfg),
+                  "ln2": rmsnorm_def(cfg.d_model),
+                  "ffn": mlp_defs(cfg.d_model, cfg.d_ff)}
+        r = cfg.shared_lora_rank
+        d, h, hd = cfg.d_model, cfg.n_heads, cfg.resolved_head_dim
+        lora = {
+            "a_q": ParamDef((d, r), ("embed", None), "small"),
+            "b_q": ParamDef((r, h * hd), (None, "model"), "zeros"),
+            "a_k": ParamDef((d, r), ("embed", None), "small"),
+            "b_k": ParamDef((r, cfg.n_kv_heads * hd), (None, "model"), "zeros"),
+            "a_v": ParamDef((d, r), ("embed", None), "small"),
+            "b_v": ParamDef((r, cfg.n_kv_heads * hd), (None, "model"), "zeros"),
+        }
+        return {
+            "units": stacked(
+                {"mamba": stacked(ssm_block_defs(cfg), cfg.mamba_per_unit,
+                                  "layers"),
+                 "lora": lora}, cfg.hybrid_units, "units"),
+            "shared": shared,
+            "tail": stacked(ssm_block_defs(cfg), cfg.trailing_mamba),
+        }
+    raise ValueError(fam)
+
+
+def _shared_attn_params(shared, lora):
+    """Zamba2: shared transformer block + per-invocation LoRA deltas on QKV."""
+    p = dict(shared)
+    p = {**shared}
+    attn = dict(shared["attn"])
+    attn["wq"] = attn["wq"] + lora["a_q"] @ lora["b_q"]
+    attn["wk"] = attn["wk"] + lora["a_k"] @ lora["b_k"]
+    attn["wv"] = attn["wv"] + lora["a_v"] @ lora["b_v"]
+    p["attn"] = attn
+    return p
+
+
+def run_backbone(cfg, params, x, *, mode, positions, cache=None,
+                 lengths=None, ctx=NULL_CTX, q_offset=0):
+    """Run all layers.  x: (B, S, d) embedded inputs.
+
+    Returns (hidden, new_cache_entries, aux) where new_cache_entries is a
+    dict matching the kvcache layout (without "lengths").
+    """
+    fam = cfg.family
+    aux_sum = dict(ZERO_AUX)
+    new_cache: Dict[str, jax.Array] = {}
+
+    if fam in ("dense", "moe", "vlm") and cfg.layer_pattern != "alt_local_global":
+        window = cfg.sliding_window if cfg.layer_pattern == "swa" else 0
+
+        def body(carry, xs):
+            x, aux = carry
+            if mode == "decode":
+                p, *kv_in = xs
+                x, kv, a = apply_dense_block(
+                    cfg, p, x, positions=positions, mode=mode, window=window,
+                    kv=tuple(kv_in), lengths=lengths, ctx=ctx)
+            else:
+                p = xs
+                x, kv, a = apply_dense_block(
+                    cfg, p, x, positions=positions, mode=mode, window=window,
+                    ctx=ctx, q_offset=q_offset)
+            aux = {k2: aux[k2] + a[k2] for k2 in aux}
+            return (x, aux), kv
+
+        if cfg.attn_type == "mla":
+            names = ("c_kv", "k_rope")
+        elif cfg.kv_quant == "int8":
+            names = ("k", "v", "k_scale", "v_scale")
+        else:
+            names = ("k", "v")
+        if mode == "decode":
+            xs = (params["layers"],) + tuple(cache[n] for n in names)
+        else:
+            xs = params["layers"]
+        (x, aux_sum), kvs = lax.scan(_remat(body, cfg), (x, aux_sum), xs)
+        if mode != "train":
+            new_cache = {n: kvs[i] for i, n in enumerate(names)}
+
+    elif fam in ("dense", "moe", "vlm"):
+        # gemma2-style local/global pairs
+        w = cfg.sliding_window
+
+        def body(carry, xs):
+            x, aux = carry
+            if mode == "decode":
+                p, kl, vl, kg, vg = xs
+                x, kv_l, a1 = apply_dense_block(
+                    cfg, p["local"], x, positions=positions, mode=mode,
+                    window=w, kv=(kl, vl), lengths=lengths, ctx=ctx)
+                x, kv_g, a2 = apply_dense_block(
+                    cfg, p["global"], x, positions=positions, mode=mode,
+                    window=0, kv=(kg, vg), lengths=lengths, ctx=ctx)
+            else:
+                p = xs
+                x, kv_l, a1 = apply_dense_block(
+                    cfg, p["local"], x, positions=positions, mode=mode,
+                    window=w, ctx=ctx, q_offset=q_offset)
+                x, kv_g, a2 = apply_dense_block(
+                    cfg, p["global"], x, positions=positions, mode=mode,
+                    window=0, ctx=ctx, q_offset=q_offset)
+            aux = {k2: aux[k2] + a1[k2] + a2[k2] for k2 in aux}
+            ys = (kv_l, kv_g) if mode != "train" else None
+            return (x, aux), ys
+
+        if mode == "decode":
+            xs = (params["pairs"], cache["k_local"], cache["v_local"],
+                  cache["k_global"], cache["v_global"])
+        else:
+            xs = params["pairs"]
+        (x, aux_sum), ys = lax.scan(_remat(body, cfg), (x, aux_sum), xs)
+        if mode != "train":
+            (kl, vl), (kg, vg) = ys
+            new_cache = {"k_local": kl, "v_local": vl,
+                         "k_global": kg, "v_global": vg}
+
+    elif fam == "ssm":
+        def body(carry, xs):
+            x = carry
+            if mode == "train":
+                p = xs
+                x, _, _ = apply_ssm_block(cfg, p, x, mode=mode, ctx=ctx)
+                return x, None
+            p, cs, ss = xs
+            x, cs, ss = apply_ssm_block(cfg, p, x, mode=mode, conv_state=cs,
+                                        ssm_state=ss, ctx=ctx)
+            return x, (cs, ss)
+
+        if mode == "train":
+            x, _ = lax.scan(_remat(body, cfg), x, params["layers"])
+        else:
+            x, ys = lax.scan(_remat(body, cfg), x,
+                             (params["layers"], cache["conv"], cache["ssm"]))
+            new_cache = {"conv": ys[0], "ssm": ys[1]}
+
+    elif fam == "hybrid":
+        shared = params["shared"]
+
+        def unit_body(carry, xs):
+            x, aux = carry
+            if mode == "train":
+                up = xs
+            elif mode == "prefill":
+                up, cs_u, ss_u = xs
+            else:
+                up, cs_u, ss_u, k_u, v_u = xs
+
+            def mamba_body(xc, m_xs):
+                if mode == "train":
+                    mp = m_xs
+                    xc, _, _ = apply_ssm_block(cfg, mp, xc, mode=mode, ctx=ctx)
+                    return xc, None
+                mp, cs, ss = m_xs
+                xc, cs, ss = apply_ssm_block(cfg, mp, xc, mode=mode,
+                                             conv_state=cs, ssm_state=ss,
+                                             ctx=ctx)
+                return xc, (cs, ss)
+
+            if mode == "train":
+                x, _ = lax.scan(mamba_body, x, up["mamba"])
+                m_ys = None
+            else:
+                x, m_ys = lax.scan(mamba_body, x, (up["mamba"], cs_u, ss_u))
+
+            sp = _shared_attn_params(shared, up["lora"])
+            b, s, _ = x.shape
+            hkv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+            h = rmsnorm(x, sp["ln1"])
+            if mode == "decode":
+                k4 = k_u.reshape(b, -1, hkv, hd)
+                v4 = v_u.reshape(b, -1, hkv, hd)
+                o, k4, v4 = attn_lib.gqa_decode(
+                    cfg, sp["attn"], h, positions, k4, v4, lengths)
+                kv = (k4.reshape(b, -1, hkv * hd),
+                      v4.reshape(b, -1, hkv * hd))
+            else:
+                o, (k4, v4) = attn_lib.gqa_attend(
+                    cfg, sp["attn"], h, positions, q_offset=q_offset)
+                kv = None if mode == "train" else (
+                    k4.reshape(b, s, hkv * hd), v4.reshape(b, s, hkv * hd))
+            x = ctx.constrain(x + o, "batch", None, None)
+            x = x + apply_mlp(sp["ffn"], rmsnorm(x, sp["ln2"]))
+            x = ctx.constrain(x, "batch", None, None)
+            if mode == "train":
+                return (x, aux), None
+            return (x, aux), (m_ys, kv)
+
+        if mode == "train":
+            xs = params["units"]
+        elif mode == "prefill":
+            xs = (params["units"],
+                  jnp.zeros_like(cache["conv"]), jnp.zeros_like(cache["ssm"]))
+        else:
+            xs = (params["units"], cache["conv"], cache["ssm"],
+                  cache["k"], cache["v"])
+        (x, aux_sum), ys = lax.scan(_remat(unit_body, cfg), (x, aux_sum), xs)
+        if mode != "train":
+            m_ys, kv = ys
+            new_cache.update({"conv": m_ys[0], "ssm": m_ys[1],
+                              "k": kv[0], "v": kv[1]})
+
+        def tail_body(xc, m_xs):
+            if mode == "train":
+                xc, _, _ = apply_ssm_block(cfg, m_xs, xc, mode=mode, ctx=ctx)
+                return xc, None
+            mp, cs, ss = m_xs
+            xc, cs, ss = apply_ssm_block(cfg, mp, xc, mode=mode,
+                                         conv_state=cs, ssm_state=ss, ctx=ctx)
+            return xc, (cs, ss)
+
+        if mode == "train":
+            x, _ = lax.scan(_remat(tail_body, cfg), x, params["tail"])
+        else:
+            if mode == "prefill":
+                tail_cs = (jnp.zeros_like(cache["conv_tail"]),
+                           jnp.zeros_like(cache["ssm_tail"]))
+            else:
+                tail_cs = (cache["conv_tail"], cache["ssm_tail"])
+            x, t_ys = lax.scan(_remat(tail_body, cfg), x,
+                               (params["tail"],) + tail_cs)
+            new_cache.update({"conv_tail": t_ys[0], "ssm_tail": t_ys[1]})
+    else:
+        raise ValueError(fam)
+
+    return x, new_cache, aux_sum

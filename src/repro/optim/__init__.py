@@ -1,0 +1,16 @@
+"""repro.optim — optimizers (no external deps), schedules, clipping.
+
+AdamW for ≤100B models; Adafactor (factored second moment) for the giant
+MoEs where AdamW state does not fit one pod (DESIGN.md §7).  Optimizer
+states inherit the parameters' (FSDP × TP) shardings — ZeRO-style state
+sharding comes for free.
+"""
+from repro.optim.adafactor import adafactor_init, adafactor_update
+from repro.optim.adamw import adamw_init, adamw_update
+from repro.optim.api import make_optimizer
+from repro.optim.schedule import cosine_schedule
+
+__all__ = [
+    "adafactor_init", "adafactor_update", "adamw_init", "adamw_update",
+    "cosine_schedule", "make_optimizer",
+]

@@ -1,0 +1,69 @@
+"""Adafactor (Shazeer & Stern 2018) — factored second moment, no first
+moment: ~4 extra bytes/param (fp32 master) + O(rows+cols) statistics.
+
+Used by the arctic-480b / giant-MoE configs where AdamW state exceeds
+single-pod HBM (DESIGN.md §7).  Factoring applies to the trailing two dims
+of ≥2-D parameters; 1-D parameters fall back to full second moment.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+
+def _factored(shape) -> bool:
+    return len(shape) >= 2
+
+
+def adafactor_init(params) -> Dict[str, Any]:
+    def stat(p):
+        if _factored(p.shape):
+            return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+    return {
+        "stats": jax.tree_util.tree_map(stat, params),
+        "master": jax.tree_util.tree_map(
+            lambda x: jnp.array(x, dtype=jnp.float32, copy=True), params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def adafactor_update(grads, state, params, *, lr, decay=0.8, eps=1e-30,
+                     clip_threshold=1.0, weight_decay=0.0):
+    count = state["count"] + 1
+    cf = count.astype(jnp.float32)
+    beta2 = 1.0 - cf ** (-decay)
+
+    def upd(g, st, master):
+        g = g.astype(jnp.float32)
+        g2 = g * g + eps
+        if _factored(g.shape):
+            vr = beta2 * st["vr"] + (1 - beta2) * jnp.mean(g2, axis=-1)
+            vc = beta2 * st["vc"] + (1 - beta2) * jnp.mean(g2, axis=-2)
+            denom = jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), eps)
+            v_hat = (vr[..., None] / denom[..., None]) * vc[..., None, :]
+            update = g / jnp.sqrt(v_hat + eps)
+            new_st = {"vr": vr, "vc": vc}
+        else:
+            v = beta2 * st["v"] + (1 - beta2) * g2
+            update = g / jnp.sqrt(v + eps)
+            new_st = {"v": v}
+        # update clipping by RMS
+        rms = jnp.sqrt(jnp.mean(update * update) + eps)
+        update = update / jnp.maximum(1.0, rms / clip_threshold)
+        master = master - lr * (update + weight_decay * master)
+        return new_st, master
+
+    leaves_g, treedef = jax.tree_util.tree_flatten(grads)
+    leaves_s = treedef.flatten_up_to(state["stats"])
+    leaves_m = treedef.flatten_up_to(state["master"])
+    out = [upd(g, s, m) for g, s, m in zip(leaves_g, leaves_s, leaves_m)]
+    new_stats = treedef.unflatten([o[0] for o in out])
+    new_master = treedef.unflatten([o[1] for o in out])
+    new_params = jax.tree_util.tree_map(
+        lambda ma, p: ma.astype(p.dtype), new_master, params)
+    return new_params, {"stats": new_stats, "master": new_master,
+                        "count": count}

@@ -1,0 +1,55 @@
+"""AdamW with decoupled weight decay, fp32 master copies and moments.
+
+State pytree mirrors the parameter tree:
+  {"m": fp32, "v": fp32, "master": fp32, "count": scalar}
+bf16 params are re-quantised from the fp32 master each step (standard
+mixed-precision training).  All state leaves share the parameter's sharding,
+so with FSDP'd parameters this is ZeRO-sharded automatically.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+
+def adamw_init(params) -> Dict[str, Any]:
+    # master copies must be distinct buffers even for fp32 params (donation
+    # of params + opt_state would otherwise alias the same buffer).
+    f32 = lambda t: jax.tree_util.tree_map(
+        lambda x: jnp.array(x, dtype=jnp.float32, copy=True), t)
+    zeros = jax.tree_util.tree_map(
+        lambda x: jnp.zeros(x.shape, jnp.float32), params)
+    return {"m": zeros, "v": jax.tree_util.tree_map(jnp.copy, zeros),
+            "master": f32(params), "count": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(grads, state, params, *, lr, b1=0.9, b2=0.95, eps=1e-8,
+                 weight_decay=0.1):
+    count = state["count"] + 1
+    cf = count.astype(jnp.float32)
+    bc1 = 1.0 - b1 ** cf
+    bc2 = 1.0 - b2 ** cf
+
+    def upd(g, m, v, master):
+        g = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        step = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+        master = master - lr * (step + weight_decay * master)
+        return m, v, master
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    flat_ma = treedef.flatten_up_to(state["master"])
+    out = [upd(g, m, v, ma) for g, m, v, ma in
+           zip(flat_g, flat_m, flat_v, flat_ma)]
+    new_m = treedef.unflatten([o[0] for o in out])
+    new_v = treedef.unflatten([o[1] for o in out])
+    new_master = treedef.unflatten([o[2] for o in out])
+    new_params = jax.tree_util.tree_map(
+        lambda ma, p: ma.astype(p.dtype), new_master, params)
+    return new_params, {"m": new_m, "v": new_v, "master": new_master,
+                        "count": count}

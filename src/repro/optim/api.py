@@ -1,0 +1,18 @@
+"""Optimizer factory keyed by ModelConfig.optimizer."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Tuple
+
+from repro.optim.adafactor import adafactor_init, adafactor_update
+from repro.optim.adamw import adamw_init, adamw_update
+
+
+def make_optimizer(kind: str) -> Tuple[Callable, Callable]:
+    """Returns (init_fn(params) -> state, update_fn(grads, state, params,
+    lr=...) -> (params', state'))."""
+    if kind == "adamw":
+        return adamw_init, adamw_update
+    if kind == "adafactor":
+        return adafactor_init, adafactor_update
+    raise ValueError(f"unknown optimizer {kind!r}")

@@ -1,0 +1,21 @@
+"""Shared fixtures.  NOTE: no XLA device-count flags here by design — smoke
+tests and benches must see the single real CPU device; only the dry-run
+(repro.launch.dryrun) forces 512 host devices, and the distributed-solver
+tests spawn subprocesses with their own flags."""
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+def make_system(rng, obs, nvars, noise=0.0, dtype=np.float32):
+    """Random consistent (or noisy) linear system."""
+    x = rng.normal(size=(obs, nvars)).astype(dtype)
+    a = rng.normal(size=(nvars,)).astype(dtype)
+    y = x @ a
+    if noise:
+        y = y + noise * rng.normal(size=obs).astype(dtype)
+    return x, y, a

@@ -1,0 +1,150 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps + hypothesis.
+
+All kernels run in interpret mode on CPU (same kernel body Python-executed);
+BlockSpecs/grid layouts are identical to the TPU path.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.types import column_norms_sq, safe_inv
+from repro.kernels import (bakp_sweep, block_update, cd_sweep,
+                           score_features, solvebakp_kernel)
+from repro.kernels.ref import (ref_bakp_sweep, ref_block_update,
+                               ref_cd_sweep, ref_score_features)
+
+
+def _mk(rng, obs, nvars, dtype):
+    x = rng.normal(size=(obs, nvars)).astype(np.float32)
+    e = rng.normal(size=(obs,)).astype(np.float32)
+    x_t = jnp.array(x.T, dtype=dtype)
+    inv_cn = safe_inv(column_norms_sq(jnp.array(x_t.T, jnp.float32)))
+    return x_t, jnp.array(e), inv_cn
+
+
+SHAPES = [(64, 8, 8), (256, 32, 16), (512, 64, 32), (128, 16, 4)]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+class TestCdSweep:
+    @pytest.mark.parametrize("obs,nvars,blk", SHAPES)
+    @pytest.mark.parametrize("dtype", DTYPES)
+    def test_matches_oracle(self, rng, obs, nvars, blk, dtype):
+        x_t, e, inv_cn = _mk(rng, obs, nvars, dtype)
+        da_k, e_k = cd_sweep(x_t, e, inv_cn, block=blk)
+        da_r, e_r = ref_cd_sweep(x_t, e, inv_cn)
+        tol = 1e-5 if dtype == jnp.float32 else 5e-2
+        np.testing.assert_allclose(np.array(da_k), np.array(da_r),
+                                   rtol=tol, atol=tol)
+        np.testing.assert_allclose(np.array(e_k), np.array(e_r),
+                                   rtol=tol, atol=tol)
+
+    def test_vmem_guard(self, rng):
+        x_t, e, inv_cn = _mk(rng, 64, 8, jnp.float32)
+        import sys
+        m = sys.modules["repro.kernels.cd_sweep"]  # pkg attr shadows module
+        old = m.VMEM_BUDGET_BYTES
+        try:
+            m.VMEM_BUDGET_BYTES = 128
+            with pytest.raises(ValueError, match="VMEM"):
+                cd_sweep(x_t, e, inv_cn, block=8)
+        finally:
+            m.VMEM_BUDGET_BYTES = old
+
+
+class TestBakpSweep:
+    @pytest.mark.parametrize("obs,nvars,blk", SHAPES)
+    @pytest.mark.parametrize("dtype", DTYPES)
+    def test_matches_oracle(self, rng, obs, nvars, blk, dtype):
+        x_t, e, inv_cn = _mk(rng, obs, nvars, dtype)
+        da_k, e_k = bakp_sweep(x_t, e, inv_cn, block=blk)
+        da_r, e_r = ref_bakp_sweep(x_t, e, inv_cn, block=blk)
+        tol = 1e-4 if dtype == jnp.float32 else 5e-2
+        np.testing.assert_allclose(np.array(da_k), np.array(da_r),
+                                   rtol=tol, atol=tol)
+        np.testing.assert_allclose(np.array(e_k), np.array(e_r),
+                                   rtol=tol, atol=tol)
+
+    def test_omega(self, rng):
+        x_t, e, inv_cn = _mk(rng, 128, 16, jnp.float32)
+        da_k, _ = bakp_sweep(x_t, e, inv_cn, block=8, omega=0.5)
+        da_r, _ = ref_bakp_sweep(x_t, e, inv_cn, block=8, omega=0.5)
+        np.testing.assert_allclose(np.array(da_k), np.array(da_r),
+                                   rtol=1e-4, atol=1e-5)
+
+
+class TestBlockUpdate:
+    @pytest.mark.parametrize("obs,cb,tile", [(256, 8, 64), (512, 16, 128),
+                                             (1024, 32, 256)])
+    @pytest.mark.parametrize("dtype", DTYPES)
+    def test_matches_oracle(self, rng, obs, cb, tile, dtype):
+        x_t = jnp.array(rng.normal(size=(cb, obs)), dtype=dtype)
+        e = jnp.array(rng.normal(size=(obs,)).astype(np.float32))
+        da = jnp.array(rng.normal(size=(cb,)).astype(np.float32))
+        out_k = block_update(x_t, e, da, obs_tile=tile)
+        out_r = ref_block_update(x_t, e, da)
+        tol = 1e-4 if dtype == jnp.float32 else 1e-1
+        np.testing.assert_allclose(np.array(out_k), np.array(out_r),
+                                   rtol=tol, atol=tol)
+
+
+class TestScoreFeatures:
+    @pytest.mark.parametrize("obs,nvars,cb,ot", [(256, 16, 8, 64),
+                                                 (512, 64, 32, 128)])
+    def test_matches_oracle(self, rng, obs, nvars, cb, ot):
+        x = rng.normal(size=(obs, nvars)).astype(np.float32)
+        e = rng.normal(size=(obs,)).astype(np.float32)
+        x_t = jnp.array(x.T)
+        inv_cn = safe_inv(column_norms_sq(jnp.array(x)))
+        s_k = score_features(x_t, jnp.array(e), inv_cn, col_block=cb,
+                             obs_tile=ot)
+        s_r = ref_score_features(x_t, jnp.array(e), inv_cn)
+        np.testing.assert_allclose(np.array(s_k), np.array(s_r),
+                                   rtol=1e-4, atol=1e-3)
+
+    @settings(max_examples=15, deadline=None)
+    @given(obs_t=st.sampled_from([32, 64]), nob=st.integers(1, 4),
+           nvars_b=st.sampled_from([4, 8]), nb=st.integers(1, 4),
+           seed=st.integers(0, 2**30))
+    def test_property_grid_invariance(self, obs_t, nob, nvars_b, nb, seed):
+        """Scores are invariant to the (col_block, obs_tile) grid choice."""
+        r = np.random.default_rng(seed)
+        obs, nvars = obs_t * nob, nvars_b * nb
+        x = r.normal(size=(obs, nvars)).astype(np.float32)
+        e = r.normal(size=(obs,)).astype(np.float32)
+        x_t = jnp.array(x.T)
+        inv_cn = safe_inv(column_norms_sq(jnp.array(x)))
+        s1 = score_features(x_t, jnp.array(e), inv_cn, col_block=nvars_b,
+                            obs_tile=obs_t)
+        s2 = ref_score_features(x_t, jnp.array(e), inv_cn)
+        np.testing.assert_allclose(np.array(s1), np.array(s2), rtol=1e-4,
+                                   atol=1e-3)
+
+
+class TestKernelSolver:
+    def test_full_solve_bakp(self, rng):
+        x = rng.normal(size=(512, 64)).astype(np.float32)
+        a = rng.normal(size=(64,)).astype(np.float32)
+        y = x @ a
+        res = solvebakp_kernel(jnp.array(x.T), jnp.array(y), block=16,
+                               max_iter=60)
+        np.testing.assert_allclose(np.array(res.coef), a, rtol=1e-3,
+                                   atol=1e-3)
+
+    def test_full_solve_bak_variant(self, rng):
+        x = rng.normal(size=(256, 32)).astype(np.float32)
+        a = rng.normal(size=(32,)).astype(np.float32)
+        y = x @ a
+        res = solvebakp_kernel(jnp.array(x.T), jnp.array(y), block=16,
+                               max_iter=15, variant="bak")
+        np.testing.assert_allclose(np.array(res.coef), a, rtol=1e-3,
+                                   atol=1e-3)
+
+    def test_atol_stops_early(self, rng):
+        x = rng.normal(size=(256, 32)).astype(np.float32)
+        y = (x @ rng.normal(size=(32,)).astype(np.float32))
+        res = solvebakp_kernel(jnp.array(x.T), jnp.array(y), block=16,
+                               max_iter=100, atol=1e-3)
+        assert bool(res.converged) and int(res.n_sweeps) < 100

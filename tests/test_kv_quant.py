@@ -1,0 +1,60 @@
+"""int8 KV-cache quantization (serving lever, §Perf-5): quantized decode
+must track the fp cache decode closely and halve+ the cache bytes."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import ARCHS
+from repro.models.kvcache import cache_bytes, init_cache
+from repro.models.model import (forward_decode, forward_prefill, init_model,
+                                make_smoke_batch)
+
+
+def _run(cfg, params, batch, steps=4):
+    cache = init_cache(cfg, 2, cfg.max_cache_len)
+    logits, cache = forward_prefill(cfg, params, batch, cache)
+    outs = [logits]
+    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    for _ in range(steps):
+        logits, cache = forward_decode(cfg, params, tok, cache)
+        outs.append(logits)
+        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    return outs
+
+
+def test_int8_kv_matches_fp_cache():
+    base = ARCHS["qwen3-8b"].smoke()
+    quant = dataclasses.replace(base, kv_quant="int8")
+    key = jax.random.PRNGKey(0)
+    params = init_model(base, key)
+    batch = make_smoke_batch(base, key, batch=2, seq=32)
+    batch.pop("labels", None)
+    fp = _run(base, params, batch)
+    q8 = _run(quant, params, batch)
+    for a, b in zip(fp, q8):
+        # same greedy tokens + close logits
+        assert jnp.array_equal(jnp.argmax(a, -1), jnp.argmax(b, -1))
+        sa = jax.nn.log_softmax(a)
+        sb = jax.nn.log_softmax(b)
+        assert float(jnp.abs(sa - sb).max()) < 0.15
+
+
+def test_int8_kv_cache_bytes_halved():
+    base = ARCHS["qwen3-8b"]
+    quant = dataclasses.replace(base, kv_quant="int8")
+    assert cache_bytes(quant, 128, 32768) < 0.6 * cache_bytes(base, 128, 32768)
+
+
+def test_int8_kv_with_swa_ring():
+    base = ARCHS["h2o-danube-1.8b"].smoke()
+    quant = dataclasses.replace(base, kv_quant="int8")
+    key = jax.random.PRNGKey(1)
+    params = init_model(base, key)
+    batch = make_smoke_batch(base, key, batch=2, seq=48)  # > ring window 32
+    batch.pop("labels", None)
+    fp = _run(base, params, batch)
+    q8 = _run(quant, params, batch)
+    for a, b in zip(fp, q8):
+        assert jnp.array_equal(jnp.argmax(a, -1), jnp.argmax(b, -1))

@@ -1,0 +1,155 @@
+"""Per-architecture smoke tests (reduced configs, CPU): one train step +
+prefill/decode, asserting shapes and finiteness — the per-arch deliverable.
+
+Also: prefill+decode consistency vs a pure forward pass (cache correctness).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import ARCHS
+from repro.launch.steps import make_train_step
+from repro.models.kvcache import cache_bytes, init_cache
+from repro.models.model import (forward_decode, forward_prefill,
+                                forward_train, init_model, make_smoke_batch)
+from repro.optim import make_optimizer
+
+ARCH_NAMES = sorted(ARCHS)
+
+
+@pytest.fixture(scope="module")
+def key():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_train_step_smoke(name, key):
+    cfg = ARCHS[name].smoke()
+    cfg = dataclasses.replace(cfg, microbatch=1)
+    params = init_model(cfg, key)
+    opt_init, _ = make_optimizer(cfg.optimizer)
+    opt_state = opt_init(params)
+    batch = make_smoke_batch(cfg, key, batch=2, seq=32)
+    step = make_train_step(cfg)
+    params, opt_state, metrics = jax.jit(step)(params, opt_state, batch,
+                                               jnp.int32(0))
+    loss = float(metrics["ce_loss"])
+    assert np.isfinite(loss), f"{name}: loss={loss}"
+    assert loss > 0
+    for leaf in jax.tree_util.tree_leaves(params):
+        assert np.all(np.isfinite(np.asarray(leaf, dtype=np.float32)))
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_prefill_decode_smoke(name, key):
+    cfg = ARCHS[name].smoke()
+    params = init_model(cfg, key)
+    batch = make_smoke_batch(cfg, key, batch=2, seq=32)
+    batch.pop("labels", None)
+    cache = init_cache(cfg, 2, cfg.max_cache_len)
+    logits, cache = forward_prefill(cfg, params, batch, cache)
+    assert logits.shape == (2, cfg.padded_vocab)
+    assert np.all(np.isfinite(np.array(logits)))
+    assert int(cache["lengths"][0]) == 32
+    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    for _ in range(3):
+        logits, cache = forward_decode(cfg, params, tok, cache)
+        assert np.all(np.isfinite(np.array(logits)))
+        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    assert int(cache["lengths"][0]) == 35
+
+
+# MoE archs are excluded: capacity dropping makes a 1-token decode route
+# differently than the same token inside a 33-token teacher-forced batch —
+# logits legitimately differ (their smoke/decode coverage lives in
+# test_prefill_decode_smoke + test_kv_quant).
+@pytest.mark.parametrize("name", ["qwen3-8b", "h2o-danube-1.8b",
+                                  "minicpm3-4b", "mamba2-370m",
+                                  "gemma2-9b", "zamba2-7b", "qwen2-vl-2b"])
+def test_decode_matches_forward(name, key):
+    """Prefill S tokens then decode token S must equal the full forward of
+    S+1 tokens at position S (cache correctness, incl. ring/MLA/SSM)."""
+    cfg = ARCHS[name].smoke()
+    params = init_model(cfg, key)
+    full = make_smoke_batch(cfg, key, batch=2, seq=33)
+    prompt = {k: (v[:, :32] if k != "positions" else v[..., :32])
+              for k, v in full.items() if k != "labels"}
+    if "frames" in full:
+        prompt["frames"] = full["frames"]
+
+    # path A: prefill 32 + decode the 33rd token's logits
+    cache = init_cache(cfg, 2, cfg.max_cache_len)
+    _, cache = forward_prefill(cfg, params, prompt, cache)
+    tok33 = full["tokens"][:, 32:33]
+    logits_a, _ = forward_decode(cfg, params, tok33, cache)
+
+    # path B: forward over all 33, take logits at the last position
+    batch33 = dict(full)
+    batch33["labels"] = full["tokens"]  # dummy
+    loss_logits = None
+    from repro.models.model import _dtype, _positions
+    from repro.models.common import embed_tokens, rmsnorm, unembed
+    from repro.models.transformer import run_backbone
+    x = embed_tokens(params["embed"], full["tokens"], _dtype(cfg))
+    pos = full.get("positions")
+    if pos is None:
+        pos = _positions(cfg, 2, jnp.zeros((2,), jnp.int32), 33)
+    h, _, _ = run_backbone(cfg, params["backbone"], x, mode="train",
+                           positions=pos)
+    h = rmsnorm(h, params["final_ln"])
+    logits_b = unembed(params["embed"], h, tie=cfg.tie_embeddings,
+                       final_softcap=cfg.final_softcap)[:, -1]
+
+    np.testing.assert_allclose(np.array(logits_a), np.array(logits_b),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_cache_bytes_mla_compression():
+    """MLA latent cache must be much smaller than an equivalent GQA cache."""
+    cfg = ARCHS["minicpm3-4b"]
+    mla_bytes = cache_bytes(cfg, 1, 32768)
+    # hypothetical per-head cache: L * S * H * (nope+rope+v) * 2B
+    full = cfg.n_layers * 32768 * cfg.n_heads * \
+        (cfg.qk_nope_dim + cfg.qk_rope_dim + cfg.v_head_dim) * 2 * 2
+    assert mla_bytes < full / 10
+
+
+def test_swa_ring_cache_constant_memory():
+    cfg = ARCHS["h2o-danube-1.8b"]
+    assert cache_bytes(cfg, 1, 524288) == cache_bytes(cfg, 1, 1 << 22)
+
+
+def test_swa_ring_wraparound_decode(key):
+    """Prefill LONGER than the SWA window: the ring cache must hold the last
+    `window` tokens at slots t % window, and decode must match the full
+    forward with windowed masking (exercises the prefill roll + ring write).
+    """
+    import dataclasses
+    from repro.models.model import _dtype, _positions
+    from repro.models.common import embed_tokens, rmsnorm, unembed
+    from repro.models.transformer import run_backbone
+
+    cfg = ARCHS["h2o-danube-1.8b"].smoke()          # sliding_window=32
+    cfg = dataclasses.replace(cfg, max_cache_len=64)
+    params = init_model(cfg, key)
+    seq = 49                                        # > window, not multiple
+    full = make_smoke_batch(cfg, key, batch=2, seq=seq + 1)
+
+    prompt = {"tokens": full["tokens"][:, :seq]}
+    cache = init_cache(cfg, 2, cfg.max_cache_len)
+    _, cache = forward_prefill(cfg, params, prompt, cache)
+    logits_a, _ = forward_decode(cfg, params, full["tokens"][:, seq:seq + 1],
+                                 cache)
+
+    x = embed_tokens(params["embed"], full["tokens"], _dtype(cfg))
+    pos = _positions(cfg, 2, jnp.zeros((2,), jnp.int32), seq + 1)
+    h, _, _ = run_backbone(cfg, params["backbone"], x, mode="train",
+                           positions=pos)
+    h = rmsnorm(h, params["final_ln"])
+    logits_b = unembed(params["embed"], h, tie=cfg.tie_embeddings,
+                       final_softcap=cfg.final_softcap)[:, -1]
+    np.testing.assert_allclose(np.array(logits_a), np.array(logits_b),
+                               rtol=2e-2, atol=2e-2)

@@ -1,0 +1,91 @@
+"""Algorithm 1 (SolveBak) — correctness, convergence theorem, tolerances."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import make_system
+from repro.core import solve, solvebak
+
+jax.config.update("jax_enable_x64", False)
+
+
+class TestSolveBak:
+    def test_exact_tall_system(self, rng):
+        x, y, a_true = make_system(rng, 800, 40)
+        res = solvebak(jnp.array(x), jnp.array(y), max_iter=40)
+        np.testing.assert_allclose(np.array(res.coef), a_true,
+                                   rtol=1e-4, atol=1e-4)
+        assert float(res.sse) < 1e-5
+
+    def test_wide_system_zero_residual(self, rng):
+        # overdetermined in features: infinitely many solutions, the
+        # algorithm must find one with ~zero residual (paper §1).
+        x = rng.normal(size=(30, 200)).astype(np.float32)
+        y = rng.normal(size=(30,)).astype(np.float32)
+        res = solvebak(jnp.array(x), jnp.array(y), max_iter=200)
+        assert float(res.sse) < 1e-6 * float(np.sum(y * y))
+
+    def test_monotone_sse_theorem1(self, rng):
+        """Theorem 1: SSE is non-increasing sweep over sweep."""
+        x, y, _ = make_system(rng, 500, 64, noise=0.5)
+        res = solvebak(jnp.array(x), jnp.array(y), max_iter=30)
+        h = np.array(res.history)
+        h = h[~np.isnan(h)]
+        assert np.all(np.diff(h) <= 1e-3 * h[:-1] + 1e-6)
+
+    def test_least_squares_optimum_noisy(self, rng):
+        """Converges to the lstsq optimum, not just a small residual."""
+        x, y, _ = make_system(rng, 600, 20, noise=1.0)
+        res = solvebak(jnp.array(x), jnp.array(y), max_iter=200, rtol=1e-12)
+        ref = np.linalg.lstsq(x, y, rcond=None)[0]
+        np.testing.assert_allclose(np.array(res.coef), ref, rtol=1e-3,
+                                   atol=1e-3)
+
+    def test_atol_early_exit(self, rng):
+        x, y, _ = make_system(rng, 400, 30)
+        res = solvebak(jnp.array(x), jnp.array(y), max_iter=100, atol=1e-3)
+        assert bool(res.converged)
+        assert int(res.n_sweeps) < 100
+
+    def test_rtol_early_exit(self, rng):
+        x, y, _ = make_system(rng, 400, 30, noise=2.0)
+        res = solvebak(jnp.array(x), jnp.array(y), max_iter=100, rtol=1e-6)
+        assert bool(res.converged)
+        assert int(res.n_sweeps) < 100
+
+    def test_random_order(self, rng):
+        x, y, a_true = make_system(rng, 500, 32)
+        res = solvebak(jnp.array(x), jnp.array(y), max_iter=60,
+                       order="random", key=jax.random.PRNGKey(3))
+        np.testing.assert_allclose(np.array(res.coef), a_true, rtol=1e-3,
+                                   atol=1e-3)
+
+    def test_zero_column_is_inert(self, rng):
+        x, y, _ = make_system(rng, 300, 16)
+        x[:, 7] = 0.0
+        res = solvebak(jnp.array(x), jnp.array(y), max_iter=50)
+        assert np.isfinite(np.array(res.coef)).all()
+        assert float(np.array(res.coef)[7]) == 0.0
+
+    def test_initial_guess_warm_start(self, rng):
+        x, y, a_true = make_system(rng, 400, 24)
+        res = solvebak(jnp.array(x), jnp.array(y),
+                       a0=jnp.array(a_true), max_iter=1)
+        assert float(res.sse) < 1e-6
+
+    def test_bf16_storage_fp32_accum(self, rng):
+        x, y, a_true = make_system(rng, 1000, 16)
+        res = solvebak(jnp.array(x, dtype=jnp.bfloat16),
+                       jnp.array(y), max_iter=60)
+        # bf16 storage: looser tolerance, same solution
+        np.testing.assert_allclose(np.array(res.coef), a_true, rtol=0.05,
+                                   atol=0.05)
+
+    def test_api_dispatch(self, rng):
+        x, y, a_true = make_system(rng, 300, 12)
+        for method in ("bak", "bakp", "bakp_gram", "lstsq", "normal"):
+            res = solve(jnp.array(x), jnp.array(y), method=method,
+                        max_iter=60, thr=8)
+            np.testing.assert_allclose(np.array(res.coef), a_true,
+                                       rtol=1e-2, atol=1e-2)

@@ -1,0 +1,45 @@
+"""Algorithm 3 (SolveBakF) — feature selection + stepwise baseline."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import solvebakf, stepwise_regression_baseline
+
+
+def planted_problem(rng, obs=400, nvars=60, k=6, noise=0.01):
+    x = rng.normal(size=(obs, nvars)).astype(np.float32)
+    idx = rng.choice(nvars, size=k, replace=False)
+    coef = np.zeros(nvars, np.float32)
+    coef[idx] = rng.normal(size=k).astype(np.float32) * 4 + np.sign(
+        rng.normal(size=k)).astype(np.float32)
+    y = x @ coef + noise * rng.normal(size=obs).astype(np.float32)
+    return x, y, set(idx.tolist())
+
+
+class TestSolveBakF:
+    def test_recovers_planted_features(self, rng):
+        x, y, idx = planted_problem(rng)
+        res = solvebakf(jnp.array(x), jnp.array(y), max_feat=len(idx))
+        assert set(np.array(res.selected).tolist()) == idx
+
+    def test_sse_path_decreasing(self, rng):
+        x, y, _ = planted_problem(rng, k=8)
+        res = solvebakf(jnp.array(x), jnp.array(y), max_feat=8)
+        path = np.array(res.sse_path)
+        assert np.all(np.diff(path) <= 1e-3 * path[:-1] + 1e-5)
+
+    def test_no_duplicate_selection(self, rng):
+        x, y, _ = planted_problem(rng, k=4)
+        res = solvebakf(jnp.array(x), jnp.array(y), max_feat=10)
+        sel = np.array(res.selected).tolist()
+        assert len(set(sel)) == len(sel)
+
+    def test_matches_stepwise_on_easy_problem(self, rng):
+        """Fig 2 framing: same features as stepwise regression, much less
+        work (stepwise cost is O(vars) solves per step)."""
+        x, y, idx = planted_problem(rng, nvars=30, k=4)
+        fast = solvebakf(jnp.array(x), jnp.array(y), max_feat=4)
+        slow = stepwise_regression_baseline(jnp.array(x), jnp.array(y),
+                                            max_feat=4)
+        assert set(np.array(fast.selected).tolist()) == \
+            set(np.array(slow.selected).tolist()) == idx

@@ -1,0 +1,147 @@
+"""Data pipeline, optimizers, checkpointing, compression, FT monitors."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import restore_checkpoint, save_checkpoint
+from repro.data import SyntheticLM
+from repro.distributed.compression import (compress, compressed_tree,
+                                           decompress, decompressed_tree,
+                                           init_error_tree)
+from repro.distributed.fault_tolerance import (CheckpointManager,
+                                               StragglerMonitor)
+from repro.optim import (adafactor_init, adafactor_update, adamw_init,
+                         adamw_update)
+from repro.optim.schedule import clip_by_global_norm, cosine_schedule
+
+
+class TestData:
+    def test_deterministic_and_resumable(self):
+        d1 = SyntheticLM(128, 16, 4)
+        batches1 = [d1.next_batch() for _ in range(5)]
+        d2 = SyntheticLM(128, 16, 4)
+        d2.skip_to(3)
+        b = d2.next_batch()
+        np.testing.assert_array_equal(b["tokens"], batches1[3]["tokens"])
+
+    def test_host_sharding_disjoint(self):
+        g = SyntheticLM(128, 16, 8, host_count=1, host_id=0)
+        h0 = SyntheticLM(128, 16, 8, host_count=2, host_id=0)
+        h1 = SyntheticLM(128, 16, 8, host_count=2, host_id=1)
+        assert h0.next_batch()["tokens"].shape == (4, 16)
+        assert h1.next_batch()["tokens"].shape == (4, 16)
+
+    def test_learnable_structure(self):
+        b = SyntheticLM(128, 32, 4, noise=0.0).next_batch()
+        # next token = current + 1 mod base
+        t, l = b["tokens"], b["labels"]
+        assert np.mean((t + 1) % 97 == l) > 0.95
+
+
+class TestOptim:
+    def _quadratic(self, opt_init, opt_update):
+        params = {"w": jnp.array([5.0, -3.0], jnp.float32)}
+        state = opt_init(params)
+        for i in range(300):
+            grads = {"w": 2 * params["w"]}
+            params, state = opt_update(grads, state, params, lr=0.05,
+                                       weight_decay=0.0)
+        return float(jnp.abs(params["w"]).max())
+
+    def test_adamw_converges(self):
+        assert self._quadratic(adamw_init, adamw_update) < 1e-2
+
+    def test_adafactor_converges(self):
+        assert self._quadratic(adafactor_init, adafactor_update) < 1e-1
+
+    def test_adafactor_memory_factored(self):
+        p = {"w": jnp.zeros((64, 32))}
+        st = adafactor_init(p)
+        assert st["stats"]["w"]["vr"].shape == (64,)
+        assert st["stats"]["w"]["vc"].shape == (32,)
+
+    def test_bf16_master_roundtrip(self):
+        params = {"w": jnp.ones((4,), jnp.bfloat16)}
+        st = adamw_init(params)
+        g = {"w": jnp.full((4,), 0.1, jnp.bfloat16)}
+        params2, st2 = adamw_update(g, st, params, lr=1e-2)
+        assert params2["w"].dtype == jnp.bfloat16
+        assert st2["master"]["w"].dtype == jnp.float32
+
+    def test_schedule_and_clip(self):
+        lrs = [float(cosine_schedule(jnp.int32(s), peak_lr=1.0,
+                                     warmup_steps=10, total_steps=100))
+               for s in [0, 5, 10, 50, 100]]
+        assert lrs[0] == 0.0 and abs(lrs[2] - 1.0) < 1e-6
+        assert lrs[3] < lrs[2] and lrs[4] >= 0.1 - 1e-6
+        tree = {"a": jnp.full((10,), 10.0)}
+        clipped, norm = clip_by_global_norm(tree, 1.0)
+        assert abs(float(jnp.linalg.norm(clipped["a"])) - 1.0) < 1e-5
+
+
+class TestCheckpoint:
+    def test_roundtrip_and_keep_k(self, tmp_path):
+        tree = {"layer": {"w": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+                          "b": jnp.ones((3,), jnp.bfloat16)},
+                "count": jnp.int32(7)}
+        d = str(tmp_path)
+        for step in (10, 20, 30, 40):
+            save_checkpoint(d, step, tree, extras={"data_step": step},
+                            keep=2)
+        names = sorted(os.listdir(d))
+        assert names == ["step_00000030", "step_00000040"]
+        restored, extras, step = restore_checkpoint(d, tree)
+        assert step == 40 and extras["data_step"] == 40
+        np.testing.assert_array_equal(np.array(restored["layer"]["w"]),
+                                      np.array(tree["layer"]["w"]))
+        assert restored["layer"]["b"].dtype == jnp.bfloat16
+
+    def test_manager_preemption_flag(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), interval_steps=100)
+        assert not mgr.should_save(5)
+        mgr._preempted = True
+        assert mgr.should_save(5)
+
+
+class TestCompression:
+    def test_int8_error_feedback_unbiased(self):
+        rng = np.random.default_rng(0)
+        g = jnp.array(rng.normal(size=(256,)).astype(np.float32))
+        err = jnp.zeros_like(g)
+        # accumulate over steps: with error feedback the cumulative
+        # dequantised sum tracks the cumulative true sum
+        total_true = jnp.zeros_like(g)
+        total_deq = jnp.zeros_like(g)
+        for i in range(50):
+            gi = g * (1 + 0.1 * i)
+            q, scale, err = compress(gi, err)
+            total_true += gi
+            total_deq += decompress(q, scale)
+        rel = float(jnp.linalg.norm(total_true - total_deq) /
+                    jnp.linalg.norm(total_true))
+        assert rel < 0.01
+
+    def test_tree_roundtrip(self):
+        g = {"a": jnp.ones((8,)), "b": {"c": jnp.full((4,), -2.0)}}
+        err = init_error_tree(g)
+        q, s, err2 = compressed_tree(g, err)
+        deq = decompressed_tree(q, s)
+        np.testing.assert_allclose(np.array(deq["b"]["c"]),
+                                   np.array(g["b"]["c"]), rtol=0.02)
+
+
+class TestStraggler:
+    def test_flags_outlier(self):
+        import time
+        mon = StragglerMonitor(window=32, k=3.0)
+        for i in range(12):
+            mon.step_start()
+            time.sleep(0.002)
+            mon.step_end()
+        mon.step_start()
+        time.sleep(0.1)
+        assert mon.step_end() is True
+        assert mon.flagged >= 1

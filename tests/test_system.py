@@ -1,0 +1,133 @@
+"""End-to-end behaviour tests: real training descends, checkpoint restart
+resumes bit-exactly, and the paper's solver integrates with the LM stack
+(linear probe on frozen activations)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import ARCHS
+from repro.core import fit_linear_probe, solvebakf
+from repro.data import SyntheticLM
+from repro.launch.steps import make_train_step
+from repro.models.model import init_model, make_smoke_batch
+from repro.models.common import embed_tokens, rmsnorm
+from repro.models.transformer import run_backbone
+from repro.optim import make_optimizer
+
+
+def _train(cfg, steps=60, batch=8, seq=32, lr=3e-3, params=None,
+           opt_state=None, start=0, data=None, total=None):
+    key = jax.random.PRNGKey(0)
+    params = params or init_model(cfg, key)
+    opt_init, _ = make_optimizer(cfg.optimizer)
+    opt_state = opt_state or opt_init(params)
+    data = data or SyntheticLM(cfg.vocab_size, seq, batch)
+    step_fn = jax.jit(make_train_step(cfg, peak_lr=lr, warmup=10,
+                                      total_steps=total or steps))
+    losses = []
+    for s in range(start, steps):
+        b = {k: jnp.asarray(v) for k, v in data.next_batch().items()}
+        params, opt_state, m = step_fn(params, opt_state, b, jnp.int32(s))
+        losses.append(float(m["ce_loss"]))
+    return params, opt_state, losses, data
+
+
+class TestTraining:
+    def test_loss_descends_dense(self):
+        cfg = dataclasses.replace(ARCHS["h2o-danube-1.8b"].smoke(),
+                                  microbatch=1)
+        _, _, losses, _ = _train(cfg, steps=60)
+        assert np.mean(losses[-10:]) < 0.6 * np.mean(losses[:5]), losses
+
+    def test_loss_descends_moe(self):
+        cfg = dataclasses.replace(ARCHS["dbrx-132b"].smoke(), microbatch=1)
+        _, _, losses, _ = _train(cfg, steps=60)
+        assert np.mean(losses[-10:]) < 0.7 * np.mean(losses[:5]), losses
+
+    def test_loss_descends_ssm(self):
+        cfg = dataclasses.replace(ARCHS["mamba2-370m"].smoke(), microbatch=1)
+        _, _, losses, _ = _train(cfg, steps=60)
+        assert np.mean(losses[-10:]) < 0.7 * np.mean(losses[:5]), losses
+
+    def test_microbatch_equivalence(self):
+        """Grad accumulation must match the monolithic step numerically."""
+        cfg1 = dataclasses.replace(ARCHS["h2o-danube-1.8b"].smoke(),
+                                   microbatch=1)
+        cfg2 = dataclasses.replace(cfg1, microbatch=2)
+        key = jax.random.PRNGKey(0)
+        params = init_model(cfg1, key)
+        opt_init, _ = make_optimizer(cfg1.optimizer)
+        batch = make_smoke_batch(cfg1, key, batch=4, seq=32)
+        outs = []
+        for cfg in (cfg1, cfg2):
+            p, o, m = jax.jit(make_train_step(cfg))(
+                params, opt_init(params), batch, jnp.int32(0))
+            outs.append((float(m["ce_loss"]), p))
+        assert abs(outs[0][0] - outs[1][0]) < 2e-3
+        l1 = jax.tree_util.tree_leaves(outs[0][1])
+        l2 = jax.tree_util.tree_leaves(outs[1][1])
+        for a, b in zip(l1, l2):
+            np.testing.assert_allclose(np.asarray(a, np.float32),
+                                       np.asarray(b, np.float32),
+                                       rtol=2e-2, atol=2e-2)
+
+
+class TestFaultTolerance:
+    def test_checkpoint_restart_exact(self, tmp_path):
+        from repro.checkpoint import restore_checkpoint, save_checkpoint
+        cfg = dataclasses.replace(ARCHS["h2o-danube-1.8b"].smoke(),
+                                  microbatch=1)
+        # run 30 steps straight
+        p_a, o_a, losses_a, _ = _train(cfg, steps=30)
+        # run 15, checkpoint, restart, run 15 more (same schedule horizon)
+        p_b, o_b, losses_b1, data = _train(cfg, steps=15, total=30)
+        save_checkpoint(str(tmp_path), 15, {"p": p_b, "o": o_b},
+                        extras={"data_step": data.state.step})
+        tree, extras, _ = restore_checkpoint(str(tmp_path),
+                                             {"p": p_b, "o": o_b})
+        data2 = SyntheticLM(cfg.vocab_size, 32, 8)
+        data2.skip_to(extras["data_step"])
+        _, _, losses_b2, _ = _train(cfg, steps=30, params=tree["p"],
+                                    opt_state=tree["o"], start=15,
+                                    data=data2)
+        np.testing.assert_allclose(losses_a[15:], losses_b2, rtol=1e-4)
+
+
+class TestSolverIntegration:
+    """The paper's technique as a first-class feature of the LM stack."""
+
+    def _features(self, cfg, params, batch):
+        x = embed_tokens(params["embed"], batch["tokens"], jnp.float32)
+        b, s = batch["tokens"].shape
+        pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        h, _, _ = run_backbone(cfg, params["backbone"], x, mode="train",
+                               positions=pos)
+        return rmsnorm(h, params["final_ln"]).reshape(-1, cfg.d_model)
+
+    def test_linear_probe_on_activations(self):
+        cfg = ARCHS["h2o-danube-1.8b"].smoke()
+        params = init_model(cfg, jax.random.PRNGKey(0))
+        batch = make_smoke_batch(cfg, jax.random.PRNGKey(1), batch=8,
+                                 seq=32)
+        feats = self._features(cfg, params, batch)      # (256, 64) tall
+        w_true = jnp.array(np.random.default_rng(2).normal(
+            size=(cfg.d_model,)).astype(np.float32))
+        target = feats @ w_true
+        res = fit_linear_probe(feats, target, max_iter=100, rtol=1e-10)
+        rel = float(jnp.linalg.norm(res.coef - w_true) /
+                    jnp.linalg.norm(w_true))
+        assert rel < 1e-2
+
+    def test_feature_selection_on_activations(self):
+        cfg = ARCHS["h2o-danube-1.8b"].smoke()
+        params = init_model(cfg, jax.random.PRNGKey(0))
+        batch = make_smoke_batch(cfg, jax.random.PRNGKey(1), batch=8,
+                                 seq=32)
+        feats = self._features(cfg, params, batch)
+        idx = [3, 17, 41]
+        target = feats[:, idx[0]] * 2 - feats[:, idx[1]] + 3 * feats[:, idx[2]]
+        sel = solvebakf(feats, target, max_feat=3)
+        assert set(np.array(sel.selected).tolist()) == set(idx)
