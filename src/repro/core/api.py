@@ -13,6 +13,11 @@
 ``fit_linear_probe`` is the framework-integration entry point: fit a linear
 readout on (tokens × features) activations — the tall-system regression the
 paper targets.
+
+All methods accept ``y`` of shape (obs,) or (obs, k): the multi-RHS form
+solves k systems against the same design matrix in one pass over ``x``
+(coef/residual come back as (vars, k)/(obs, k)).  ``repro.serve`` builds its
+same-design request coalescing on this.
 """
 from __future__ import annotations
 

@@ -14,6 +14,11 @@ baseline*: the TPU-optimised variants live in ``solvebakp.py`` (block CD),
 All inner products accumulate in fp32 regardless of the storage dtype of
 ``x``/``y`` (the paper runs Float32 end-to-end; we additionally support bf16
 storage for TPU and validate MAPE against the fp32 oracle in tests).
+
+Multi-RHS: ``y`` may be ``(obs, k)`` — the same single pass over ``x`` then
+serves ``k`` right-hand sides at once (``da`` becomes a ``(k,)`` row per
+column), amortising the HBM stream of ``x`` over all of them.  This is the
+core primitive behind ``repro.serve``'s same-design request coalescing.
 """
 from __future__ import annotations
 
@@ -41,28 +46,38 @@ def solvebak(
     order: str = "cyclic",
     key: Optional[jax.Array] = None,
     unroll: int = 1,
+    cn: Optional[jax.Array] = None,
 ) -> SolveResult:
     """Algorithm 1 (SolveBak).
 
     Args:
       x: (obs, vars) input matrix (any float dtype; fp32 accumulation).
-      y: (obs,) right-hand side.
+      y: (obs,) right-hand side, or (obs, k) for k right-hand sides solved
+        in one pass (multi-RHS; see module doc).
       max_iter: maximum number of full sweeps over all columns.
       atol: absolute tolerance on the *RMSE*; converged when
-        ``sse <= obs * atol**2``.  ``0`` disables.
+        ``sse <= obs * atol**2`` (multi-RHS: total SSE vs ``obs*k*atol²``).
+        ``0`` disables.
       rtol: relative per-sweep improvement tolerance; converged when
         ``(sse_prev - sse) <= rtol * sse_prev``.  ``0`` disables.
-      a0: optional (vars,) initial guess (paper line 1: zeros).
+      a0: optional (vars,) / (vars, k) initial guess (paper line 1: zeros).
       order: "cyclic" (paper Algorithm 1) or "random" (paper §2, randomly
         selected indices; requires ``key``).
       key: PRNG key for ``order="random"``.
       unroll: unroll factor for the inner column loop (compile-time knob).
+      cn: optional precomputed squared column norms ``⟨x_j,x_j⟩`` (vars,) —
+        lets ``repro.serve``'s design cache skip the norms pass on repeated
+        design matrices.
 
     Returns:
-      SolveResult.  ``history[i]`` is the SSE after sweep ``i``.
+      SolveResult.  ``history[i]`` is the SSE after sweep ``i``; for
+      multi-RHS input ``coef``/``residual`` are (vars, k)/(obs, k) and
+      ``sse`` is the total over all k systems.
     """
     if x.ndim != 2:
         raise ValueError(f"x must be 2D (obs, vars), got {x.shape}")
+    if y.ndim not in (1, 2):
+        raise ValueError(f"y must be (obs,) or (obs, k), got {y.shape}")
     obs, nvars = x.shape
     if order not in ("cyclic", "random"):
         raise ValueError(f"unknown order {order!r}")
@@ -71,23 +86,33 @@ def solvebak(
     if key is None:
         key = jax.random.PRNGKey(0)
 
-    cn = column_norms_sq(x)
+    multi = y.ndim == 2
+    nrhs = y.shape[1] if multi else 1
+    y2 = y.reshape(obs, nrhs)
+
+    if cn is None:
+        cn = column_norms_sq(x)
     inv_cn = safe_inv(cn)
 
-    a = jnp.zeros((nvars,), jnp.float32) if a0 is None else a0.astype(jnp.float32)
-    e0 = y.astype(jnp.float32) - x.astype(jnp.float32) @ a  # paper line 2
+    if a0 is None:
+        a = jnp.zeros((nvars, nrhs), jnp.float32)
+    else:
+        a = a0.astype(jnp.float32).reshape(nvars, nrhs)
+    e0 = y2.astype(jnp.float32) - x.astype(jnp.float32) @ a  # paper line 2
     sse0 = jnp.vdot(e0, e0)
     history0 = jnp.full((max_iter,), jnp.nan, jnp.float32)
 
-    atol_sse = jnp.float32(obs) * jnp.float32(atol) ** 2
+    atol_sse = jnp.float32(obs * nrhs) * jnp.float32(atol) ** 2
 
     def column_step(i, carry, perm):
         a, e = carry
         j = perm[i]
         xj = lax.dynamic_slice_in_dim(x, j, 1, axis=1)[:, 0].astype(jnp.float32)
-        da = jnp.vdot(xj, e) * inv_cn[j]
-        e = e - xj * da
-        a = a.at[j].add(da)
+        da = (xj @ e) * inv_cn[j]            # (k,)
+        e = e - xj[:, None] * da[None, :]
+        a = lax.dynamic_update_slice_in_dim(
+            a, lax.dynamic_slice_in_dim(a, j, 1, axis=0) + da[None, :], j,
+            axis=0)
         return a, e
 
     def sweep_body(state):
@@ -113,6 +138,8 @@ def solvebak(
     a, e, n, sse, history, converged = lax.while_loop(
         cond, sweep_body, (a, e0, jnp.int32(0), sse0, history0, jnp.bool_(False))
     )
+    if not multi:
+        a, e = a[:, 0], e[:, 0]
     return SolveResult(a, e, sse, n, converged, history)
 
 

@@ -29,6 +29,12 @@ convergence, and ``thr`` can be as large as VMEM allows instead of the paper's
 faithful).  Jacobi-within-block can diverge when columns inside a block are
 strongly correlated — the paper's remedy is small ``thr``; ours is ``omega<1``
 or ``mode="gram"``.
+
+Multi-RHS: ``y`` may be ``(obs, k)`` — the per-block inner products become a
+(thr × obs)·(obs × k) matmul and the residual correction a rank-``thr``
+update of a (obs, k) residual, so one stream of ``x`` (and one block-Gram
+factorisation in ``mode="gram"``) serves all k systems.  This is the core
+primitive behind ``repro.serve``'s same-design request coalescing.
 """
 from __future__ import annotations
 
@@ -85,57 +91,73 @@ def solvebakp(
     mode: str = "jacobi",
     ridge: float = 1e-6,
     a0: Optional[jax.Array] = None,
+    cn: Optional[jax.Array] = None,
+    chol: Optional[jax.Array] = None,
 ) -> SolveResult:
     """Algorithm 2 (SolveBakP), blocked over ``thr`` columns.
 
     Args:
       x: (obs, vars) input matrix.
-      y: (obs,) right-hand side.
+      y: (obs,) right-hand side, or (obs, k) for k right-hand sides solved
+        in one pass over ``x`` (multi-RHS; see module doc).
       thr: block width (the paper's thread-count parameter).  Multiples of
         128 line up with TPU lanes/MXU tiles.
       max_iter / atol / rtol: as in ``solvebak``.
       omega: relaxation factor applied to every block update (1.0 = paper).
       mode: "jacobi" (paper Algorithm 2) or "gram" (exact block CD).
       ridge: diagonal regulariser for mode="gram".
-      a0: optional initial coefficients.
+      a0: optional initial coefficients, (vars,) or (vars, k).
+      cn: optional precomputed squared column norms of the *padded* matrix,
+        shape (nblocks*thr,) — see ``repro.serve.cache``.
+      chol: optional precomputed ``block_gram_cholesky(xb, ridge)`` factors,
+        shape (nblocks, thr, thr); only used for mode="gram".  Repeated-X
+        serving amortises this O(obs·vars·thr) factorisation across requests.
 
     Returns:
-      SolveResult (coef truncated back to the unpadded ``vars``).
+      SolveResult (coef truncated back to the unpadded ``vars``); multi-RHS
+      input gives (vars, k) coef, (obs, k) residual and total-SSE scalars.
     """
     obs, nvars = x.shape
+    if y.ndim not in (1, 2):
+        raise ValueError(f"y must be (obs,) or (obs, k), got {y.shape}")
+    multi = y.ndim == 2
+    nrhs = y.shape[1] if multi else 1
+    y2 = y.reshape(obs, nrhs)
     x_pad, mask, nblocks = _pad_cols(x, thr)
     xb = x_pad.reshape(obs, nblocks, thr)
 
-    cn = column_norms_sq(x_pad)
+    if cn is None:
+        cn = column_norms_sq(x_pad)
     inv_cn = (safe_inv(cn) * mask).reshape(nblocks, thr)
     mask_b = mask.reshape(nblocks, thr)
 
     if mode == "gram":
-        chol = block_gram_cholesky(xb, ridge)
+        if chol is None:
+            chol = block_gram_cholesky(xb, ridge)
     elif mode == "jacobi":
         chol = None
     else:
         raise ValueError(f"unknown mode {mode!r}")
 
-    a = jnp.zeros((nblocks * thr,), jnp.float32)
+    a = jnp.zeros((nblocks * thr, nrhs), jnp.float32)
     if a0 is not None:
-        a = a.at[:nvars].set(a0.astype(jnp.float32))
-    e0 = y.astype(jnp.float32) - x_pad.astype(jnp.float32) @ a
+        a = a.at[:nvars].set(a0.astype(jnp.float32).reshape(nvars, nrhs))
+    e0 = y2.astype(jnp.float32) - x_pad.astype(jnp.float32) @ a
     sse0 = jnp.vdot(e0, e0)
     history0 = jnp.full((max_iter,), jnp.nan, jnp.float32)
-    atol_sse = jnp.float32(obs) * jnp.float32(atol) ** 2
-    ab0 = a.reshape(nblocks, thr)
+    atol_sse = jnp.float32(obs * nrhs) * jnp.float32(atol) ** 2
+    ab0 = a.reshape(nblocks, thr, nrhs)
 
     def block_step(carry, b):
         ab, e = carry
         xblk = lax.dynamic_index_in_dim(xb, b, axis=1, keepdims=False)
         xblk = xblk.astype(jnp.float32)  # (obs, thr)
-        g = xblk.T @ e  # (thr,)  ⟨x_k, e⟩ for all k in block at once
+        g = xblk.T @ e  # (thr, k)  ⟨x_k, e⟩ for all k in block, all RHS
         if mode == "jacobi":
-            da = g * inv_cn[b]
+            da = g * inv_cn[b][:, None]
         else:
             lb = lax.dynamic_index_in_dim(chol, b, axis=0, keepdims=False)
-            da = jax.scipy.linalg.cho_solve((lb, True), g) * mask_b[b]
+            da = jax.scipy.linalg.cho_solve((lb, True), g) * mask_b[b][:, None]
         da = omega * da
         e = e - xblk @ da  # paper line 9 (rank-thr residual correction)
         ab = lax.dynamic_update_index_in_dim(ab, ab[b] + da, b, axis=0)
@@ -157,5 +179,7 @@ def solvebakp(
     ab, e, n, sse, history, converged = lax.while_loop(
         cond, sweep_body, (ab0, e0, jnp.int32(0), sse0, history0, jnp.bool_(False))
     )
-    coef = ab.reshape(-1)[:nvars]
+    coef = ab.reshape(nblocks * thr, nrhs)[:nvars]
+    if not multi:
+        coef, e = coef[:, 0], e[:, 0]
     return SolveResult(coef, e, sse, n, converged, history)

@@ -11,9 +11,12 @@ class SolveResult(NamedTuple):
     """Result of a linear-system solve.
 
     Attributes:
-      coef:       (vars,) solution vector ``a`` with ``x @ a ≈ y``.
-      residual:   (obs,) final residual ``e = y - x @ a`` (fp32).
-      sse:        scalar fp32 sum of squared residuals at exit.
+      coef:       (vars,) solution vector ``a`` with ``x @ a ≈ y``; for a
+                  multi-RHS solve (``y`` of shape (obs, k)): (vars, k).
+      residual:   (obs,) final residual ``e = y - x @ a`` (fp32); multi-RHS:
+                  (obs, k).
+      sse:        scalar fp32 sum of squared residuals at exit (multi-RHS:
+                  total over all k systems).
       n_sweeps:   scalar int32, number of full sweeps executed.
       converged:  scalar bool, True if a tolerance criterion fired before
                   ``max_iter`` was exhausted.

@@ -22,8 +22,8 @@ from jax.experimental.pallas import tpu as pltpu
 
 
 def _block_update_kernel(x_ref, da_ref, e_ref, out_ref):
-    """Grid: (n_obs_tiles,).  x_ref: (CB, OT); da_ref: (CB, 1);
-    e_ref/out_ref: (1, OT)."""
+    """Grid: (n_obs_tiles,).  x_ref: (CB, OT); da_ref: (CB, k);
+    e_ref/out_ref: (k, OT) — k right-hand sides share the x stream."""
     xb = x_ref[...].astype(jnp.float32)
     da = da_ref[...]
     corr = jax.lax.dot_general(da, xb, (((0,), (0,)), ((), ())),
@@ -36,11 +36,17 @@ def block_update(x_t_blk, e, da, *, obs_tile=4096, interpret=None):
 
     Args:
       x_t_blk: (CB, obs) transposed column block.
-      e: (obs,) residual.  da: (CB,) block coefficient increments.
+      e: (obs,) residual or (k, obs) multi-RHS residuals.
+      da: (CB,) or (CB, k) block coefficient increments.
+    Returns:
+      Updated residual, same rank as ``e``.
     """
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     cb, obs = x_t_blk.shape
+    single = e.ndim == 1
+    e2 = e.reshape(1, obs) if single else e
+    nrhs = e2.shape[0]
     obs_tile = min(obs_tile, obs)
     assert obs % obs_tile == 0, (obs, obs_tile)
     grid = (obs // obs_tile,)
@@ -49,15 +55,15 @@ def block_update(x_t_blk, e, da, *, obs_tile=4096, interpret=None):
         grid=grid,
         in_specs=[
             pl.BlockSpec((cb, obs_tile), lambda k: (0, k)),
-            pl.BlockSpec((cb, 1), lambda k: (0, 0)),
-            pl.BlockSpec((1, obs_tile), lambda k: (0, k)),
+            pl.BlockSpec((cb, nrhs), lambda k: (0, 0)),
+            pl.BlockSpec((nrhs, obs_tile), lambda k: (0, k)),
         ],
-        out_specs=pl.BlockSpec((1, obs_tile), lambda k: (0, k)),
-        out_shape=jax.ShapeDtypeStruct((1, obs), jnp.float32),
+        out_specs=pl.BlockSpec((nrhs, obs_tile), lambda k: (0, k)),
+        out_shape=jax.ShapeDtypeStruct((nrhs, obs), jnp.float32),
         interpret=interpret,
-    )(x_t_blk, da.reshape(cb, 1).astype(jnp.float32),
-      e.reshape(1, obs).astype(jnp.float32))
-    return out[0]
+    )(x_t_blk, da.reshape(cb, nrhs).astype(jnp.float32),
+      e2.astype(jnp.float32))
+    return out[0] if single else out
 
 
 def _score_kernel(x_ref, e_ref, invcn_ref, out_ref, g_scr):

@@ -44,8 +44,9 @@ VMEM_BUDGET_BYTES = 64 * 1024 * 1024
 def _cd_sweep_kernel(x_ref, invcn_ref, e_in_ref, da_ref, e_out_ref, e_scr):
     """Grid: (nblocks,).  Refs:
     x_ref: (CB, obs) tile of x_t        invcn_ref: (CB, 1)
-    e_in_ref/e_out_ref: (1, obs)        da_ref: (CB, 1)
-    e_scr: VMEM scratch (1, obs) fp32 — the resident residual.
+    e_in_ref/e_out_ref: (k, obs)        da_ref: (CB, k)
+    e_scr: VMEM scratch (k, obs) fp32 — the resident residual(s); k ≥ 1
+    right-hand sides ride the same stream of x (multi-RHS serving).
     """
     i = pl.program_id(0)
 
@@ -56,14 +57,19 @@ def _cd_sweep_kernel(x_ref, invcn_ref, e_in_ref, da_ref, e_out_ref, e_scr):
     xb = x_ref[...].astype(jnp.float32)      # (CB, obs)
     inv = invcn_ref[...]                     # (CB, 1)
     cb = xb.shape[0]
+    nrhs = da_ref.shape[1]
 
     def body(t, _):
-        e = e_scr[...]                                        # (1, obs)
+        e = e_scr[...]                                        # (k, obs)
         xj = lax.dynamic_slice_in_dim(xb, t, 1, axis=0)       # (1, obs)
-        da = jnp.sum(xj * e) * lax.dynamic_slice_in_dim(inv, t, 1, 0)[0, 0]
-        e_scr[...] = e - xj * da
-        pl.store(da_ref, (pl.dslice(t, 1), pl.dslice(0, 1)),
-                 da.reshape(1, 1))
+        da = lax.dot_general(                                 # ⟨x_j, e⟩, all k
+            xj, e, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)               # (1, k)
+        da = da * lax.dynamic_slice_in_dim(inv, t, 1, 0)[0, 0]
+        e_scr[...] = e - lax.dot_general(                     # (k, obs)
+            da, xj, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        pl.store(da_ref, (pl.dslice(t, 1), pl.dslice(0, nrhs)), da)
         return 0
 
     lax.fori_loop(0, cb, body, 0)
@@ -86,14 +92,14 @@ def _bakp_sweep_kernel(omega, x_ref, invcn_ref, e_in_ref, da_ref, e_out_ref,
 
     xb = x_ref[...].astype(jnp.float32)          # (CB, obs)
     inv = invcn_ref[...]                         # (CB, 1)
-    e = e_scr[...]                               # (1, obs)
+    e = e_scr[...]                               # (k, obs)
     g = jax.lax.dot_general(                     # ⟨x_k, e⟩ for the block: MXU
         xb, e, (((1,), (1,)), ((), ())),
-        preferred_element_type=jnp.float32)      # (CB, 1)
-    da = omega * g * inv                         # (CB, 1)
+        preferred_element_type=jnp.float32)      # (CB, k)
+    da = omega * g * inv                         # (CB, k)
     e_scr[...] = e - jax.lax.dot_general(        # rank-CB correction: MXU
         da, xb, (((0,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32)      # (1, obs)
+        preferred_element_type=jnp.float32)      # (k, obs)
     da_ref[...] = da
 
     @pl.when(i == pl.num_programs(0) - 1)
@@ -104,13 +110,16 @@ def _bakp_sweep_kernel(omega, x_ref, invcn_ref, e_in_ref, da_ref, e_out_ref,
 def _sweep_call(kernel_fn, x_t, e, inv_cn, *, block, interpret):
     nvars, obs = x_t.shape
     assert nvars % block == 0, (nvars, block)
+    single = e.ndim == 1
+    e2 = e.reshape(1, obs) if single else e          # (k, obs) kernel layout
+    nrhs = e2.shape[0]
     nblocks = nvars // block
-    vmem = obs * 4 + block * obs * x_t.dtype.itemsize
+    vmem = nrhs * obs * 4 + block * obs * x_t.dtype.itemsize
     if vmem > VMEM_BUDGET_BYTES:
         raise ValueError(
             f"cd_sweep working set {vmem/2**20:.1f} MiB exceeds VMEM budget; "
             f"shard obs across devices (repro.core.distributed) or reduce "
-            f"block ({block}) / obs ({obs}).")
+            f"block ({block}) / obs ({obs}) / nrhs ({nrhs}).")
 
     grid = (nblocks,)
     da, e_out = pl.pallas_call(
@@ -119,21 +128,23 @@ def _sweep_call(kernel_fn, x_t, e, inv_cn, *, block, interpret):
         in_specs=[
             pl.BlockSpec((block, obs), lambda i: (i, 0)),
             pl.BlockSpec((block, 1), lambda i: (i, 0)),
-            pl.BlockSpec((1, obs), lambda i: (0, 0)),
+            pl.BlockSpec((nrhs, obs), lambda i: (0, 0)),
         ],
         out_specs=[
-            pl.BlockSpec((block, 1), lambda i: (i, 0)),
-            pl.BlockSpec((1, obs), lambda i: (0, 0)),
+            pl.BlockSpec((block, nrhs), lambda i: (i, 0)),
+            pl.BlockSpec((nrhs, obs), lambda i: (0, 0)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((nvars, 1), jnp.float32),
-            jax.ShapeDtypeStruct((1, obs), jnp.float32),
+            jax.ShapeDtypeStruct((nvars, nrhs), jnp.float32),
+            jax.ShapeDtypeStruct((nrhs, obs), jnp.float32),
         ],
-        scratch_shapes=[pltpu.VMEM((1, obs), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((nrhs, obs), jnp.float32)],
         interpret=interpret,
     )(x_t, inv_cn.reshape(nvars, 1).astype(jnp.float32),
-      e.reshape(1, obs).astype(jnp.float32))
-    return da[:, 0], e_out[0]
+      e2.astype(jnp.float32))
+    if single:
+        return da[:, 0], e_out[0]
+    return da, e_out
 
 
 def cd_sweep(x_t, e, inv_cn, *, block=256, interpret=None):
@@ -141,11 +152,14 @@ def cd_sweep(x_t, e, inv_cn, *, block=256, interpret=None):
 
     Args:
       x_t: (vars, obs) transposed input; vars must divide ``block``.
-      e: (obs,) residual.  inv_cn: (vars,) inverse squared column norms.
+      e: (obs,) residual, or (k, obs) for k right-hand sides sharing the
+        single HBM stream of x (multi-RHS serving path).
+      inv_cn: (vars,) inverse squared column norms.
       block: rows of x_t staged to VMEM per grid step (multiple of 8).
       interpret: force interpret mode (defaults to True off-TPU).
     Returns:
-      (da, e'): (vars,) increments and the post-sweep residual.
+      (da, e'): increments and post-sweep residual — (vars,)/(obs,) for 1D
+      input, (vars, k)/(k, obs) for multi-RHS.
     """
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
@@ -154,7 +168,7 @@ def cd_sweep(x_t, e, inv_cn, *, block=256, interpret=None):
 
 
 def bakp_sweep(x_t, e, inv_cn, *, block=256, omega=1.0, interpret=None):
-    """One SolveBakP (block-Jacobi) sweep.  See module doc."""
+    """One SolveBakP (block-Jacobi) sweep; multi-RHS as ``cd_sweep``."""
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     return _sweep_call(functools.partial(_bakp_sweep_kernel, omega),

@@ -41,20 +41,27 @@ def solvebakp_kernel(
     Args:
       x_t: (vars, obs) TRANSPOSED input matrix (kernel layout; see
         repro.kernels.ref docstring).  vars must be a multiple of ``block``.
-      y: (obs,) right-hand side.
+      y: (obs,) right-hand side, or (obs, k) for k right-hand sides sharing
+        one HBM stream of x per sweep (multi-RHS serving path).
       variant: "bakp" (Algorithm 2 sweeps, MXU) or "bak" (Algorithm 1
         sequential sweeps, bit-faithful).
+
+    Returns:
+      SolveResult; multi-RHS input gives (vars, k) coef and (obs, k)
+      residual with total-SSE convergence accounting.
     """
     nvars, obs = x_t.shape
+    multi = y.ndim == 2
+    nrhs = y.shape[1] if multi else 1
     inv_cn = safe_inv(column_norms_sq(x_t.T))
     sweep = cd_sweep if variant == "bak" else functools.partial(
         bakp_sweep, omega=omega)
 
-    a0 = jnp.zeros((nvars,), jnp.float32)
-    e0 = y.astype(jnp.float32)
+    a0 = jnp.zeros((nvars, nrhs), jnp.float32)
+    e0 = y.reshape(obs, nrhs).T.astype(jnp.float32)   # kernel layout (k, obs)
     sse0 = jnp.vdot(e0, e0)
     history0 = jnp.full((max_iter,), jnp.nan, jnp.float32)
-    atol_sse = jnp.float32(obs) * jnp.float32(atol) ** 2
+    atol_sse = jnp.float32(obs * nrhs) * jnp.float32(atol) ** 2
 
     def body(state):
         a, e, i, sse_prev, history, converged = state
@@ -72,7 +79,9 @@ def solvebakp_kernel(
 
     a, e, n, sse, history, converged = lax.while_loop(
         cond, body, (a0, e0, jnp.int32(0), sse0, history0, jnp.bool_(False)))
-    return SolveResult(a, e, sse, n, converged, history)
+    if not multi:
+        return SolveResult(a[:, 0], e[0], sse, n, converged, history)
+    return SolveResult(a, e.T, sse, n, converged, history)
 
 
 @functools.partial(jax.jit, static_argnames=("col_block", "obs_tile",

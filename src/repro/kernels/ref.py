@@ -22,22 +22,29 @@ def ref_cd_sweep(x_t: jax.Array, e: jax.Array, inv_cn: jax.Array):
 
     Args:
       x_t: (vars, obs) transposed input matrix.
-      e:   (obs,) residual (fp32).
+      e:   (obs,) residual (fp32), or (k, obs) multi-RHS residuals.
       inv_cn: (vars,) 1/⟨x_j,x_j⟩ (0 for zero columns).
     Returns:
-      (da, e'): per-column coefficient increments (vars,), updated residual.
+      (da, e'): per-column coefficient increments and updated residual —
+      (vars,)/(obs,) for 1D ``e``, (vars, k)/(k, obs) for multi-RHS.
     """
-    nvars = x_t.shape[0]
+    nvars, obs = x_t.shape
+    single = e.ndim == 1
+    e2 = e.reshape(1, obs) if single else e
+    nrhs = e2.shape[0]
 
     def step(j, carry):
         da_acc, e = carry
         xj = lax.dynamic_slice_in_dim(x_t, j, 1, axis=0)[0].astype(jnp.float32)
-        da = jnp.dot(xj, e) * inv_cn[j]
-        e = e - xj * da
+        da = (e @ xj) * inv_cn[j]                     # (k,)
+        e = e - da[:, None] * xj[None, :]
         return da_acc.at[j].set(da), e
 
-    da0 = jnp.zeros((nvars,), jnp.float32)
-    return lax.fori_loop(0, nvars, step, (da0, e.astype(jnp.float32)))
+    da0 = jnp.zeros((nvars, nrhs), jnp.float32)
+    da, e_out = lax.fori_loop(0, nvars, step, (da0, e2.astype(jnp.float32)))
+    if single:
+        return da[:, 0], e_out[0]
+    return da, e_out
 
 
 def ref_bakp_sweep(x_t: jax.Array, e: jax.Array, inv_cn: jax.Array, *,
@@ -50,29 +57,40 @@ def ref_bakp_sweep(x_t: jax.Array, e: jax.Array, inv_cn: jax.Array, *,
     """
     nvars, obs = x_t.shape
     assert nvars % block == 0, (nvars, block)
+    single = e.ndim == 1
+    e2 = (e.reshape(1, obs) if single else e).astype(jnp.float32)
     nblocks = nvars // block
     xb = x_t.reshape(nblocks, block, obs)
     invb = inv_cn.reshape(nblocks, block)
 
     def step(carry, b):
-        e = carry
+        e = carry                                     # (k, obs)
         xblk = lax.dynamic_index_in_dim(xb, b, 0, keepdims=False)
         xblk = xblk.astype(jnp.float32)
-        g = xblk @ e  # (block,)
-        da = omega * g * lax.dynamic_index_in_dim(invb, b, 0, keepdims=False)
+        g = e @ xblk.T                                # (k, block)
+        da = omega * g * lax.dynamic_index_in_dim(invb, b, 0,
+                                                  keepdims=False)[None, :]
         e = e - da @ xblk
         return e, da
 
-    e_out, da = lax.scan(step, e.astype(jnp.float32), jnp.arange(nblocks))
-    return da.reshape(-1), e_out
+    e_out, da = lax.scan(step, e2, jnp.arange(nblocks))
+    da = jnp.moveaxis(da, 2, 1).reshape(nvars, -1)    # (vars, k)
+    if single:
+        return da[:, 0], e_out[0]
+    return da, e_out
 
 
 def ref_block_update(x_t: jax.Array, e: jax.Array, da: jax.Array):
     """Residual correction e' = e - x_blkᵀ·da  (paper Alg. 2 line 9).
 
-    x_t: (block, obs); e: (obs,); da: (block,).
+    x_t: (block, obs); e: (obs,) or (k, obs); da: (block,) or (block, k).
     """
-    return e.astype(jnp.float32) - da.astype(jnp.float32) @ x_t.astype(jnp.float32)
+    ef = e.astype(jnp.float32)
+    daf = da.astype(jnp.float32)
+    xf = x_t.astype(jnp.float32)
+    if ef.ndim == 1:
+        return ef - daf @ xf
+    return ef - daf.T @ xf
 
 
 def ref_score_features(x_t: jax.Array, e: jax.Array, inv_cn: jax.Array):

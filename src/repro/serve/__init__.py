@@ -1,0 +1,41 @@
+"""repro.serve — batched multi-tenant solver-serving engine.
+
+Turns the BAK solver library into a serving system: many concurrent
+``SolveRequest``s are bucketed by padded power-of-two shape, same-design
+requests are coalesced into one multi-RHS core solve (one stream of ``x``
+serves every tenant that shares it), remaining same-bucket requests are
+vmapped, and per-design state (device copy, column norms, block-Gram
+Cholesky) is memoised in an LRU cache.
+
+Layout:
+  types.py     SolveRequest / ServedSolve records.
+  batching.py  pow-2 shape buckets, exact zero padding, design fingerprints,
+               deterministic request grouping.
+  cache.py     LRU DesignCache of per-design solver state.
+  engine.py    SolverServeEngine — submit/flush front-end.
+
+Drivers: ``repro.launch.solver_serve`` (CLI) and
+``benchmarks/serve_throughput.py`` (coalescing speedup vs sequential solve).
+"""
+from repro.serve.batching import (bucket_shape, design_fingerprint,
+                                  group_requests, next_pow2, pad_x, pad_y)
+from repro.serve.cache import CacheStats, DesignCache, DesignEntry
+from repro.serve.engine import ServeConfig, ServeStats, SolverServeEngine
+from repro.serve.types import ServedSolve, SolveRequest
+
+__all__ = [
+    "CacheStats",
+    "DesignCache",
+    "DesignEntry",
+    "ServeConfig",
+    "ServeStats",
+    "ServedSolve",
+    "SolveRequest",
+    "SolverServeEngine",
+    "bucket_shape",
+    "design_fingerprint",
+    "group_requests",
+    "next_pow2",
+    "pad_x",
+    "pad_y",
+]

@@ -1,0 +1,122 @@
+"""Shape bucketing, padding and design grouping for the serving engine.
+
+Serving traffic arrives with arbitrary (obs, vars) shapes; jitting one
+program per exact shape would recompile unboundedly.  Requests are therefore
+padded up to power-of-two **buckets** — the compile cache is keyed by bucket,
+so the number of distinct compiled programs is logarithmic in the shape range
+actually seen.  Zero padding is exact for least squares:
+
+  * extra zero *rows* contribute nothing to any inner product ⟨x_j, e⟩ or
+    column norm, so the normal equations are unchanged;
+  * extra zero *columns* have zero norm — ``safe_inv`` pins their updates to
+    0 (and ``mode="gram"``'s ridge keeps the block factorisation well-posed),
+    so their coefficients stay exactly 0 and are stripped on the way out;
+  * extra zero *right-hand sides* (multi-RHS k-padding) solve the trivial
+    system with an all-zero coefficient column.
+
+Grouping is deterministic: groups are keyed in first-seen submission order
+(python dict insertion order), so a fixed request list always produces the
+same buckets, the same groups and the same intra-group ordering.
+"""
+from __future__ import annotations
+
+import hashlib
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from repro.serve.types import SolveRequest
+
+Bucket = Tuple[int, int]
+
+
+def next_pow2(n: int, floor: int = 1) -> int:
+    """Smallest power of two ≥ max(n, floor)."""
+    n = max(int(n), int(floor))
+    return 1 << (n - 1).bit_length()
+
+
+def bucket_shape(obs: int, nvars: int, *, min_obs: int = 8,
+                 min_vars: int = 8) -> Bucket:
+    """Padded (obs, vars) bucket for a request shape."""
+    return next_pow2(obs, min_obs), next_pow2(nvars, min_vars)
+
+
+def pad_x(x: np.ndarray, bucket: Bucket) -> np.ndarray:
+    """Zero-pad a design matrix up to ``bucket``.  Returns fp32 numpy."""
+    x = np.asarray(x, np.float32)
+    obs, nvars = x.shape
+    obs_p, vars_p = bucket
+    if (obs, nvars) == (obs_p, vars_p):
+        return x
+    x_pad = np.zeros((obs_p, vars_p), np.float32)
+    x_pad[:obs, :nvars] = x
+    return x_pad
+
+
+def pad_y(y: np.ndarray, obs_p: int) -> np.ndarray:
+    """Zero-pad a right-hand side (obs,) or (obs, k) to ``obs_p`` rows."""
+    y = np.asarray(y, np.float32)
+    if y.shape[0] == obs_p:
+        return y
+    y_pad = np.zeros((obs_p,) + y.shape[1:], np.float32)
+    y_pad[: y.shape[0]] = y
+    return y_pad
+
+
+def design_fingerprint(x, *, _prefix: str = "d") -> str:
+    """Content fingerprint of a design matrix (shape + dtype + bytes).
+
+    Two requests whose ``x`` hash equal are coalesced into one multi-RHS
+    solve and share one design-cache entry.  Callers that already know two
+    matrices are identical can skip this by setting
+    ``SolveRequest.design_key``.
+    """
+    a = np.ascontiguousarray(np.asarray(x))
+    h = hashlib.blake2b(digest_size=16)
+    h.update(str((a.shape, a.dtype.str)).encode())
+    h.update(a.view(np.uint8).data)
+    return f"{_prefix}:{h.hexdigest()}"
+
+
+def request_bucket(req: SolveRequest, *, min_obs: int = 8,
+                   min_vars: int = 8) -> Bucket:
+    obs, nvars = np.asarray(req.x).shape
+    return bucket_shape(obs, nvars, min_obs=min_obs, min_vars=min_vars)
+
+
+def config_key(req: SolveRequest, bucket: Bucket) -> Tuple:
+    """Outer grouping key: only the knobs the request's method consumes.
+
+    Direct methods ("lstsq"/"normal") ignore every iteration knob, so any
+    mix of per-tenant max_iter/rtol/thr still coalesces into one multi-RHS
+    solve; "bak" additionally ignores ``thr``.  bucket and method always
+    lead (the engine reads outer[0]/outer[1]).
+    """
+    if req.method in ("lstsq", "normal"):
+        return (bucket, req.method)
+    if req.method == "bak":
+        return (bucket, req.method, req.max_iter, float(req.atol),
+                float(req.rtol))
+    return (bucket, req.method, req.max_iter, float(req.atol),
+            float(req.rtol), int(req.thr))
+
+
+def group_requests(
+    requests: List[SolveRequest], *, min_obs: int = 8, min_vars: int = 8,
+) -> Dict[Tuple, Dict[str, List[int]]]:
+    """Group request indices: (bucket, method-config) → design key → [idx].
+
+    The outer key (``config_key``) includes exactly the solver knobs the
+    method consumes, so only requests that can legally share one compiled
+    solve land in the same group; the inner key is the design fingerprint
+    (or caller-supplied ``design_key``).  Insertion order of both levels
+    follows first occurrence in ``requests``.
+    """
+    groups: Dict[Tuple, Dict[str, List[int]]] = {}
+    for i, req in enumerate(requests):
+        bucket = request_bucket(req, min_obs=min_obs, min_vars=min_vars)
+        key = req.design_key or design_fingerprint(req.x)
+        groups.setdefault(config_key(req, bucket), {}).setdefault(
+            key, []).append(i)
+    return groups

@@ -1,0 +1,118 @@
+"""Design cache — memoised per-design solver state for repeated-X traffic.
+
+Serving workloads are dominated by repeated design matrices (the same
+feature matrix queried with many targets: probes, ablations, per-user
+heads).  Everything about a solve that depends only on ``x`` is therefore
+cached across requests, keyed by the design fingerprint:
+
+  * the padded device-resident copy of ``x`` (skips re-pad + host→device
+    transfer on every request);
+  * the squared column norms (the O(obs·vars) pass of Algorithm 1 line 3);
+  * the per-block Gram Cholesky factors for ``mode="gram"`` — the
+    O(obs·vars·thr) factorisation that dominates small-iteration solves,
+    computed once per (thr, ridge) and reused by every later request.
+
+Entries are LRU-evicted so memory is bounded by ``max_entries`` designs.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.solvebakp import block_gram_cholesky
+from repro.core.types import column_norms_sq
+
+
+@dataclass
+class DesignEntry:
+    """Cached per-design state.  ``x_pad`` is bucket-padded, fp32, on device."""
+
+    x_pad: jax.Array                      # (obs_p, vars_p)
+    cn: jax.Array                         # (vars_p,) squared column norms
+    chol: Dict[Tuple[int, float], jax.Array] = field(default_factory=dict)
+    _cn_thr: Dict[int, jax.Array] = field(default_factory=dict)
+
+    def cn_for_thr(self, thr: int) -> jax.Array:
+        """Column norms extended to solvebakp's thr-multiple padding."""
+        vars_p = self.x_pad.shape[1]
+        nblocks = -(-vars_p // thr)
+        pad = nblocks * thr - vars_p
+        if pad == 0:
+            return self.cn
+        if thr not in self._cn_thr:
+            self._cn_thr[thr] = jnp.concatenate(
+                [self.cn, jnp.zeros((pad,), jnp.float32)])
+        return self._cn_thr[thr]
+
+    def chol_for(self, thr: int, ridge: float) -> jax.Array:
+        """Block-Gram Cholesky factors for (thr, ridge), computed once."""
+        key = (int(thr), float(ridge))
+        if key not in self.chol:
+            obs_p, vars_p = self.x_pad.shape
+            nblocks = -(-vars_p // thr)
+            pad = nblocks * thr - vars_p
+            x = self.x_pad
+            if pad:
+                x = jnp.pad(x, ((0, 0), (0, pad)))
+            xb = x.reshape(obs_p, nblocks, thr)
+            self.chol[key] = block_gram_cholesky(xb, ridge)
+        return self.chol[key]
+
+
+@dataclass
+class CacheStats:
+    hits: int = 0
+    misses: int = 0
+    evictions: int = 0
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+
+class DesignCache:
+    """LRU cache: design key → ``DesignEntry``."""
+
+    def __init__(self, max_entries: int = 64):
+        self.max_entries = max_entries
+        self.stats = CacheStats()
+        self._entries: "OrderedDict[str, DesignEntry]" = OrderedDict()
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def get(self, key: str) -> Optional[DesignEntry]:
+        entry = self._entries.get(key)
+        if entry is None:
+            self.stats.misses += 1
+            return None
+        self._entries.move_to_end(key)
+        self.stats.hits += 1
+        return entry
+
+    def put(self, key: str, entry: DesignEntry) -> DesignEntry:
+        self._entries[key] = entry
+        self._entries.move_to_end(key)
+        while len(self._entries) > self.max_entries:
+            self._entries.popitem(last=False)
+            self.stats.evictions += 1
+        return entry
+
+    def get_or_build(self, key: str, build_x_pad) -> Tuple[DesignEntry, bool]:
+        """Fetch the entry for ``key``, building it on miss.
+
+        ``build_x_pad`` is a zero-arg callable returning the bucket-padded
+        design matrix — only invoked on a miss, so hits skip the host-side
+        padding entirely.  Returns (entry, cache_hit).
+        """
+        entry = self.get(key)
+        if entry is not None:
+            return entry, True
+        x_pad = jnp.asarray(build_x_pad(), jnp.float32)
+        entry = DesignEntry(x_pad=x_pad, cn=column_norms_sq(x_pad))
+        return self.put(key, entry), False

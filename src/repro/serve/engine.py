@@ -1,0 +1,344 @@
+"""Batched multi-tenant solver-serving engine.
+
+``SolverServeEngine`` turns a stream of per-tenant ``SolveRequest``s into a
+small number of compiled batch solves:
+
+  1. **Bucketing** — requests are grouped by padded power-of-two shape (and
+     solver config), so the jit compile cache is bounded by the number of
+     buckets seen, not the number of distinct request shapes.
+  2. **Same-design coalescing** — requests whose design matrix fingerprints
+     match are merged into ONE multi-RHS solve: ``y`` becomes (obs, k) and a
+     single stream of ``x`` (the solver's entire memory traffic) serves all
+     k tenants.  k is itself padded to a power of two to bound recompiles.
+  3. **Same-bucket vmap batching** — leftover single-design requests in a
+     bucket are stacked and solved with one vmapped call (batch padded to a
+     power of two by replicating the last system; replicas are discarded).
+  4. **Design caching** — everything that depends only on ``x`` (device
+     copy, column norms, block-Gram Cholesky factors) is memoised across
+     flushes in an LRU ``DesignCache``.
+
+Results come back as per-request ``ServedSolve``s, in submission order, with
+padding stripped and per-request SSE recomputed from the stripped residual.
+
+Example::
+
+    engine = SolverServeEngine()
+    for x, y in workload:
+        engine.submit(SolveRequest(x=x, y=y, method="bakp_gram", rtol=1e-8))
+    for served in engine.flush():
+        use(served.coef)
+"""
+from __future__ import annotations
+
+import functools
+import math
+import time
+from dataclasses import dataclass
+from typing import List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.api import _METHODS, solve
+from repro.core.solvebak import solvebak
+from repro.core.solvebakp import solvebakp
+from repro.serve.batching import group_requests, next_pow2, pad_x, pad_y
+from repro.serve.cache import DesignCache, DesignEntry
+from repro.serve.types import ServedSolve, SolveRequest
+
+# Methods that can be vmap-batched across designs.  Same-design multi-RHS
+# coalescing applies to every method (all of them accept y of shape (obs, k)).
+_BATCHABLE = ("bak", "bakp", "bakp_gram")
+
+
+@dataclass
+class ServeConfig:
+    """Engine-level knobs (per-request solver knobs live on SolveRequest)."""
+
+    omega: float = 1.0
+    ridge: float = 1e-6
+    min_obs: int = 8
+    min_vars: int = 8
+    coalesce: bool = True        # same-design requests → one multi-RHS solve
+    vmap_batch: bool = True      # same-bucket singles → one vmapped solve
+    max_vmap_batch: int = 64     # cap on vmapped batch size (memory bound)
+    cache_entries: int = 64      # LRU design-cache capacity
+
+
+@dataclass
+class ServeStats:
+    requests: int = 0
+    solver_calls: int = 0
+    multi_rhs_groups: int = 0
+    multi_rhs_requests: int = 0
+    vmap_batches: int = 0
+    vmap_requests: int = 0
+    single_solves: int = 0
+
+
+@functools.lru_cache(maxsize=32)
+def _vmapped_solver(method: str, max_iter: int, rtol: float, thr: int,
+                    omega: float, ridge: float):
+    """jit(vmap(...)) batch solver for one static solver config.
+
+    Module-level lru_cache keeps the function object (and therefore the jit
+    compile cache) stable across engine instances and flushes; the bounded
+    maxsize caps memory when tenants send many distinct knob combinations
+    (evicting the wrapper releases its jit executables).  ``atol`` is a
+    *traced per-element* argument (not part of the cache key): requests in
+    one bucket can have different real obs, so each gets its own
+    padding-corrected absolute tolerance without recompiling.
+    """
+    if method == "bak":
+        def one(x, y, cn, atol):
+            return solvebak(x, y, max_iter=max_iter, atol=atol, rtol=rtol,
+                            cn=cn)
+    elif method == "bakp":
+        def one(x, y, cn, atol):
+            return solvebakp(x, y, thr=thr, max_iter=max_iter, atol=atol,
+                             rtol=rtol, omega=omega, mode="jacobi", cn=cn)
+    elif method == "bakp_gram":
+        def one(x, y, cn, atol, chol):
+            return solvebakp(x, y, thr=thr, max_iter=max_iter, atol=atol,
+                             rtol=rtol, omega=omega, mode="gram", ridge=ridge,
+                             cn=cn, chol=chol)
+    else:
+        raise ValueError(f"method {method!r} is not vmap-batchable")
+    return jax.jit(jax.vmap(one))
+
+
+class SolverServeEngine:
+    """Multi-tenant batched serving front-end for the BAK solver family."""
+
+    def __init__(self, config: Optional[ServeConfig] = None):
+        self.config = config or ServeConfig()
+        self.cache = DesignCache(max_entries=self.config.cache_entries)
+        self.stats = ServeStats()
+        self._pending: List[SolveRequest] = []
+        self._seq = 0
+
+    # ------------------------------------------------------------- intake
+    def submit(self, request: SolveRequest) -> str:
+        """Queue a request; returns its (possibly auto-assigned) id.
+
+        ``x``/``y`` are normalised to host numpy here, once — every later
+        ``np.asarray`` in the flush path is then a free view, even when the
+        caller handed us device arrays.
+        """
+        x = request.x = np.asarray(request.x)
+        if x.ndim != 2:
+            raise ValueError(f"request x must be 2D (obs, vars), got {x.shape}")
+        y = request.y = np.asarray(request.y)
+        if y.ndim != 1 or y.shape[0] != x.shape[0]:
+            raise ValueError(
+                f"request y must be (obs,) matching x rows, got {y.shape} "
+                f"for x {x.shape}")
+        if request.method not in _METHODS:
+            raise ValueError(
+                f"method must be one of {_METHODS}, got {request.method!r}")
+        if request.request_id is None:
+            request.request_id = f"req-{self._seq}"
+        self._seq += 1
+        self._pending.append(request)
+        return request.request_id
+
+    def serve(self, requests: Sequence[SolveRequest]) -> List[ServedSolve]:
+        """submit() every request, then flush()."""
+        for r in requests:
+            self.submit(r)
+        return self.flush()
+
+    # -------------------------------------------------------------- flush
+    def flush(self) -> List[ServedSolve]:
+        """Execute all pending requests; results in submission order."""
+        requests, self._pending = self._pending, []
+        if not requests:
+            return []
+        self.stats.requests += len(requests)
+        results: List[Optional[ServedSolve]] = [None] * len(requests)
+        cfg = self.config
+        groups = group_requests(requests, min_obs=cfg.min_obs,
+                                min_vars=cfg.min_vars)
+        for outer, designs in groups.items():
+            bucket = outer[0]
+            method = outer[1]
+            singles = []  # (idx, entry, cache_hit)
+            for key, idxs in designs.items():
+                entry, hit = self._design_entry(key, requests[idxs[0]], bucket)
+                if cfg.coalesce and len(idxs) > 1:
+                    self._solve_multi_rhs(requests, idxs, entry, hit, bucket,
+                                          results)
+                else:
+                    singles.extend((i, entry, hit) for i in idxs)
+            if cfg.vmap_batch and len(singles) > 1 and method in _BATCHABLE:
+                for lo in range(0, len(singles), cfg.max_vmap_batch):
+                    chunk = singles[lo:lo + cfg.max_vmap_batch]
+                    if len(chunk) > 1:
+                        self._solve_vmapped(requests, chunk, bucket, results)
+                    else:
+                        self._solve_one(requests, *chunk[0], bucket, results)
+            else:
+                for idx, entry, hit in singles:
+                    self._solve_one(requests, idx, entry, hit, bucket, results)
+        assert all(r is not None for r in results)
+        return results
+
+    # ---------------------------------------------------------- internals
+    def _design_entry(self, key, req, bucket):
+        return self.cache.get_or_build(
+            key, lambda: pad_x(np.asarray(req.x), bucket))
+
+    @staticmethod
+    def _padded_atol(atol: float, n_real: int, n_padded: int) -> float:
+        """Correct an absolute RMSE tolerance for zero padding.
+
+        The solvers compare total SSE against ``n_padded * atol²``, but only
+        ``n_real`` of those elements carry signal (padding rows/RHS hold
+        exactly zero residual), so the raw threshold would be inflated by
+        n_padded/n_real.  Scaling atol by sqrt(n_real/n_padded) makes the
+        padded criterion equal the unpadded one.  ``rtol`` needs no
+        correction (padding contributes 0 to both sides of the ratio).
+        """
+        if atol <= 0.0 or n_real == n_padded:
+            return atol
+        return atol * math.sqrt(n_real / n_padded)
+
+    def _call_solver(self, req: SolveRequest, entry: DesignEntry, y_dev,
+                     atol: float):
+        """One (possibly multi-RHS) solve on the padded design.
+
+        ``atol`` is the padding-corrected absolute tolerance (see
+        ``_padded_atol``); ``req.atol`` itself must not be used here.
+        """
+        cfg = self.config
+        m = req.method
+        if m == "bak":
+            return solvebak(entry.x_pad, y_dev, max_iter=req.max_iter,
+                            atol=atol, rtol=req.rtol, cn=entry.cn)
+        if m == "bakp":
+            return solvebakp(entry.x_pad, y_dev, thr=req.thr,
+                             max_iter=req.max_iter, atol=atol,
+                             rtol=req.rtol, omega=cfg.omega, mode="jacobi",
+                             cn=entry.cn_for_thr(req.thr))
+        if m == "bakp_gram":
+            return solvebakp(entry.x_pad, y_dev, thr=req.thr,
+                             max_iter=req.max_iter, atol=atol,
+                             rtol=req.rtol, omega=cfg.omega, mode="gram",
+                             ridge=cfg.ridge, cn=entry.cn_for_thr(req.thr),
+                             chol=entry.chol_for(req.thr, cfg.ridge))
+        # Direct baselines ride the cached padded design but not cn/chol
+        # (atol is an iteration knob; direct methods don't use it).
+        return solve(entry.x_pad, y_dev, method=m, max_iter=req.max_iter)
+
+    def _strip(self, req: SolveRequest, coef, residual, *, bucket, kind,
+               group_size, latency, hit, n_sweeps, converged) -> ServedSolve:
+        obs, nvars = np.asarray(req.x).shape
+        coef = np.asarray(coef)[:nvars]
+        residual = np.asarray(residual)[:obs]
+        return ServedSolve(
+            request_id=req.request_id,
+            coef=coef,
+            residual=residual,
+            sse=float(np.dot(residual, residual)),
+            n_sweeps=int(n_sweeps),
+            converged=bool(converged),
+            bucket=bucket,
+            batch_kind=kind,
+            group_size=group_size,
+            latency_s=latency,
+            cache_hit=hit,
+        )
+
+    def _solve_multi_rhs(self, requests, idxs, entry, hit, bucket, results):
+        """Coalesce same-design requests into one (obs, k_pad) solve."""
+        obs_p = bucket[0]
+        k = len(idxs)
+        k_pad = next_pow2(k)
+        ys = np.zeros((obs_p, k_pad), np.float32)
+        for c, idx in enumerate(idxs):
+            y = np.asarray(requests[idx].y, np.float32)
+            ys[: y.shape[0], c] = y
+        req0 = requests[idxs[0]]
+        # Same design => same real obs for every member of the group.
+        obs_real = np.asarray(req0.x).shape[0]
+        atol = self._padded_atol(req0.atol, obs_real * k, obs_p * k_pad)
+        t0 = time.perf_counter()
+        res = self._call_solver(req0, entry, jnp.asarray(ys), atol)
+        jax.block_until_ready(res.coef)
+        dt = time.perf_counter() - t0
+        coef = np.asarray(res.coef)
+        resid = np.asarray(res.residual)
+        for c, idx in enumerate(idxs):
+            results[idx] = self._strip(
+                requests[idx], coef[:, c], resid[:, c], bucket=bucket,
+                kind="multi_rhs", group_size=k, latency=dt, hit=hit,
+                n_sweeps=res.n_sweeps, converged=res.converged)
+        self.stats.solver_calls += 1
+        self.stats.multi_rhs_groups += 1
+        self.stats.multi_rhs_requests += k
+
+    def _solve_vmapped(self, requests, singles, bucket, results):
+        """Stack same-bucket single-design requests into one vmapped solve."""
+        obs_p = bucket[0]
+        req0 = requests[singles[0][0]]
+        b = len(singles)
+        b_pad = next_pow2(b)
+        # Pad the batch by replicating the last system (discarded below) so
+        # the vmapped program only ever compiles for power-of-two batches.
+        padded = singles + [singles[-1]] * (b_pad - b)
+        xs = jnp.stack([entry.x_pad for _, entry, _ in padded])
+        ys = jnp.asarray(np.stack(
+            [pad_y(np.asarray(requests[i].y, np.float32), obs_p)
+             for i, _, _ in padded]))
+        m = req0.method
+        solver = _vmapped_solver(m, req0.max_iter, float(req0.rtol),
+                                 int(req0.thr), float(self.config.omega),
+                                 float(self.config.ridge))
+        # Per-element padding-corrected atol (real obs varies within a
+        # bucket); traced, so it never forces a recompile.
+        atols = jnp.asarray([
+            self._padded_atol(req0.atol, np.asarray(requests[i].x).shape[0],
+                              obs_p)
+            for i, _, _ in padded], dtype=jnp.float32)
+        if m == "bakp_gram":
+            cns = jnp.stack([e.cn_for_thr(req0.thr) for _, e, _ in padded])
+            chols = jnp.stack(
+                [e.chol_for(req0.thr, self.config.ridge) for _, e, _ in padded])
+            args = (xs, ys, cns, atols, chols)
+        elif m == "bakp":
+            cns = jnp.stack([e.cn_for_thr(req0.thr) for _, e, _ in padded])
+            args = (xs, ys, cns, atols)
+        else:  # "bak"
+            cns = jnp.stack([e.cn for _, e, _ in padded])
+            args = (xs, ys, cns, atols)
+        t0 = time.perf_counter()
+        res = solver(*args)
+        jax.block_until_ready(res.coef)
+        dt = time.perf_counter() - t0
+        coef = np.asarray(res.coef)
+        resid = np.asarray(res.residual)
+        for row, (idx, _, hit) in enumerate(singles):
+            results[idx] = self._strip(
+                requests[idx], coef[row], resid[row], bucket=bucket,
+                kind="vmap", group_size=b, latency=dt, hit=hit,
+                n_sweeps=res.n_sweeps[row], converged=res.converged[row])
+        self.stats.solver_calls += 1
+        self.stats.vmap_batches += 1
+        self.stats.vmap_requests += b
+
+    def _solve_one(self, requests, idx, entry, hit, bucket, results):
+        req = requests[idx]
+        obs_real = np.asarray(req.x).shape[0]
+        y_pad = pad_y(np.asarray(req.y, np.float32), bucket[0])
+        atol = self._padded_atol(req.atol, obs_real, bucket[0])
+        t0 = time.perf_counter()
+        res = self._call_solver(req, entry, jnp.asarray(y_pad), atol)
+        jax.block_until_ready(res.coef)
+        dt = time.perf_counter() - t0
+        results[idx] = self._strip(
+            req, res.coef, res.residual, bucket=bucket, kind="single",
+            group_size=1, latency=dt, hit=hit, n_sweeps=res.n_sweeps,
+            converged=res.converged)
+        self.stats.solver_calls += 1
+        self.stats.single_solves += 1

@@ -1,0 +1,75 @@
+"""Request/response records for the solver-serving engine.
+
+A ``SolveRequest`` is one tenant's system ``x @ a ≈ y``; the engine groups
+requests into padded shape buckets, coalesces requests that share a design
+matrix into one multi-RHS solve, and returns one ``ServedSolve`` per request
+with all padding stripped and per-request accuracy/latency metadata attached.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Optional
+
+import numpy as np
+
+
+@dataclass
+class SolveRequest:
+    """One solve request.
+
+    Attributes:
+      x: (obs, vars) design matrix (numpy or jax array).
+      y: (obs,) right-hand side.
+      method: solver method — "bak", "bakp", "bakp_gram", "lstsq" or
+        "normal" (same namespace as ``repro.core.solve``).  Requests are
+        only coalesced/batched with requests using the same method.
+      max_iter / atol / rtol / thr: solver knobs (see ``repro.core``).
+      design_key: optional caller-provided identity for ``x``.  When two
+        requests carry the same key the engine trusts it and skips hashing
+        the matrix bytes; leave None to let the engine fingerprint ``x``.
+      request_id: optional caller tag, echoed on the result.
+    """
+
+    x: Any
+    y: Any
+    method: str = "bakp_gram"
+    max_iter: int = 50
+    atol: float = 0.0
+    rtol: float = 0.0
+    thr: int = 128
+    design_key: Optional[str] = None
+    request_id: Optional[str] = None
+
+
+@dataclass
+class ServedSolve:
+    """Per-request result, padding stripped back to the request's shapes.
+
+    ``batch_kind`` records how the request was executed:
+      "multi_rhs" — coalesced with same-design requests into one (obs, k)
+                    multi-RHS solve;
+      "vmap"      — stacked with same-bucket (different-design) requests
+                    into one vmapped batch solve;
+      "single"    — solved alone.
+    ``latency_s`` is the wall time of the batch solve the request rode in
+    (shared by all members of the batch); ``group_size`` its occupancy.
+
+    For a coalesced ("multi_rhs") request, ``n_sweeps``/``converged`` are
+    group-level: the solver's stopping criterion is the group-total SSE
+    (with the absolute tolerance corrected for padding), so an individual
+    tenant in a group is not guaranteed its own per-column atol.  ``sse``
+    is always this request's own, recomputed from the stripped residual.
+    """
+
+    request_id: str
+    coef: np.ndarray
+    residual: np.ndarray
+    sse: float
+    n_sweeps: int
+    converged: bool
+    bucket: tuple = (0, 0)
+    batch_kind: str = "single"
+    group_size: int = 1
+    latency_s: float = 0.0
+    cache_hit: bool = False
+    extra: dict = field(default_factory=dict)

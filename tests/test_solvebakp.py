@@ -3,7 +3,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+# hypothesis is optional (requirements-dev.txt): only the property test
+# skips without it; the deterministic solver tests always run.
+try:
+    from hypothesis import given, settings, strategies as st
+    HAS_HYPOTHESIS = True
+except ImportError:
+    HAS_HYPOTHESIS = False
 
 from conftest import make_system
 from repro.core import solvebakp
@@ -60,19 +67,24 @@ class TestSolveBakP:
         np.testing.assert_allclose(np.array(chol @ chol.transpose(0, 2, 1)),
                                    g, rtol=1e-3, atol=1e-3)
 
-    @settings(max_examples=20, deadline=None)
-    @given(obs=st.integers(24, 200), nvars=st.integers(2, 40),
-           thr=st.sampled_from([2, 4, 8]), seed=st.integers(0, 2**30))
-    def test_property_monotone_and_bounded(self, obs, nvars, thr, seed):
-        """Property (Theorem 1): for any random system, SSE after any number
-        of gram-mode sweeps is non-increasing and ≤ ||y||²."""
-        r = np.random.default_rng(seed)
-        x = r.normal(size=(obs, nvars)).astype(np.float32)
-        y = r.normal(size=(obs,)).astype(np.float32)
-        res = solvebakp(jnp.array(x), jnp.array(y), thr=thr, max_iter=10,
-                        mode="gram")
-        h = np.array(res.history)
-        h = h[~np.isnan(h)]
-        y2 = float(np.sum(y * y))
-        assert h[0] <= y2 * (1 + 1e-4) + 1e-4
-        assert np.all(np.diff(h) <= 1e-3 * h[:-1] + 1e-5)
+    if HAS_HYPOTHESIS:
+        @settings(max_examples=20, deadline=None)
+        @given(obs=st.integers(24, 200), nvars=st.integers(2, 40),
+               thr=st.sampled_from([2, 4, 8]), seed=st.integers(0, 2**30))
+        def test_property_monotone_and_bounded(self, obs, nvars, thr, seed):
+            """Property (Theorem 1): for any random system, SSE after any
+            number of gram-mode sweeps is non-increasing and ≤ ||y||²."""
+            r = np.random.default_rng(seed)
+            x = r.normal(size=(obs, nvars)).astype(np.float32)
+            y = r.normal(size=(obs,)).astype(np.float32)
+            res = solvebakp(jnp.array(x), jnp.array(y), thr=thr, max_iter=10,
+                            mode="gram")
+            h = np.array(res.history)
+            h = h[~np.isnan(h)]
+            y2 = float(np.sum(y * y))
+            assert h[0] <= y2 * (1 + 1e-4) + 1e-4
+            assert np.all(np.diff(h) <= 1e-3 * h[:-1] + 1e-5)
+    else:
+        @pytest.mark.skip(reason="hypothesis not installed")
+        def test_property_monotone_and_bounded(self):
+            pass
