@@ -133,7 +133,6 @@ def convergence_profile() -> List[Dict]:
     for method, kw in (("bak", {}), ("bakp", {"thr": 32, "omega": 0.7}),
                        ("bakp_gram", {"thr": 128})):
         res = solve(xj, yj, method=method, max_iter=100, atol=1e-2, **kw)
-        h = np.array(res.history)
         out.append({"method": method,
                     "sweeps_to_tol": int(res.n_sweeps),
                     "final_rmse": float(np.sqrt(res.sse / 4000)),

@@ -8,7 +8,6 @@ readable summary per section.
 from __future__ import annotations
 
 import argparse
-import sys
 
 
 def main() -> None:

@@ -12,6 +12,8 @@ compile time.
 
 Prints ``name,us_per_call,derived`` CSV rows like ``benchmarks.run`` and
 exits non-zero if speedup < 5x or any per-request MAPE vs lstsq > 1e-3.
+``--smoke`` (CI) gates on MAPE <= 1e-4 only — wall-clock speedup ratios on
+shared runners are noise — and still reports the speedup.
 """
 from __future__ import annotations
 
@@ -93,13 +95,24 @@ def run(obs=2048, nvars=256, n_requests=64, method="bakp_gram", thr=128,
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true", help="smaller system")
+    ap.add_argument("--smoke", action="store_true",
+                    help="--fast sizes + MAPE-only gate (CI: wall-clock "
+                         "speedup ratios are noise on shared runners)")
     ap.add_argument("--requests", type=int, default=64)
     ap.add_argument("--method", default="bakp_gram")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="merge metrics into a JSON report (BENCH_serve.json)")
     args = ap.parse_args()
 
-    obs, nvars = (512, 64) if args.fast else (2048, 256)
+    obs, nvars = (512, 64) if (args.fast or args.smoke) else (2048, 256)
     r = run(obs=obs, nvars=nvars, n_requests=args.requests,
             method=args.method)
+    if args.json:
+        try:
+            from benchmarks.serve_async import write_json
+        except ImportError:  # run as a bare script instead of -m
+            from serve_async import write_json
+        write_json(args.json, {"throughput": r})
 
     print("name,us_per_call,derived")
     tag = f"serve[o{r['obs']}xv{r['vars']}k{r['n_requests']}/{r['method']}]"
@@ -109,6 +122,12 @@ def main():
     print(f"{tag}/engine,{r['engine_s']/r['n_requests']*1e6:.0f},"
           f"solves_per_s={r['engine_solves_per_s']:.1f};"
           f"mape={r['mape_worst']:.2e};speedup={r['speedup']:.2f}")
+    if args.smoke:
+        ok = r["mape_worst"] <= 1e-4
+        print(f"acceptance (smoke): worst_mape={r['mape_worst']:.2e} "
+              f"(<=1e-4) -> {'PASS' if ok else 'FAIL'} "
+              f"(speedup={r['speedup']:.2f}x, informational)")
+        return 0 if ok else 1
     ok = r["speedup"] >= 5.0 and r["mape_worst"] <= 1e-3
     print(f"acceptance: speedup={r['speedup']:.2f}x (>=5x) "
           f"worst_mape={r['mape_worst']:.2e} (<=1e-3) -> "

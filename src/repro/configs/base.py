@@ -7,7 +7,7 @@ smoke variants are derived with ``.smoke()``.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Tuple
 
 # ---------------------------------------------------------------------------
 # Input-shape cells (assigned to every LM arch; DESIGN.md §5 lists the skips).

@@ -18,6 +18,14 @@ All methods accept ``y`` of shape (obs,) or (obs, k): the multi-RHS form
 solves k systems against the same design matrix in one pass over ``x``
 (coef/residual come back as (vars, k)/(obs, k)).  ``repro.serve`` builds its
 same-design request coalescing on this.
+
+The iterative methods accept ``a0`` initial coefficients ((vars,) or
+(vars, k)) and start from that point instead of zeros — the warm-start
+primitive behind ``repro.serve``'s per-tenant coefficient retention: a
+tenant re-solving against the same design with a slightly-drifted ``y``
+converges in a fraction of the cold sweeps, something one-shot
+sketching/direct solvers structurally cannot exploit.  Direct methods
+ignore ``a0``.
 """
 from __future__ import annotations
 
@@ -83,13 +91,16 @@ def fit_linear_probe(
     max_iter: int = 64,
     rtol: float = 1e-7,
     thr: int = 128,
+    a0: Optional[jax.Array] = None,
 ) -> SolveResult:
     """Fit a linear readout ``features @ a ≈ targets``.
 
     ``features``: (tokens, d) frozen backbone activations (tall system —
     exactly the paper's regression setting).  ``targets``: (tokens,) scalar
     target (e.g. a logit, a value-head label, a probe class margin).
+    ``a0``: optional (d,) warm start — pass the previous fit's ``coef`` when
+    re-fitting the probe on a grown activation buffer.
     """
     feats = features.reshape(-1, features.shape[-1])
     return solve(feats, targets.reshape(-1), method=method,
-                 max_iter=max_iter, rtol=rtol, thr=thr)
+                 max_iter=max_iter, rtol=rtol, thr=thr, a0=a0)

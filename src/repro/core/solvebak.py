@@ -60,7 +60,8 @@ def solvebak(
         ``0`` disables.
       rtol: relative per-sweep improvement tolerance; converged when
         ``(sse_prev - sse) <= rtol * sse_prev``.  ``0`` disables.
-      a0: optional (vars,) / (vars, k) initial guess (paper line 1: zeros).
+      a0: optional (vars,) / (vars, k) initial guess (paper line 1: zeros);
+        a (vars,) guess with multi-RHS ``y`` broadcasts across all k.
       order: "cyclic" (paper Algorithm 1) or "random" (paper §2, randomly
         selected indices; requires ``key``).
       key: PRNG key for ``order="random"``.
@@ -89,6 +90,10 @@ def solvebak(
     multi = y.ndim == 2
     nrhs = y.shape[1] if multi else 1
     y2 = y.reshape(obs, nrhs)
+    if a0 is not None and a0.shape not in ((nvars,), (nvars, nrhs)):
+        raise ValueError(
+            f"a0 must be ({nvars},) or ({nvars}, {nrhs}) matching x columns "
+            f"and y RHS count, got {a0.shape}")
 
     if cn is None:
         cn = column_norms_sq(x)
@@ -96,8 +101,9 @@ def solvebak(
 
     if a0 is None:
         a = jnp.zeros((nvars, nrhs), jnp.float32)
-    else:
-        a = a0.astype(jnp.float32).reshape(nvars, nrhs)
+    else:  # (vars,) broadcasts across all right-hand sides
+        a = jnp.broadcast_to(
+            a0.astype(jnp.float32).reshape(nvars, -1), (nvars, nrhs))
     e0 = y2.astype(jnp.float32) - x.astype(jnp.float32) @ a  # paper line 2
     sse0 = jnp.vdot(e0, e0)
     history0 = jnp.full((max_iter,), jnp.nan, jnp.float32)

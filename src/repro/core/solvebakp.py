@@ -106,7 +106,8 @@ def solvebakp(
       omega: relaxation factor applied to every block update (1.0 = paper).
       mode: "jacobi" (paper Algorithm 2) or "gram" (exact block CD).
       ridge: diagonal regulariser for mode="gram".
-      a0: optional initial coefficients, (vars,) or (vars, k).
+      a0: optional initial coefficients, (vars,) or (vars, k); a (vars,)
+        guess with multi-RHS ``y`` broadcasts across all k.
       cn: optional precomputed squared column norms of the *padded* matrix,
         shape (nblocks*thr,) — see ``repro.serve.cache``.
       chol: optional precomputed ``block_gram_cholesky(xb, ridge)`` factors,
@@ -123,6 +124,10 @@ def solvebakp(
     multi = y.ndim == 2
     nrhs = y.shape[1] if multi else 1
     y2 = y.reshape(obs, nrhs)
+    if a0 is not None and a0.shape not in ((nvars,), (nvars, nrhs)):
+        raise ValueError(
+            f"a0 must be ({nvars},) or ({nvars}, {nrhs}) matching x columns "
+            f"and y RHS count, got {a0.shape}")
     x_pad, mask, nblocks = _pad_cols(x, thr)
     xb = x_pad.reshape(obs, nblocks, thr)
 
@@ -140,8 +145,9 @@ def solvebakp(
         raise ValueError(f"unknown mode {mode!r}")
 
     a = jnp.zeros((nblocks * thr, nrhs), jnp.float32)
-    if a0 is not None:
-        a = a.at[:nvars].set(a0.astype(jnp.float32).reshape(nvars, nrhs))
+    if a0 is not None:  # (vars,) broadcasts across all right-hand sides
+        a = a.at[:nvars].set(jnp.broadcast_to(
+            a0.astype(jnp.float32).reshape(nvars, -1), (nvars, nrhs)))
     e0 = y2.astype(jnp.float32) - x_pad.astype(jnp.float32) @ a
     sse0 = jnp.vdot(e0, e0)
     history0 = jnp.full((max_iter,), jnp.nan, jnp.float32)

@@ -10,10 +10,8 @@ training example to show loss descent).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator, Optional, Tuple
+from typing import Dict
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 

@@ -9,7 +9,7 @@ convergence.  Applied selectively to the cross-pod psum inside
 """
 from __future__ import annotations
 
-from typing import Any, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

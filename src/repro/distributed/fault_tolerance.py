@@ -18,7 +18,7 @@ from __future__ import annotations
 import collections
 import signal
 import time
-from typing import Any, Callable, Dict, Optional
+from typing import Any, Dict, Optional
 
 import numpy as np
 

@@ -6,7 +6,7 @@ batch-like and FSDP sharding so the same model code lowers on the single-pod
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Sequence, Tuple, Union
+from typing import Dict, Tuple, Union
 
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 

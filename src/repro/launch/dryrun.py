@@ -21,7 +21,6 @@ MODEL_FLOPS and the useful-flops ratio.
 import argparse
 import json
 import re
-import sys
 import time
 from typing import Dict
 

@@ -326,7 +326,6 @@ class HloCostModel:
             if op in _SKIP:
                 continue
             if op == "while":
-                called = self._called(i)  # [condition, body] order varies
                 body = cond = None
                 mc = re.search(r"condition=%?([\w.\-]+)", i.line)
                 mb = re.search(r"body=%?([\w.\-]+)", i.line)

@@ -1,16 +1,27 @@
 """Solver-serving driver: pump a synthetic multi-tenant request stream
-through ``repro.serve.SolverServeEngine`` and report throughput.
+through ``repro.serve`` and report throughput.
+
+Synchronous windows (the original engine-level driver):
 
     PYTHONPATH=src python -m repro.launch.solver_serve \
         --requests 256 --obs 2048 --vars 256 --designs 8 \
         --method bakp_gram --flush-every 32
+
+Async deadline-aware dispatch (Poisson arrivals through AsyncDispatcher):
+
+    PYTHONPATH=src python -m repro.launch.solver_serve --mode async \
+        --requests 256 --rate 200 --deadline-ms 500 --max-batch 16 \
+        --tenants 32
 
 ``--designs D`` controls design-matrix reuse: requests cycle over D distinct
 matrices, so every flush window sees same-design groups (coalesced into
 multi-RHS solves) and, across windows, warm design-cache hits.  ``--designs``
 equal to ``--requests`` gives a worst-case all-unique stream (pure vmap
 batching); ``--designs 1`` gives the best case (everything rides one
-multi-RHS solve).
+multi-RHS solve).  ``--tenants T`` tags requests with recurring tenant ids,
+so repeated (design, tenant) pairs warm-start from their previous
+coefficients; in async mode each request also carries a deadline and the
+driver reports the deadline hit rate.
 """
 from __future__ import annotations
 
@@ -20,7 +31,8 @@ import time
 import numpy as np
 
 
-def build_requests(rng, xs, n, method, max_iter, rtol, thr, noise=0.0):
+def build_requests(rng, xs, n, method, max_iter, rtol, thr, noise=0.0,
+                   tenants=0, deadline_s=None):
     """Requests cycling over the shared design matrices ``xs``.
 
     ``design_key`` is trusted identity — it must only be reused for the SAME
@@ -40,42 +52,26 @@ def build_requests(rng, xs, n, method, max_iter, rtol, thr, noise=0.0):
             y = y + noise * rng.normal(size=y.shape[0]).astype(np.float32)
         reqs.append(SolveRequest(
             x=xs[d], y=y, method=method, max_iter=max_iter, rtol=rtol,
-            thr=thr, design_key=f"design-{d}", request_id=f"req-{i}"))
+            thr=thr, design_key=f"design-{d}", request_id=f"req-{i}",
+            tenant_id=f"tenant-{i % tenants}" if tenants else None,
+            deadline_s=deadline_s))
     return reqs
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--requests", type=int, default=256)
-    ap.add_argument("--obs", type=int, default=2048)
-    ap.add_argument("--vars", type=int, default=256)
-    ap.add_argument("--designs", type=int, default=8)
-    ap.add_argument("--method", default="bakp_gram",
-                    choices=["bak", "bakp", "bakp_gram", "lstsq", "normal"])
-    ap.add_argument("--max-iter", type=int, default=40)
-    ap.add_argument("--rtol", type=float, default=1e-10)
-    ap.add_argument("--thr", type=int, default=128)
-    ap.add_argument("--flush-every", type=int, default=32,
-                    help="requests per flush window (batching horizon)")
-    ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--check", action="store_true",
-                    help="verify every request vs numpy lstsq (slow)")
-    args = ap.parse_args()
+def report_engine(engine):
+    s = engine.stats
+    print(f"solver calls: {s.solver_calls} "
+          f"(multi_rhs groups={s.multi_rhs_groups} "
+          f"covering {s.multi_rhs_requests} reqs; "
+          f"vmap batches={s.vmap_batches} covering {s.vmap_requests} reqs; "
+          f"singles={s.single_solves}; warm starts={s.warm_starts}; "
+          f"failures={s.failures})")
+    c = engine.cache.stats
+    print(f"design cache: {c.hits} hits / {c.misses} misses "
+          f"(hit rate {c.hit_rate:.1%}), {len(engine.cache)} resident")
 
-    from repro.serve import ServeConfig, SolverServeEngine
 
-    rng = np.random.default_rng(args.seed)
-    engine = SolverServeEngine(ServeConfig())
-    xs = [rng.normal(size=(args.obs, args.vars)).astype(np.float32)
-          for _ in range(args.designs)]
-    reqs = build_requests(rng, xs, args.requests, args.method, args.max_iter,
-                          args.rtol, args.thr)
-
-    # Warmup: compile every (bucket, k, B) program this stream will need.
-    warm = build_requests(rng, xs, min(args.flush_every, args.requests),
-                          args.method, args.max_iter, args.rtol, args.thr)
-    engine.serve(warm)
-
+def run_sync(args, engine, reqs):
     results = []
     t0 = time.perf_counter()
     for lo in range(0, len(reqs), args.flush_every):
@@ -86,26 +82,139 @@ def main():
 
     lat = np.array([r.latency_s for r in results])
     kinds = {k: sum(r.batch_kind == k for r in results)
-             for k in ("multi_rhs", "vmap", "single")}
+             for k in ("multi_rhs", "vmap", "single", "error")}
     print(f"served {len(results)} requests in {wall:.3f}s "
           f"-> {len(results)/wall:.1f} solves/s")
     print(f"latency p50={np.percentile(lat, 50)*1e3:.2f}ms "
           f"p95={np.percentile(lat, 95)*1e3:.2f}ms "
           f"max={lat.max()*1e3:.2f}ms (batch wall time per request)")
     print(f"batch mix: {kinds}")
-    s = engine.stats
-    print(f"solver calls: {s.solver_calls} "
-          f"(multi_rhs groups={s.multi_rhs_groups} "
-          f"covering {s.multi_rhs_requests} reqs; "
-          f"vmap batches={s.vmap_batches} covering {s.vmap_requests} reqs; "
-          f"singles={s.single_solves})")
-    c = engine.cache.stats
-    print(f"design cache: {c.hits} hits / {c.misses} misses "
-          f"(hit rate {c.hit_rate:.1%}), {len(engine.cache)} resident")
+    report_engine(engine)
+    return reqs, results
+
+
+def run_async(args, engine, reqs):
+    """Poisson arrival stream through the deadline-aware dispatcher."""
+    from repro.serve import AsyncDispatcher, DispatchConfig
+
+    rng = np.random.default_rng(args.seed + 1)
+    arrivals = np.cumsum(rng.exponential(1.0 / args.rate, size=len(reqs)))
+    deadline_s = args.deadline_ms / 1e3
+    cfg = DispatchConfig(
+        max_queue=args.max_queue,
+        backpressure=args.backpressure,
+        max_batch=args.max_batch,
+        deadline_margin_s=args.deadline_margin_ms / 1e3,
+        idle_timeout_s=args.idle_timeout_ms / 1e3,
+        default_deadline_s=deadline_s,
+    )
+    tickets = []
+    rejected = 0
+    with AsyncDispatcher(engine, cfg) as disp:
+        t0 = time.perf_counter()
+        base = time.monotonic()
+        for i, req in enumerate(reqs):
+            now = time.perf_counter() - t0
+            if arrivals[i] > now:
+                time.sleep(arrivals[i] - now)
+            try:
+                tickets.append((i, disp.submit(req)))
+            except Exception:  # QueueFullError under "reject"
+                rejected += 1
+        disp.drain()
+        wall = time.perf_counter() - t0
+        results = [t.result(timeout=60.0) for _, t in tickets]
+        stats = disp.stats
+
+    lat = np.array([t.completed_at - base - arrivals[i]
+                    for i, t in tickets])
+    misses = sum(t.deadline_met is False for _, t in tickets)
+    served = len(tickets)
+    print(f"served {served}/{len(reqs)} requests in {wall:.3f}s "
+          f"-> {served/wall:.1f} solves/s "
+          f"(arrival rate {args.rate:.0f}/s, {rejected} rejected)")
+    print(f"request latency p50={np.percentile(lat, 50)*1e3:.2f}ms "
+          f"p95={np.percentile(lat, 95)*1e3:.2f}ms "
+          f"max={lat.max()*1e3:.2f}ms (arrival -> completion)")
+    print(f"deadlines: {misses} missed / {served} "
+          f"(hit rate {1 - misses/served:.1%} at "
+          f"{args.deadline_ms:.0f}ms)")
+    print(f"batches fired: full={stats.fired_full} "
+          f"deadline={stats.fired_deadline} idle={stats.fired_idle} "
+          f"drain={stats.fired_drain}; max inflight={stats.max_inflight}")
+    report_engine(engine)
+    # Pair results with the requests actually accepted: under "reject"
+    # backpressure some submissions never got a ticket, and --check must
+    # not verify a solve against a shifted request's system.
+    return [reqs[i] for i, _ in tickets], results
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", choices=["sync", "async"], default="sync")
+    ap.add_argument("--requests", type=int, default=256)
+    ap.add_argument("--obs", type=int, default=2048)
+    ap.add_argument("--vars", type=int, default=256)
+    ap.add_argument("--designs", type=int, default=8)
+    ap.add_argument("--method", default="bakp_gram",
+                    choices=["bak", "bakp", "bakp_gram", "lstsq", "normal"])
+    ap.add_argument("--max-iter", type=int, default=40)
+    ap.add_argument("--rtol", type=float, default=1e-10)
+    ap.add_argument("--thr", type=int, default=128)
+    ap.add_argument("--flush-every", type=int, default=32,
+                    help="sync mode: requests per flush window")
+    ap.add_argument("--tenants", type=int, default=0,
+                    help="recurring tenant ids (0 = off; enables warm starts)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--check", action="store_true",
+                    help="verify every request vs numpy lstsq (slow)")
+    # async-mode knobs
+    ap.add_argument("--rate", type=float, default=200.0,
+                    help="async: Poisson arrival rate (requests/s)")
+    ap.add_argument("--deadline-ms", type=float, default=500.0)
+    ap.add_argument("--deadline-margin-ms", type=float, default=100.0)
+    ap.add_argument("--idle-timeout-ms", type=float, default=20.0)
+    ap.add_argument("--max-batch", type=int, default=16)
+    ap.add_argument("--max-queue", type=int, default=1024)
+    ap.add_argument("--backpressure", choices=["reject", "block"],
+                    default="block")
+    args = ap.parse_args()
+
+    from repro.serve import ServeConfig, SolverServeEngine
+
+    rng = np.random.default_rng(args.seed)
+    engine = SolverServeEngine(ServeConfig())
+    xs = [rng.normal(size=(args.obs, args.vars)).astype(np.float32)
+          for _ in range(args.designs)]
+    reqs = build_requests(rng, xs, args.requests, args.method, args.max_iter,
+                          args.rtol, args.thr, tenants=args.tenants,
+                          deadline_s=(args.deadline_ms / 1e3
+                                      if args.mode == "async" else None))
+
+    # Warmup: compile every (bucket, k, B) program this stream will need.
+    # Async batch compositions vary with arrival timing, so warm a range of
+    # window sizes (1, 2, 4, ... max_batch), not just one; with tenants the
+    # warm-start (a0) program variants are separate jit signatures, so each
+    # size runs twice — the second pass warm-starts off the first.
+    if args.mode == "sync":
+        warm_sizes = [min(args.flush_every, args.requests)]
+    else:
+        warm_sizes = sorted({1, 2, 4, args.max_batch, args.designs,
+                             2 * args.designs})
+    for n in warm_sizes:
+        for _ in range(2 if args.tenants else 1):
+            engine.serve(build_requests(
+                rng, xs, min(n, args.requests), args.method, args.max_iter,
+                args.rtol, args.thr, tenants=args.tenants))
+
+    if args.mode == "sync":
+        served_reqs, results = run_sync(args, engine, reqs)
+    else:
+        served_reqs, results = run_async(args, engine, reqs)
 
     if args.check:
         mapes = []
-        for r, q in zip(results, reqs):
+        for r, q in zip(results, served_reqs):
             ref = np.linalg.lstsq(np.asarray(q.x, np.float64),
                                   np.asarray(q.y, np.float64), rcond=None)[0]
             denom = np.maximum(np.abs(ref), 1e-12)

@@ -12,7 +12,6 @@ otherwise the full config is used (requires a real TPU slice).
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import jax.numpy as jnp
@@ -38,7 +37,7 @@ def main():
     from repro.distributed.fault_tolerance import (CheckpointManager,
                                                    StragglerMonitor)
     from repro.launch.steps import make_train_step
-    from repro.models.model import init_model, make_smoke_batch
+    from repro.models.model import init_model
     from repro.optim import make_optimizer
 
     cfg = get(args.arch)

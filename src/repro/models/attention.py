@@ -11,8 +11,7 @@ Two causal schedules (perf lever, EXPERIMENTS.md §Perf):
 """
 from __future__ import annotations
 
-import functools
-from typing import Dict, Optional, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp
@@ -316,7 +315,6 @@ def _mla_project_q(cfg, p, x, positions):
 
 def _mla_latent(cfg, p, x, positions):
     """Compressed KV stream: (c_kv (B,S,kvr) normed, k_rope (B,S,dr) roped)."""
-    dr = cfg.qk_rope_dim
     kv = x @ p["kv_down"]
     c_kv = rmsnorm(kv[..., :cfg.kv_lora_rank], p["kv_norm"])
     k_rope = apply_rope(kv[..., cfg.kv_lora_rank:][:, :, None, :],

@@ -6,7 +6,6 @@ Activations stay in the model dtype; norms/softmax/rope accumulate fp32.
 """
 from __future__ import annotations
 
-import functools
 from typing import Dict, Optional, Tuple
 
 import jax

@@ -17,7 +17,7 @@ from jax import lax
 from repro.models import attention as attn_lib
 from repro.models.common import (NULL_CTX, apply_mlp, mlp_defs, rmsnorm,
                                  rmsnorm_def, stacked)
-from repro.models.transformer import ZERO_AUX, _remat
+from repro.models.transformer import _remat
 
 
 def enc_block_defs(cfg) -> Dict[str, Any]:
@@ -66,10 +66,6 @@ def run_decoder(cfg, params, x, enc_out, *, mode, positions, cache=None,
     b = x.shape[0]
     hkv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
     new_cache: Dict[str, jax.Array] = {}
-
-    if mode != "decode":
-        s_src = enc_out.shape[1]
-        src_pos = jnp.broadcast_to(jnp.arange(s_src)[None], (b, s_src))
 
     def body(carry, xs):
         x = carry

@@ -11,8 +11,7 @@ Batch layouts per family:
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -20,11 +19,10 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig, ShapeCell
 from repro.models import encdec as encdec_lib
-from repro.models.common import (NULL_CTX, ShardCtx, embed_tokens,
-                                 embedding_defs, rmsnorm, rmsnorm_def,
-                                 softmax_xent, unembed)
-from repro.models.kvcache import abstract_cache, cache_spec_tree, init_cache
-from repro.models.params import ParamDef, abstract_params, init_params
+from repro.models.common import (NULL_CTX, embed_tokens, embedding_defs,
+                                 rmsnorm, rmsnorm_def, softmax_xent, unembed)
+from repro.models.kvcache import abstract_cache, cache_spec_tree
+from repro.models.params import abstract_params, init_params
 from repro.models.transformer import backbone_defs, run_backbone
 
 

@@ -11,7 +11,7 @@ Layer structure (Mamba2):
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -31,7 +31,6 @@ def ssm_dims(cfg):
 def ssm_defs(cfg) -> Dict[str, ParamDef]:
     d = cfg.d_model
     din, nh, conv_dim = ssm_dims(cfg)
-    gn = cfg.ssm_ngroups * cfg.ssm_state
     return {
         "in_proj": ParamDef((d, din + conv_dim + nh), ("embed", "model")),
         "conv_w": ParamDef((cfg.ssm_conv, conv_dim), (None, "model")),

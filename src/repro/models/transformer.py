@@ -8,16 +8,15 @@ and the loss live in model.py.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
 from jax import lax
 
 from repro.models import attention as attn_lib
-from repro.models.common import (NULL_CTX, ShardCtx, mlp_defs, apply_mlp,
-                                 rmsnorm, rmsnorm_def, stacked)
+from repro.models.common import (NULL_CTX, mlp_defs, apply_mlp, rmsnorm,
+                                 rmsnorm_def, stacked)
 from repro.models.moe import apply_moe, moe_defs
 from repro.models.params import ParamDef
 from repro.models.ssm import apply_ssm, ssm_defs

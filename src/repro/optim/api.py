@@ -1,8 +1,7 @@
 """Optimizer factory keyed by ModelConfig.optimizer."""
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable, Tuple
+from typing import Callable, Tuple
 
 from repro.optim.adafactor import adafactor_init, adafactor_update
 from repro.optim.adamw import adamw_init, adamw_update

@@ -4,33 +4,50 @@ Turns the BAK solver library into a serving system: many concurrent
 ``SolveRequest``s are bucketed by padded power-of-two shape, same-design
 requests are coalesced into one multi-RHS core solve (one stream of ``x``
 serves every tenant that shares it), remaining same-bucket requests are
-vmapped, and per-design state (device copy, column norms, block-Gram
-Cholesky) is memoised in an LRU cache.
+vmapped, per-design state (device copy, column norms, block-Gram Cholesky,
+per-tenant warm-start coefficients) is memoised in an LRU cache, and an
+async dispatcher overlays deadline-aware batching with backpressure on top
+of the synchronous engine.
 
 Layout:
   types.py     SolveRequest / ServedSolve records.
   batching.py  pow-2 shape buckets, exact zero padding, design fingerprints,
-               deterministic request grouping.
-  cache.py     LRU DesignCache of per-design solver state.
+               deterministic request grouping, request validation.
+  cache.py     LRU DesignCache of per-design solver state + warm coefs.
   engine.py    SolverServeEngine — submit/flush front-end.
+  dispatch.py  AsyncDispatcher — bounded intake queue, per-request
+               deadlines, full/deadline/idle flush policy, host-side
+               bucketing overlapped with in-flight device solves.
 
-Drivers: ``repro.launch.solver_serve`` (CLI) and
-``benchmarks/serve_throughput.py`` (coalescing speedup vs sequential solve).
+Drivers: ``repro.launch.solver_serve`` (CLI; sync + async modes),
+``benchmarks/serve_throughput.py`` (coalescing speedup vs sequential solve)
+and ``benchmarks/serve_async.py`` (async latency/deadline + warm-start
+sweep savings).
 """
 from repro.serve.batching import (bucket_shape, design_fingerprint,
-                                  group_requests, next_pow2, pad_x, pad_y)
+                                  group_requests, next_pow2, pad_x, pad_y,
+                                  prepare_request)
 from repro.serve.cache import CacheStats, DesignCache, DesignEntry
+from repro.serve.dispatch import (AsyncDispatcher, DispatchConfig,
+                                  DispatcherStopped, DispatchStats,
+                                  QueueFullError, SolveTicket)
 from repro.serve.engine import ServeConfig, ServeStats, SolverServeEngine
 from repro.serve.types import ServedSolve, SolveRequest
 
 __all__ = [
+    "AsyncDispatcher",
     "CacheStats",
     "DesignCache",
     "DesignEntry",
+    "DispatchConfig",
+    "DispatchStats",
+    "DispatcherStopped",
+    "QueueFullError",
     "ServeConfig",
     "ServeStats",
     "ServedSolve",
     "SolveRequest",
+    "SolveTicket",
     "SolverServeEngine",
     "bucket_shape",
     "design_fingerprint",
@@ -38,4 +55,5 @@ __all__ = [
     "next_pow2",
     "pad_x",
     "pad_y",
+    "prepare_request",
 ]

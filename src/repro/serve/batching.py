@@ -25,9 +25,45 @@ from typing import Dict, List, Tuple
 
 import numpy as np
 
+from repro.core.api import _METHODS
 from repro.serve.types import SolveRequest
 
 Bucket = Tuple[int, int]
+
+
+def prepare_request(req: SolveRequest, *,
+                    fingerprint: bool = False) -> SolveRequest:
+    """Validate a request and normalise its arrays to host numpy, in place.
+
+    Called by ``SolverServeEngine.submit`` — and, in the async path, by the
+    dispatcher thread *before* the request reaches the engine, so array
+    normalisation and (with ``fingerprint=True``) design hashing overlap
+    with whatever solve is in flight on the device.  Idempotent: a prepared
+    request passes through unchanged, so engine.submit re-preparing one the
+    dispatcher already handled is free.
+    """
+    x = req.x = np.asarray(req.x)
+    if x.ndim != 2:
+        raise ValueError(f"request x must be 2D (obs, vars), got {x.shape}")
+    y = req.y = np.asarray(req.y)
+    if y.ndim != 1 or y.shape[0] != x.shape[0]:
+        raise ValueError(
+            f"request y must be (obs,) matching x rows, got {y.shape} "
+            f"for x {x.shape}")
+    if req.a0 is not None:
+        a0 = req.a0 = np.asarray(req.a0, np.float32)
+        if a0.shape != (x.shape[1],):
+            raise ValueError(
+                f"request a0 must be (vars,) = ({x.shape[1]},) matching x "
+                f"columns, got {a0.shape}")
+    if req.method not in _METHODS:
+        raise ValueError(
+            f"method must be one of {_METHODS}, got {req.method!r}")
+    if req.deadline_s is not None and req.deadline_s <= 0:
+        raise ValueError(f"deadline_s must be positive, got {req.deadline_s}")
+    if fingerprint and req.design_key is None:
+        req.design_key = design_fingerprint(x)
+    return req
 
 
 def next_pow2(n: int, floor: int = 1) -> int:

@@ -10,18 +10,24 @@ cached across requests, keyed by the design fingerprint:
   * the squared column norms (the O(obs·vars) pass of Algorithm 1 line 3);
   * the per-block Gram Cholesky factors for ``mode="gram"`` — the
     O(obs·vars·thr) factorisation that dominates small-iteration solves,
-    computed once per (thr, ridge) and reused by every later request.
+    computed once per (thr, ridge) and reused by every later request;
+  * (optionally) each tenant's last solved coefficients — repeated-design
+    tenants re-solve with slowly-drifting ``y``, and warm-starting from the
+    previous solution cuts the sweep count without changing the fixed point.
 
-Entries are LRU-evicted so memory is bounded by ``max_entries`` designs.
+Entries are LRU-evicted so memory is bounded by ``max_entries`` designs;
+per-entry warm coefficients are themselves LRU-bounded by ``max_tenants``.
 """
 from __future__ import annotations
 
+import threading
 from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.solvebakp import block_gram_cholesky
 from repro.core.types import column_norms_sq
@@ -34,7 +40,33 @@ class DesignEntry:
     x_pad: jax.Array                      # (obs_p, vars_p)
     cn: jax.Array                         # (vars_p,) squared column norms
     chol: Dict[Tuple[int, float], jax.Array] = field(default_factory=dict)
+    max_tenants: int = 64
     _cn_thr: Dict[int, jax.Array] = field(default_factory=dict)
+    _warm: "OrderedDict[str, np.ndarray]" = field(default_factory=OrderedDict)
+
+    # --------------------------------------------- per-tenant warm starts
+    def warm_coef(self, tenant_id: Optional[str]) -> Optional[np.ndarray]:
+        """Last stored coefficients for ``tenant_id`` (None = cold)."""
+        if tenant_id is None:
+            return None
+        coef = self._warm.get(tenant_id)
+        if coef is not None:
+            self._warm.move_to_end(tenant_id)
+        return coef
+
+    def store_coef(self, tenant_id: Optional[str], coef: np.ndarray) -> None:
+        """Retain a tenant's solved (unpadded) coefficients, LRU-bounded.
+
+        Copies: the same array is handed to the caller as
+        ``ServedSolve.coef``, and an in-place mutation there must not
+        corrupt the tenant's next warm start.
+        """
+        if tenant_id is None:
+            return
+        self._warm[tenant_id] = np.array(coef, np.float32, copy=True)
+        self._warm.move_to_end(tenant_id)
+        while len(self._warm) > self.max_tenants:
+            self._warm.popitem(last=False)
 
     def cn_for_thr(self, thr: int) -> jax.Array:
         """Column norms extended to solvebakp's thr-multiple padding."""
@@ -76,43 +108,66 @@ class CacheStats:
 
 
 class DesignCache:
-    """LRU cache: design key → ``DesignEntry``."""
+    """LRU cache: design key → ``DesignEntry``.
 
-    def __init__(self, max_entries: int = 64):
+    Thread-safe: the async dispatcher pre-warms entries from its dispatch
+    thread (overlapping padding + host→device transfer with in-flight
+    solves) while the solver thread reads them, so the LRU bookkeeping is
+    guarded by a lock.  Entry *construction* runs outside the lock; on a
+    build race the first ``put`` wins and the loser's entry is dropped.
+    """
+
+    def __init__(self, max_entries: int = 64, max_tenants: int = 64):
         self.max_entries = max_entries
+        self.max_tenants = max_tenants
         self.stats = CacheStats()
+        self._lock = threading.Lock()
         self._entries: "OrderedDict[str, DesignEntry]" = OrderedDict()
 
     def __len__(self) -> int:
         return len(self._entries)
 
-    def get(self, key: str) -> Optional[DesignEntry]:
-        entry = self._entries.get(key)
-        if entry is None:
-            self.stats.misses += 1
-            return None
-        self._entries.move_to_end(key)
-        self.stats.hits += 1
-        return entry
+    def get(self, key: str,
+            record_stats: bool = True) -> Optional[DesignEntry]:
+        """Fetch (and LRU-touch) an entry.  ``record_stats=False`` makes the
+        lookup invisible to hit/miss accounting — used by the dispatcher's
+        pre-warm so each request still logs exactly one cache event, at
+        flush time."""
+        with self._lock:
+            entry = self._entries.get(key)
+            if entry is None:
+                if record_stats:
+                    self.stats.misses += 1
+                return None
+            self._entries.move_to_end(key)
+            if record_stats:
+                self.stats.hits += 1
+            return entry
 
     def put(self, key: str, entry: DesignEntry) -> DesignEntry:
-        self._entries[key] = entry
-        self._entries.move_to_end(key)
-        while len(self._entries) > self.max_entries:
-            self._entries.popitem(last=False)
-            self.stats.evictions += 1
-        return entry
+        with self._lock:
+            existing = self._entries.get(key)
+            if existing is not None:  # build race: first writer wins
+                self._entries.move_to_end(key)
+                return existing
+            self._entries[key] = entry
+            while len(self._entries) > self.max_entries:
+                self._entries.popitem(last=False)
+                self.stats.evictions += 1
+            return entry
 
-    def get_or_build(self, key: str, build_x_pad) -> Tuple[DesignEntry, bool]:
+    def get_or_build(self, key: str, build_x_pad,
+                     record_stats: bool = True) -> Tuple[DesignEntry, bool]:
         """Fetch the entry for ``key``, building it on miss.
 
         ``build_x_pad`` is a zero-arg callable returning the bucket-padded
         design matrix — only invoked on a miss, so hits skip the host-side
         padding entirely.  Returns (entry, cache_hit).
         """
-        entry = self.get(key)
+        entry = self.get(key, record_stats)
         if entry is not None:
             return entry, True
         x_pad = jnp.asarray(build_x_pad(), jnp.float32)
-        entry = DesignEntry(x_pad=x_pad, cn=column_norms_sq(x_pad))
+        entry = DesignEntry(x_pad=x_pad, cn=column_norms_sq(x_pad),
+                            max_tenants=self.max_tenants)
         return self.put(key, entry), False

@@ -1,0 +1,464 @@
+"""Async deadline-aware dispatcher for the solver-serving engine.
+
+``SolverServeEngine`` is a synchronous submit/flush window: callers decide
+when to flush, and while a flush runs on the device nothing else happens —
+request validation, design hashing and padding all serialize behind it.
+``AsyncDispatcher`` layers a two-thread pipeline on top:
+
+  * the **dispatch thread** drains a bounded intake queue, normalises each
+    request (``prepare_request``: numpy views, shape/knob validation, design
+    fingerprint), pre-warms the engine's design cache (bucket padding +
+    host→device transfer + column norms), and groups requests into
+    per-(bucket, solver-config) pending batches;
+  * the **solver thread** pops fired batches and runs the engine's batched
+    flush (multi-RHS coalescing / vmap / warm starts, unchanged).
+
+Because these run concurrently, host-side bucketing of *incoming* requests
+overlaps the device solve *in flight* — the dispatch thread is hashing and
+padding batch N+1 while the solver thread blocks on batch N.
+
+**Flush policy** — a pending batch fires when the first of these holds:
+
+  * it reaches ``max_batch`` requests (full);
+  * its most urgent member's deadline is ``deadline_margin_s`` away
+    (deadline pressure; batches fire most-urgent-first);
+  * no request has joined it for ``idle_timeout_s`` (idle — bounds the
+    latency of deadline-less traffic).
+
+**Backpressure** — at most ``max_queue`` requests may be incomplete
+(queued + pending + solving) at once.  ``backpressure="reject"`` makes
+``submit`` raise ``QueueFullError`` immediately; ``"block"`` makes it wait
+for capacity, propagating the slowdown to the caller.
+
+**Deadlines** — a request may carry ``deadline_s`` (relative to submit).
+The dispatcher flushes so the solve *starts* with at least the margin left
+and records on each ticket whether completion beat the deadline;
+``DispatchStats.deadline_misses`` aggregates the misses.
+
+Example::
+
+    with AsyncDispatcher(engine=SolverServeEngine()) as disp:
+        tickets = [disp.submit(SolveRequest(x=x, y=y, deadline_s=0.2))
+                   for x, y in workload]
+        coefs = [t.result().coef for t in tickets]
+"""
+from __future__ import annotations
+
+import threading
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.serve.batching import config_key, pad_x, prepare_request, request_bucket
+from repro.serve.engine import ServeConfig, SolverServeEngine
+from repro.serve.types import ServedSolve, SolveRequest
+
+
+class QueueFullError(RuntimeError):
+    """Raised by ``submit`` under the "reject" backpressure policy."""
+
+
+class DispatcherStopped(RuntimeError):
+    """Raised when submitting to (or awaiting a ticket of) a stopped
+    dispatcher that will never serve it."""
+
+
+@dataclass
+class DispatchConfig:
+    """Dispatcher knobs (engine knobs live on ``ServeConfig``)."""
+
+    max_queue: int = 256           # max incomplete requests (backpressure)
+    backpressure: str = "reject"   # "reject" | "block"
+    max_batch: int = 32            # fire a batch at this occupancy
+    deadline_margin_s: float = 0.05  # fire when an oldest deadline is this close
+    idle_timeout_s: float = 0.02   # fire a batch this long after its last join
+    poll_interval_s: float = 0.002  # dispatch-thread wakeup bound
+    default_deadline_s: Optional[float] = None  # applied when request has none
+    prewarm_cache: bool = True     # build design entries on the dispatch thread
+
+
+@dataclass
+class DispatchStats:
+    submitted: int = 0
+    rejected: int = 0
+    completed: int = 0
+    deadline_misses: int = 0
+    fired_full: int = 0
+    fired_deadline: int = 0
+    fired_idle: int = 0
+    fired_drain: int = 0
+    max_inflight: int = 0
+
+    @property
+    def deadline_hit_rate(self) -> float:
+        """Fraction of completed requests that met their deadline
+        (requests submitted without a deadline count as hits)."""
+        total = self.completed
+        if not total:
+            return 1.0
+        return 1.0 - self.deadline_misses / total
+
+
+class SolveTicket:
+    """Future-like handle for one dispatched request.
+
+    ``result()`` blocks until the solve lands (or raises on timeout /
+    dispatcher failure).  Timing fields are filled in as the request moves
+    through the pipeline: ``submitted_at`` → ``fired_at`` → ``completed_at``
+    (``time.monotonic`` values); ``deadline`` is absolute or None.
+    """
+
+    def __init__(self, request: SolveRequest, deadline: Optional[float]):
+        self.request = request
+        self.deadline = deadline
+        self.submitted_at = time.monotonic()
+        self.fired_at: Optional[float] = None
+        self.completed_at: Optional[float] = None
+        self.deadline_met: Optional[bool] = None
+        self._event = threading.Event()
+        self._result: Optional[ServedSolve] = None
+        self._exception: Optional[BaseException] = None
+
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def result(self, timeout: Optional[float] = None) -> ServedSolve:
+        if not self._event.wait(timeout):
+            raise TimeoutError(
+                f"request {self.request.request_id!r} not completed "
+                f"within {timeout}s")
+        if self._exception is not None:
+            raise self._exception
+        return self._result
+
+    @property
+    def latency_s(self) -> Optional[float]:
+        if self.completed_at is None:
+            return None
+        return self.completed_at - self.submitted_at
+
+    # ------------------------------------------------- dispatcher-side
+    def _complete(self, result: ServedSolve) -> None:
+        self.completed_at = time.monotonic()
+        self._result = result
+        if self.deadline is not None:
+            self.deadline_met = self.completed_at <= self.deadline
+        self._event.set()
+
+    def _fail(self, exc: BaseException) -> None:
+        self.completed_at = time.monotonic()
+        self._exception = exc
+        if self.deadline is not None:
+            self.deadline_met = False
+        self._event.set()
+
+
+@dataclass
+class _PendingBatch:
+    """One per-(bucket, solver-config) accumulation of tickets."""
+
+    tickets: List[SolveTicket] = field(default_factory=list)
+    last_join: float = 0.0
+
+    @property
+    def min_deadline(self) -> float:
+        dls = [t.deadline for t in self.tickets if t.deadline is not None]
+        return min(dls) if dls else float("inf")
+
+
+class AsyncDispatcher:
+    """Deadline-aware async front-end over ``SolverServeEngine``."""
+
+    def __init__(self, engine: Optional[SolverServeEngine] = None,
+                 config: Optional[DispatchConfig] = None):
+        self.engine = engine or SolverServeEngine(ServeConfig())
+        self.config = config or DispatchConfig()
+        if self.config.backpressure not in ("reject", "block"):
+            raise ValueError(
+                f"backpressure must be 'reject' or 'block', "
+                f"got {self.config.backpressure!r}")
+        self.stats = DispatchStats()
+        self._cv = threading.Condition()
+        self._intake: deque = deque()
+        self._inflight = 0          # accepted and not yet completed
+        self._draining = False
+        self._stopping = False
+        self._abandon = False       # stop(drain=False): fail, don't serve
+        self._started = False
+        self._seq = 0
+        # Dispatch-thread-only state.
+        self._pending: "Dict[Tuple, _PendingBatch]" = {}
+        # Solver handoff: fired batches, most-urgent-first within a scan.
+        self._solve_q: deque = deque()
+        self._solve_cv = threading.Condition()
+        self._dispatch_thread: Optional[threading.Thread] = None
+        self._solver_thread: Optional[threading.Thread] = None
+
+    # ------------------------------------------------------------ lifecycle
+    def start(self) -> "AsyncDispatcher":
+        if self._started:
+            return self
+        self._started = True
+        self._stopping = False
+        self._abandon = False
+        self._dispatch_thread = threading.Thread(
+            target=self._dispatch_loop, name="serve-dispatch", daemon=True)
+        self._solver_thread = threading.Thread(
+            target=self._solve_loop, name="serve-solver", daemon=True)
+        self._dispatch_thread.start()
+        self._solver_thread.start()
+        return self
+
+    def stop(self, drain: bool = True) -> None:
+        """Stop both threads; with ``drain`` (default) serve what's queued
+        first, otherwise fail unserved tickets with ``DispatcherStopped``."""
+        if not self._started:
+            return
+        if drain:
+            self.drain()
+        with self._cv:
+            self._abandon = not drain
+            self._stopping = True
+            self._cv.notify_all()
+        with self._solve_cv:
+            self._solve_cv.notify_all()
+        self._dispatch_thread.join()
+        self._solver_thread.join()
+        self._started = False
+
+    def __enter__(self) -> "AsyncDispatcher":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop(drain=exc == (None, None, None))
+
+    # --------------------------------------------------------------- intake
+    def submit(self, request: SolveRequest,
+               deadline_s: Optional[float] = None) -> SolveTicket:
+        """Queue a request; returns a ``SolveTicket`` immediately.
+
+        ``deadline_s`` (relative, seconds) overrides ``request.deadline_s``;
+        with neither set, ``config.default_deadline_s`` applies.  Under the
+        "reject" policy a full pipeline raises ``QueueFullError``; under
+        "block" this call waits for capacity.
+        """
+        if not self._started:
+            raise DispatcherStopped("dispatcher is not running; call start()")
+        rel = deadline_s
+        if rel is None:
+            rel = request.deadline_s
+        if rel is None:
+            rel = self.config.default_deadline_s
+        if rel is not None and rel <= 0:
+            raise ValueError(f"deadline_s must be positive, got {rel}")
+        ticket = SolveTicket(
+            request, None if rel is None else time.monotonic() + float(rel))
+        with self._cv:
+            if self._stopping:
+                raise DispatcherStopped("dispatcher stopped")
+            if request.request_id is None:
+                request.request_id = f"areq-{self._seq}"
+            self._seq += 1
+            if self._inflight >= self.config.max_queue:
+                if self.config.backpressure == "reject":
+                    self.stats.rejected += 1
+                    raise QueueFullError(
+                        f"dispatcher at capacity ({self.config.max_queue} "
+                        f"in flight)")
+                while self._inflight >= self.config.max_queue:
+                    if self._stopping:
+                        raise DispatcherStopped("dispatcher stopped")
+                    self._cv.wait(0.01)
+            self._inflight += 1
+            self.stats.submitted += 1
+            self.stats.max_inflight = max(self.stats.max_inflight,
+                                          self._inflight)
+            self._intake.append(ticket)
+            self._cv.notify_all()
+        return ticket
+
+    def drain(self, timeout: Optional[float] = None) -> bool:
+        """Fire everything pending and wait for the pipeline to empty.
+
+        Returns False if ``timeout`` elapsed first.
+        """
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._cv:
+            self._draining = True
+            self._cv.notify_all()
+            while self._inflight > 0:
+                remaining = (None if deadline is None
+                             else deadline - time.monotonic())
+                if remaining is not None and remaining <= 0:
+                    self._draining = False
+                    return False
+                self._cv.wait(0.005 if remaining is None
+                              else min(0.005, remaining))
+            self._draining = False
+        return True
+
+    @property
+    def inflight(self) -> int:
+        with self._cv:
+            return self._inflight
+
+    # ------------------------------------------------------ dispatch thread
+    def _dispatch_loop(self) -> None:
+        cfg = self.config
+        while True:
+            with self._cv:
+                if not self._intake and not self._stopping:
+                    # With pending batches a timed wake drives the
+                    # deadline/idle flush checks; fully idle we sleep until
+                    # submit()/drain()/stop() notifies (no busy-poll).
+                    self._cv.wait(cfg.poll_interval_s if self._pending
+                                  else None)
+                arrivals = []
+                while self._intake:
+                    arrivals.append(self._intake.popleft())
+                stopping = self._stopping
+                draining = self._draining
+                abandon = self._abandon
+            if stopping and abandon:
+                residual = arrivals + [t for b in self._pending.values()
+                                       for t in b.tickets]
+                self._pending.clear()
+                for t in residual:
+                    t._fail(DispatcherStopped("dispatcher stopped"))
+                if residual:
+                    self._on_complete(residual)
+                with self._solve_cv:
+                    self._solve_q.append(None)  # solver-thread sentinel
+                    self._solve_cv.notify_all()
+                return
+            for ticket in arrivals:
+                self._admit(ticket)
+            now = time.monotonic()
+            fired = self._fire_ready(now, drain_all=draining or stopping)
+            if fired:
+                with self._solve_cv:
+                    self._solve_q.extend(fired)
+                    self._solve_cv.notify_all()
+            if stopping and not self._pending:
+                with self._solve_cv:
+                    self._solve_q.append(None)  # solver-thread sentinel
+                    self._solve_cv.notify_all()
+                return
+
+    def _admit(self, ticket: SolveTicket) -> None:
+        """Normalise + fingerprint one request and join it to its batch.
+
+        This is the host-side work that overlaps in-flight device solves:
+        array normalisation, design hashing and (optionally) design-cache
+        pre-warm (padding + device transfer + column norms) all happen here
+        on the dispatch thread.
+        """
+        req = ticket.request
+        try:
+            prepare_request(req, fingerprint=True)
+        except Exception as exc:
+            ticket._fail(exc)
+            self._on_complete([ticket])
+            return
+        ecfg = self.engine.config
+        bucket = request_bucket(req, min_obs=ecfg.min_obs,
+                                min_vars=ecfg.min_vars)
+        if self.config.prewarm_cache:
+            try:
+                # record_stats=False: the flush-time lookup is the one cache
+                # event per request, so hit rates stay comparable with the
+                # synchronous path ("hit" = design state resident at flush).
+                self.engine.cache.get_or_build(
+                    req.design_key,
+                    lambda: pad_x(np.asarray(req.x), bucket),
+                    record_stats=False)
+            except Exception:
+                pass  # engine flush will surface the failure per-request
+        batch = self._pending.setdefault(config_key(req, bucket),
+                                         _PendingBatch())
+        batch.tickets.append(ticket)
+        batch.last_join = time.monotonic()
+
+    def _fire_ready(self, now: float,
+                    drain_all: bool = False) -> List[List[SolveTicket]]:
+        """Pop every batch whose flush condition holds, most urgent first."""
+        cfg = self.config
+        ready: List[Tuple[float, Tuple, str]] = []
+        for key, batch in self._pending.items():
+            if not batch.tickets:
+                continue
+            min_dl = batch.min_deadline
+            if drain_all:
+                ready.append((min_dl, key, "drain"))
+            elif len(batch.tickets) >= cfg.max_batch:
+                ready.append((min_dl, key, "full"))
+            elif min_dl - cfg.deadline_margin_s <= now:
+                ready.append((min_dl, key, "deadline"))
+            elif now - batch.last_join >= cfg.idle_timeout_s:
+                ready.append((min_dl, key, "idle"))
+        # Deadline-ordered flushing: the batch with the most urgent member
+        # reaches the (FIFO) solver queue first.
+        ready.sort(key=lambda r: r[0])
+        fired = []
+        for min_dl, key, why in ready:
+            batch = self._pending.pop(key)
+            # max_batch is an upper bound too: a burst admitted in one
+            # iteration fires as several max_batch-sized solves, keeping
+            # the configured latency/memory bound per engine call.
+            for lo in range(0, len(batch.tickets), cfg.max_batch):
+                chunk = batch.tickets[lo:lo + cfg.max_batch]
+                setattr(self.stats, f"fired_{why}",
+                        getattr(self.stats, f"fired_{why}") + 1)
+                for t in chunk:
+                    t.fired_at = now
+                fired.append(chunk)
+        return fired
+
+    # ------------------------------------------------------- solver thread
+    def _solve_loop(self) -> None:
+        while True:
+            with self._solve_cv:
+                while not self._solve_q:
+                    self._solve_cv.wait()  # every producer notifies
+                batch = self._solve_q.popleft()
+            if batch is None:
+                self._fail_residual()
+                return
+            try:
+                served = self.engine.serve([t.request for t in batch])
+                for ticket, result in zip(batch, served):
+                    ticket._complete(result)
+            except Exception as exc:  # engine-level failure: fail the batch
+                for ticket in batch:
+                    ticket._fail(exc)
+            self._on_complete(batch)
+
+    def _fail_residual(self) -> None:
+        """After a no-drain stop: fail anything still in the pipeline."""
+        residual: List[SolveTicket] = []
+        with self._solve_cv:
+            while self._solve_q:
+                batch = self._solve_q.popleft()
+                if batch:
+                    residual.extend(batch)
+        with self._cv:
+            while self._intake:
+                residual.append(self._intake.popleft())
+        for ticket in residual:
+            if not ticket.done():
+                ticket._fail(DispatcherStopped("dispatcher stopped"))
+        if residual:
+            self._on_complete(residual)
+
+    def _on_complete(self, tickets: List[SolveTicket]) -> None:
+        with self._cv:
+            self._inflight -= len(tickets)
+            self.stats.completed += len(tickets)
+            # Failures count as misses too: _fail() marks deadline_met
+            # False on any ticket that carried a deadline.
+            self.stats.deadline_misses += sum(
+                1 for t in tickets if t.deadline_met is False)
+            self._cv.notify_all()

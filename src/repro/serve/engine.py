@@ -16,9 +16,20 @@ small number of compiled batch solves:
   4. **Design caching** — everything that depends only on ``x`` (device
      copy, column norms, block-Gram Cholesky factors) is memoised across
      flushes in an LRU ``DesignCache``.
+  5. **Warm starts** — a request may carry initial coefficients
+     (``SolveRequest.a0``), or name a ``tenant_id`` whose last solved
+     coefficients the design cache retained; the iterative solvers then
+     start from that point instead of zeros.  Warm and cold requests
+     coalesce freely: cold members of a group ride a zero column/row of the
+     stacked ``a0``, which is bit-identical to the cold path.
 
 Results come back as per-request ``ServedSolve``s, in submission order, with
 padding stripped and per-request SSE recomputed from the stripped residual.
+
+Flushing is exception-safe: a batch whose solver raises is isolated — every
+request in it gets an error result (``ServedSolve.error`` set, zero
+coefficients) and the remaining batches still run, so one poisoned request
+can never wedge the engine or starve its co-tenants.
 
 Example::
 
@@ -40,10 +51,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.api import _METHODS, solve
+from repro.core.api import solve
 from repro.core.solvebak import solvebak
 from repro.core.solvebakp import solvebakp
-from repro.serve.batching import group_requests, next_pow2, pad_x, pad_y
+from repro.serve.batching import (group_requests, next_pow2, pad_x, pad_y,
+                                  prepare_request)
 from repro.serve.cache import DesignCache, DesignEntry
 from repro.serve.types import ServedSolve, SolveRequest
 
@@ -64,6 +76,8 @@ class ServeConfig:
     vmap_batch: bool = True      # same-bucket singles → one vmapped solve
     max_vmap_batch: int = 64     # cap on vmapped batch size (memory bound)
     cache_entries: int = 64      # LRU design-cache capacity
+    warm_cache: bool = True      # retain per-tenant coefs for warm starts
+    warm_tenants: int = 64       # per-design LRU cap on retained tenants
 
 
 @dataclass
@@ -75,11 +89,13 @@ class ServeStats:
     vmap_batches: int = 0
     vmap_requests: int = 0
     single_solves: int = 0
+    warm_starts: int = 0
+    failures: int = 0
 
 
 @functools.lru_cache(maxsize=32)
 def _vmapped_solver(method: str, max_iter: int, rtol: float, thr: int,
-                    omega: float, ridge: float):
+                    omega: float, ridge: float, warm: bool):
     """jit(vmap(...)) batch solver for one static solver config.
 
     Module-level lru_cache keeps the function object (and therefore the jit
@@ -88,24 +104,29 @@ def _vmapped_solver(method: str, max_iter: int, rtol: float, thr: int,
     (evicting the wrapper releases its jit executables).  ``atol`` is a
     *traced per-element* argument (not part of the cache key): requests in
     one bucket can have different real obs, so each gets its own
-    padding-corrected absolute tolerance without recompiling.
+    padding-corrected absolute tolerance without recompiling.  ``warm``
+    selects the variant that threads a batched ``a0`` through — kept out of
+    the cold signature so all-cold batches keep their original program.
     """
     if method == "bak":
-        def one(x, y, cn, atol):
+        def one(x, y, cn, atol, a0=None):
             return solvebak(x, y, max_iter=max_iter, atol=atol, rtol=rtol,
-                            cn=cn)
+                            cn=cn, a0=a0)
     elif method == "bakp":
-        def one(x, y, cn, atol):
+        def one(x, y, cn, atol, a0=None):
             return solvebakp(x, y, thr=thr, max_iter=max_iter, atol=atol,
-                             rtol=rtol, omega=omega, mode="jacobi", cn=cn)
+                             rtol=rtol, omega=omega, mode="jacobi", cn=cn,
+                             a0=a0)
     elif method == "bakp_gram":
-        def one(x, y, cn, atol, chol):
+        def one(x, y, cn, atol, chol, a0=None):
             return solvebakp(x, y, thr=thr, max_iter=max_iter, atol=atol,
                              rtol=rtol, omega=omega, mode="gram", ridge=ridge,
-                             cn=cn, chol=chol)
+                             cn=cn, chol=chol, a0=a0)
     else:
         raise ValueError(f"method {method!r} is not vmap-batchable")
-    return jax.jit(jax.vmap(one))
+    if warm:
+        return jax.jit(jax.vmap(one))
+    return jax.jit(jax.vmap(functools.partial(one, a0=None)))
 
 
 class SolverServeEngine:
@@ -113,7 +134,8 @@ class SolverServeEngine:
 
     def __init__(self, config: Optional[ServeConfig] = None):
         self.config = config or ServeConfig()
-        self.cache = DesignCache(max_entries=self.config.cache_entries)
+        self.cache = DesignCache(max_entries=self.config.cache_entries,
+                                 max_tenants=self.config.warm_tenants)
         self.stats = ServeStats()
         self._pending: List[SolveRequest] = []
         self._seq = 0
@@ -122,21 +144,11 @@ class SolverServeEngine:
     def submit(self, request: SolveRequest) -> str:
         """Queue a request; returns its (possibly auto-assigned) id.
 
-        ``x``/``y`` are normalised to host numpy here, once — every later
-        ``np.asarray`` in the flush path is then a free view, even when the
-        caller handed us device arrays.
+        ``x``/``y``/``a0`` are normalised to host numpy here, once — every
+        later ``np.asarray`` in the flush path is then a free view, even
+        when the caller handed us device arrays.
         """
-        x = request.x = np.asarray(request.x)
-        if x.ndim != 2:
-            raise ValueError(f"request x must be 2D (obs, vars), got {x.shape}")
-        y = request.y = np.asarray(request.y)
-        if y.ndim != 1 or y.shape[0] != x.shape[0]:
-            raise ValueError(
-                f"request y must be (obs,) matching x rows, got {y.shape} "
-                f"for x {x.shape}")
-        if request.method not in _METHODS:
-            raise ValueError(
-                f"method must be one of {_METHODS}, got {request.method!r}")
+        prepare_request(request)
         if request.request_id is None:
             request.request_id = f"req-{self._seq}"
         self._seq += 1
@@ -151,7 +163,12 @@ class SolverServeEngine:
 
     # -------------------------------------------------------------- flush
     def flush(self) -> List[ServedSolve]:
-        """Execute all pending requests; results in submission order."""
+        """Execute all pending requests; results in submission order.
+
+        Exception-safe: a solver failure poisons only its own batch — the
+        affected requests get error results and every other batch still
+        runs, so the returned list always covers all pending requests.
+        """
         requests, self._pending = self._pending, []
         if not requests:
             return []
@@ -165,22 +182,40 @@ class SolverServeEngine:
             method = outer[1]
             singles = []  # (idx, entry, cache_hit)
             for key, idxs in designs.items():
-                entry, hit = self._design_entry(key, requests[idxs[0]], bucket)
+                try:
+                    entry, hit = self._design_entry(key, requests[idxs[0]],
+                                                    bucket)
+                except Exception as exc:  # bad design: fail just this group
+                    self._fail(requests, idxs, bucket, exc, results)
+                    continue
                 if cfg.coalesce and len(idxs) > 1:
-                    self._solve_multi_rhs(requests, idxs, entry, hit, bucket,
-                                          results)
+                    try:
+                        self._solve_multi_rhs(requests, idxs, entry, hit,
+                                              bucket, results)
+                    except Exception as exc:
+                        self._fail(requests, idxs, bucket, exc, results)
                 else:
                     singles.extend((i, entry, hit) for i in idxs)
             if cfg.vmap_batch and len(singles) > 1 and method in _BATCHABLE:
                 for lo in range(0, len(singles), cfg.max_vmap_batch):
                     chunk = singles[lo:lo + cfg.max_vmap_batch]
-                    if len(chunk) > 1:
-                        self._solve_vmapped(requests, chunk, bucket, results)
-                    else:
-                        self._solve_one(requests, *chunk[0], bucket, results)
+                    try:
+                        if len(chunk) > 1:
+                            self._solve_vmapped(requests, chunk, bucket,
+                                                results)
+                        else:
+                            self._solve_one(requests, *chunk[0], bucket,
+                                            results)
+                    except Exception as exc:
+                        self._fail(requests, [i for i, _, _ in chunk], bucket,
+                                   exc, results)
             else:
                 for idx, entry, hit in singles:
-                    self._solve_one(requests, idx, entry, hit, bucket, results)
+                    try:
+                        self._solve_one(requests, idx, entry, hit, bucket,
+                                        results)
+                    except Exception as exc:
+                        self._fail(requests, [idx], bucket, exc, results)
         assert all(r is not None for r in results)
         return results
 
@@ -188,6 +223,48 @@ class SolverServeEngine:
     def _design_entry(self, key, req, bucket):
         return self.cache.get_or_build(
             key, lambda: pad_x(np.asarray(req.x), bucket))
+
+    def _fail(self, requests, idxs, bucket, exc, results):
+        """Error results for a poisoned batch (engine keeps serving)."""
+        msg = f"{type(exc).__name__}: {exc}"
+        for idx in idxs:
+            req = requests[idx]
+            obs, nvars = np.asarray(req.x).shape
+            results[idx] = ServedSolve(
+                request_id=req.request_id,
+                coef=np.zeros((nvars,), np.float32),
+                residual=np.asarray(req.y, np.float32).copy(),
+                sse=float(np.dot(req.y, req.y)),
+                n_sweeps=0,
+                converged=False,
+                bucket=bucket,
+                batch_kind="error",
+                group_size=len(idxs),
+                error=msg,
+            )
+            self.stats.failures += 1
+
+    def _resolve_a0(self, req: SolveRequest, entry: DesignEntry):
+        """Warm-start coefficients for a request: explicit ``a0`` wins,
+        then the design cache's per-tenant store; None means cold."""
+        if req.a0 is not None:
+            return np.asarray(req.a0, np.float32)
+        if self.config.warm_cache:
+            return entry.warm_coef(req.tenant_id)
+        return None
+
+    @staticmethod
+    def _pad_a0(a0: np.ndarray, vars_p: int) -> np.ndarray:
+        """Zero-pad (vars,) warm-start coefficients to the bucket width.
+
+        Zero entries for padded columns are exact: those columns are zero,
+        so their coefficients stay pinned at 0 either way.
+        """
+        if a0.shape[0] == vars_p:
+            return a0
+        out = np.zeros((vars_p,), np.float32)
+        out[: a0.shape[0]] = a0
+        return out
 
     @staticmethod
     def _padded_atol(atol: float, n_real: int, n_padded: int) -> float:
@@ -205,37 +282,45 @@ class SolverServeEngine:
         return atol * math.sqrt(n_real / n_padded)
 
     def _call_solver(self, req: SolveRequest, entry: DesignEntry, y_dev,
-                     atol: float):
+                     atol: float, a0=None):
         """One (possibly multi-RHS) solve on the padded design.
 
         ``atol`` is the padding-corrected absolute tolerance (see
         ``_padded_atol``); ``req.atol`` itself must not be used here.
+        ``a0`` is the bucket-padded warm start (or None for the cold
+        program — kept as a separate jit signature so cold solves don't pay
+        the warm path's extra residual matmul).
         """
         cfg = self.config
         m = req.method
         if m == "bak":
             return solvebak(entry.x_pad, y_dev, max_iter=req.max_iter,
-                            atol=atol, rtol=req.rtol, cn=entry.cn)
+                            atol=atol, rtol=req.rtol, cn=entry.cn, a0=a0)
         if m == "bakp":
             return solvebakp(entry.x_pad, y_dev, thr=req.thr,
                              max_iter=req.max_iter, atol=atol,
                              rtol=req.rtol, omega=cfg.omega, mode="jacobi",
-                             cn=entry.cn_for_thr(req.thr))
+                             cn=entry.cn_for_thr(req.thr), a0=a0)
         if m == "bakp_gram":
             return solvebakp(entry.x_pad, y_dev, thr=req.thr,
                              max_iter=req.max_iter, atol=atol,
                              rtol=req.rtol, omega=cfg.omega, mode="gram",
                              ridge=cfg.ridge, cn=entry.cn_for_thr(req.thr),
-                             chol=entry.chol_for(req.thr, cfg.ridge))
+                             chol=entry.chol_for(req.thr, cfg.ridge), a0=a0)
         # Direct baselines ride the cached padded design but not cn/chol
-        # (atol is an iteration knob; direct methods don't use it).
+        # (atol/a0 are iteration knobs; direct methods don't use them).
         return solve(entry.x_pad, y_dev, method=m, max_iter=req.max_iter)
 
     def _strip(self, req: SolveRequest, coef, residual, *, bucket, kind,
-               group_size, latency, hit, n_sweeps, converged) -> ServedSolve:
+               group_size, latency, hit, n_sweeps, converged, entry=None,
+               warm=False) -> ServedSolve:
         obs, nvars = np.asarray(req.x).shape
         coef = np.asarray(coef)[:nvars]
         residual = np.asarray(residual)[:obs]
+        if entry is not None and self.config.warm_cache:
+            entry.store_coef(req.tenant_id, coef)
+        if warm:
+            self.stats.warm_starts += 1
         return ServedSolve(
             request_id=req.request_id,
             coef=coef,
@@ -248,23 +333,41 @@ class SolverServeEngine:
             group_size=group_size,
             latency_s=latency,
             cache_hit=hit,
+            warm_start=warm,
         )
 
     def _solve_multi_rhs(self, requests, idxs, entry, hit, bucket, results):
-        """Coalesce same-design requests into one (obs, k_pad) solve."""
-        obs_p = bucket[0]
+        """Coalesce same-design requests into one (obs, k_pad) solve.
+
+        Warm and cold members coalesce: if any member warm-starts, the
+        group solve gets a stacked ``a0`` whose cold columns are zero
+        (identical to those members' cold path).
+        """
+        obs_p, vars_p = bucket
         k = len(idxs)
         k_pad = next_pow2(k)
         ys = np.zeros((obs_p, k_pad), np.float32)
         for c, idx in enumerate(idxs):
             y = np.asarray(requests[idx].y, np.float32)
             ys[: y.shape[0], c] = y
+        req_method = requests[idxs[0]].method
+        if req_method in _BATCHABLE:
+            a0s = [self._resolve_a0(requests[idx], entry) for idx in idxs]
+        else:  # direct methods don't iterate, so warm starts are meaningless
+            a0s = [None] * k
+        a0_mat = None
+        if any(a is not None for a in a0s):
+            a0_mat = np.zeros((vars_p, k_pad), np.float32)
+            for c, a in enumerate(a0s):
+                if a is not None:
+                    a0_mat[:, c] = self._pad_a0(a, vars_p)
+            a0_mat = jnp.asarray(a0_mat)
         req0 = requests[idxs[0]]
         # Same design => same real obs for every member of the group.
         obs_real = np.asarray(req0.x).shape[0]
         atol = self._padded_atol(req0.atol, obs_real * k, obs_p * k_pad)
         t0 = time.perf_counter()
-        res = self._call_solver(req0, entry, jnp.asarray(ys), atol)
+        res = self._call_solver(req0, entry, jnp.asarray(ys), atol, a0=a0_mat)
         jax.block_until_ready(res.coef)
         dt = time.perf_counter() - t0
         coef = np.asarray(res.coef)
@@ -273,14 +376,15 @@ class SolverServeEngine:
             results[idx] = self._strip(
                 requests[idx], coef[:, c], resid[:, c], bucket=bucket,
                 kind="multi_rhs", group_size=k, latency=dt, hit=hit,
-                n_sweeps=res.n_sweeps, converged=res.converged)
+                n_sweeps=res.n_sweeps, converged=res.converged, entry=entry,
+                warm=a0s[c] is not None)
         self.stats.solver_calls += 1
         self.stats.multi_rhs_groups += 1
         self.stats.multi_rhs_requests += k
 
     def _solve_vmapped(self, requests, singles, bucket, results):
         """Stack same-bucket single-design requests into one vmapped solve."""
-        obs_p = bucket[0]
+        obs_p, vars_p = bucket
         req0 = requests[singles[0][0]]
         b = len(singles)
         b_pad = next_pow2(b)
@@ -291,10 +395,12 @@ class SolverServeEngine:
         ys = jnp.asarray(np.stack(
             [pad_y(np.asarray(requests[i].y, np.float32), obs_p)
              for i, _, _ in padded]))
+        a0s = [self._resolve_a0(requests[i], e) for i, e, _ in padded]
+        warm = any(a is not None for a in a0s)
         m = req0.method
         solver = _vmapped_solver(m, req0.max_iter, float(req0.rtol),
                                  int(req0.thr), float(self.config.omega),
-                                 float(self.config.ridge))
+                                 float(self.config.ridge), warm)
         # Per-element padding-corrected atol (real obs varies within a
         # bucket); traced, so it never forces a recompile.
         atols = jnp.asarray([
@@ -312,17 +418,24 @@ class SolverServeEngine:
         else:  # "bak"
             cns = jnp.stack([e.cn for _, e, _ in padded])
             args = (xs, ys, cns, atols)
+        if warm:
+            a0_mat = np.zeros((b_pad, vars_p), np.float32)
+            for row, a in enumerate(a0s):
+                if a is not None:
+                    a0_mat[row] = self._pad_a0(a, vars_p)
+            args = args + (jnp.asarray(a0_mat),)
         t0 = time.perf_counter()
         res = solver(*args)
         jax.block_until_ready(res.coef)
         dt = time.perf_counter() - t0
         coef = np.asarray(res.coef)
         resid = np.asarray(res.residual)
-        for row, (idx, _, hit) in enumerate(singles):
+        for row, (idx, entry, hit) in enumerate(singles):
             results[idx] = self._strip(
                 requests[idx], coef[row], resid[row], bucket=bucket,
                 kind="vmap", group_size=b, latency=dt, hit=hit,
-                n_sweeps=res.n_sweeps[row], converged=res.converged[row])
+                n_sweeps=res.n_sweeps[row], converged=res.converged[row],
+                entry=entry, warm=a0s[row] is not None)
         self.stats.solver_calls += 1
         self.stats.vmap_batches += 1
         self.stats.vmap_requests += b
@@ -332,13 +445,18 @@ class SolverServeEngine:
         obs_real = np.asarray(req.x).shape[0]
         y_pad = pad_y(np.asarray(req.y, np.float32), bucket[0])
         atol = self._padded_atol(req.atol, obs_real, bucket[0])
+        a0 = self._resolve_a0(req, entry)
+        a0_dev = None
+        if a0 is not None and req.method in _BATCHABLE:
+            a0_dev = jnp.asarray(self._pad_a0(a0, bucket[1]))
         t0 = time.perf_counter()
-        res = self._call_solver(req, entry, jnp.asarray(y_pad), atol)
+        res = self._call_solver(req, entry, jnp.asarray(y_pad), atol,
+                                a0=a0_dev)
         jax.block_until_ready(res.coef)
         dt = time.perf_counter() - t0
         results[idx] = self._strip(
             req, res.coef, res.residual, bucket=bucket, kind="single",
             group_size=1, latency=dt, hit=hit, n_sweeps=res.n_sweeps,
-            converged=res.converged)
+            converged=res.converged, entry=entry, warm=a0_dev is not None)
         self.stats.solver_calls += 1
         self.stats.single_solves += 1

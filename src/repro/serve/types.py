@@ -24,6 +24,21 @@ class SolveRequest:
         "normal" (same namespace as ``repro.core.solve``).  Requests are
         only coalesced/batched with requests using the same method.
       max_iter / atol / rtol / thr: solver knobs (see ``repro.core``).
+      a0: optional (vars,) initial coefficients (warm start).  The iterative
+        methods start from ``a0`` instead of zeros, so a request whose ``y``
+        drifted only slightly since its last solve converges in a fraction of
+        the cold-start sweeps.  Warm and cold requests still coalesce into
+        one multi-RHS solve (cold members ride a zero column of the stacked
+        ``a0``).  Ignored by the direct methods ("lstsq"/"normal").
+      tenant_id: optional stable caller identity.  When set (and the engine's
+        ``warm_cache`` is on) the design cache retains this tenant's last
+        coefficients keyed by (design, tenant) and uses them as ``a0`` on the
+        tenant's next solve against the same design; an explicit ``a0`` takes
+        precedence over the cached one.
+      deadline_s: optional *relative* deadline in seconds (from submit time).
+        The synchronous engine ignores it; the async dispatcher
+        (``repro.serve.dispatch``) flushes a bucket early so its oldest
+        member completes before its deadline, and reports misses.
       design_key: optional caller-provided identity for ``x``.  When two
         requests carry the same key the engine trusts it and skips hashing
         the matrix bytes; leave None to let the engine fingerprint ``x``.
@@ -37,6 +52,9 @@ class SolveRequest:
     atol: float = 0.0
     rtol: float = 0.0
     thr: int = 128
+    a0: Optional[Any] = None
+    tenant_id: Optional[str] = None
+    deadline_s: Optional[float] = None
     design_key: Optional[str] = None
     request_id: Optional[str] = None
 
@@ -59,6 +77,13 @@ class ServedSolve:
     (with the absolute tolerance corrected for padding), so an individual
     tenant in a group is not guaranteed its own per-column atol.  ``sse``
     is always this request's own, recomputed from the stripped residual.
+
+    ``warm_start`` is True when the solve started from a non-zero ``a0``
+    (explicit or recalled from the design cache's per-tenant coefficient
+    store).  ``error`` is None on success; on a solver failure the engine
+    isolates the poisoned batch, fills ``error`` with the exception text and
+    returns zero coefficients (``converged=False``) instead of wedging the
+    whole flush — check ``ok`` before trusting ``coef``.
     """
 
     request_id: str
@@ -72,4 +97,10 @@ class ServedSolve:
     group_size: int = 1
     latency_s: float = 0.0
     cache_hit: bool = False
+    warm_start: bool = False
+    error: Optional[str] = None
     extra: dict = field(default_factory=dict)
+
+    @property
+    def ok(self) -> bool:
+        return self.error is None

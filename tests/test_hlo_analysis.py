@@ -2,8 +2,6 @@
 true cost is known analytically (this underpins every §Roofline number)."""
 import jax
 import jax.numpy as jnp
-import numpy as np
-import pytest
 from jax import lax
 
 from repro.launch.hlo_analysis import HloCostModel, analyze

@@ -3,7 +3,6 @@
 All kernels run in interpret mode on CPU (same kernel body Python-executed);
 BlockSpecs/grid layouts are identical to the TPU path.
 """
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

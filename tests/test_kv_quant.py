@@ -4,7 +4,6 @@ import dataclasses
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.registry import ARCHS
 from repro.models.kvcache import cache_bytes, init_cache

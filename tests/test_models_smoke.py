@@ -13,8 +13,8 @@ import pytest
 from repro.configs.registry import ARCHS
 from repro.launch.steps import make_train_step
 from repro.models.kvcache import cache_bytes, init_cache
-from repro.models.model import (forward_decode, forward_prefill,
-                                forward_train, init_model, make_smoke_batch)
+from repro.models.model import (forward_decode, forward_prefill, init_model,
+                                make_smoke_batch)
 from repro.optim import make_optimizer
 
 ARCH_NAMES = sorted(ARCHS)
@@ -89,7 +89,6 @@ def test_decode_matches_forward(name, key):
     # path B: forward over all 33, take logits at the last position
     batch33 = dict(full)
     batch33["labels"] = full["tokens"]  # dummy
-    loss_logits = None
     from repro.models.model import _dtype, _positions
     from repro.models.common import embed_tokens, rmsnorm, unembed
     from repro.models.transformer import run_backbone

@@ -1,5 +1,4 @@
 """Algorithm 3 (SolveBakF) — feature selection + stepwise baseline."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 

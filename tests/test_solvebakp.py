@@ -1,5 +1,4 @@
 """Algorithm 2 (SolveBakP) — block CD, gram mode, property tests."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

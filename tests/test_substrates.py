@@ -1,10 +1,8 @@
 """Data pipeline, optimizers, checkpointing, compression, FT monitors."""
 import os
 
-import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.checkpoint import restore_checkpoint, save_checkpoint
 from repro.data import SyntheticLM
@@ -28,7 +26,7 @@ class TestData:
         np.testing.assert_array_equal(b["tokens"], batches1[3]["tokens"])
 
     def test_host_sharding_disjoint(self):
-        g = SyntheticLM(128, 16, 8, host_count=1, host_id=0)
+        SyntheticLM(128, 16, 8, host_count=1, host_id=0)
         h0 = SyntheticLM(128, 16, 8, host_count=2, host_id=0)
         h1 = SyntheticLM(128, 16, 8, host_count=2, host_id=1)
         assert h0.next_batch()["tokens"].shape == (4, 16)

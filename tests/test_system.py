@@ -6,7 +6,6 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs.registry import ARCHS
 from repro.core import fit_linear_probe, solvebakf
