@@ -1,0 +1,182 @@
+"""Sharded-serving throughput: placement-routed mesh solves vs single-device.
+
+    PYTHONPATH=src python -m benchmarks.serve_sharded [--smoke] \
+        [--json BENCH_shard.json]
+
+Exercises the two serving mesh placements on a forced 8-virtual-device CPU
+mesh (set up before jax loads, so run this as a fresh process):
+
+  * **obs-sharded** — distinct big-bucket designs routed to
+    ``solvebakp_obs_sharded`` (rows over the data axes), vs the same
+    workload on a mesh-less engine;
+  * **rhs-sharded** — one giant same-design group (k right-hand sides)
+    routed to ``solvebakp_rhs_sharded`` (k over the data axes, ``x``
+    replicated), vs the single-device coalesced multi-RHS solve.
+
+Reports ``name,us_per_call,derived`` CSV rows like ``benchmarks.run`` and
+writes a ``sharded`` section into the JSON report (BENCH_shard.json in CI).
+Wall-clock note: virtual CPU "devices" share the same physical cores, so
+sharded throughput here measures dispatch overhead + correctness, not real
+mesh scaling — the gate is therefore MAPE-only (<= 1e-4), with the
+throughput numbers informational, exactly like the other serve benches'
+``--smoke`` mode.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+import numpy as np
+
+MESH_SPEC = "4x2"
+
+
+def _ensure_devices():
+    """Force the virtual CPU mesh before jax initialises its backend."""
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+    from repro.launch.solver_serve import ensure_mesh_devices
+    ensure_mesh_devices(MESH_SPEC)
+
+
+def _mape(coef, ref, denom):
+    return float(np.mean(np.abs(coef - ref) / denom))
+
+
+def _serve_timed(engine, reqs):
+    t0 = time.perf_counter()
+    out = engine.serve(reqs)
+    return out, time.perf_counter() - t0
+
+
+def run(obs=2048, nvars=256, n_designs=8, k=64, thr=128, max_iter=40,
+        seed=0):
+    from repro.serve import (PlacementPolicy, ServeConfig, SolveRequest,
+                             SolverServeEngine, build_serve_mesh)
+
+    smesh = build_serve_mesh(MESH_SPEC)
+    # Thresholds sized so the benchmark's big bucket (obs × vars) routes
+    # obs-sharded and the k-group routes rhs-sharded — the policy under
+    # test is the routing machinery, not the default production numbers.
+    policy = PlacementPolicy(obs_shard_min_cells=obs * nvars,
+                            rhs_shard_min_k=min(k, 32))
+    rng = np.random.default_rng(seed)
+
+    # obs-sharded scenario: n_designs distinct big designs, no coalescing.
+    big = [rng.normal(size=(obs, nvars)).astype(np.float32)
+           for _ in range(n_designs)]
+    big_a = [rng.normal(size=(nvars,)).astype(np.float32) for _ in big]
+
+    def obs_reqs():
+        return [SolveRequest(x=x, y=x @ a, thr=thr, max_iter=max_iter,
+                             rtol=0.0, design_key=f"big-{i}",
+                             request_id=f"big-{i}")
+                for i, (x, a) in enumerate(zip(big, big_a))]
+
+    # rhs-sharded scenario: one small-bucket design shared by k tenants.
+    xs = rng.normal(size=(obs // 4, nvars // 4)).astype(np.float32)
+    A = rng.normal(size=(nvars // 4, k)).astype(np.float32)
+    ys = xs @ A
+
+    def rhs_reqs():
+        return [SolveRequest(x=xs, y=ys[:, i], thr=thr, max_iter=max_iter,
+                             rtol=0.0, design_key="grp",
+                             request_id=f"grp-{i}")
+                for i in range(k)]
+
+    eng_mesh = SolverServeEngine(
+        ServeConfig(placement_policy=policy, vmap_batch=False), mesh=smesh)
+    eng_single = SolverServeEngine(ServeConfig(vmap_batch=False))
+
+    # Warm both engines (compile + design cache), then time a second pass.
+    for eng in (eng_mesh, eng_single):
+        eng.serve(obs_reqs())
+        eng.serve(rhs_reqs())
+
+    out = {}
+    for name, mk, xref, aref in (
+            ("obs_sharded", obs_reqs, None, None),
+            ("rhs_sharded", rhs_reqs, xs, A)):
+        served_m, t_m = _serve_timed(eng_mesh, mk())
+        served_s, t_s = _serve_timed(eng_single, mk())
+        if name == "obs_sharded":
+            assert all(r.placement == "obs_sharded" for r in served_m), \
+                [r.placement for r in served_m]
+            refs = [np.linalg.lstsq(x.astype(np.float64),
+                                    (x @ a).astype(np.float64),
+                                    rcond=None)[0]
+                    for x, a in zip(big, big_a)]
+        else:
+            assert all(r.placement == "rhs_sharded" for r in served_m), \
+                [r.placement for r in served_m]
+            assert all(r.batch_kind == "multi_rhs" for r in served_m)
+            refs = list(np.linalg.lstsq(xref.astype(np.float64),
+                                        (xref @ aref).astype(np.float64),
+                                        rcond=None)[0].T)
+        assert all(r.placement == "single" for r in served_s)
+        mapes_m = [_mape(r.coef, ref, np.maximum(np.abs(ref), 1e-12))
+                   for r, ref in zip(served_m, refs)]
+        # Sharded-vs-single parity (the acceptance criterion the tests pin
+        # at 1e-5; reported here so regressions show up in the JSON too).
+        parity = [_mape(m.coef, s.coef, np.maximum(np.abs(s.coef), 1e-12))
+                  for m, s in zip(served_m, served_s)]
+        out[name] = {
+            "requests": len(served_m),
+            "sharded_s": t_m, "single_s": t_s,
+            "sharded_solves_per_s": len(served_m) / t_m,
+            "single_solves_per_s": len(served_s) / t_s,
+            "mape_worst": max(mapes_m),
+            "parity_mape_worst": max(parity),
+        }
+    out["mesh"] = MESH_SPEC
+    out["obs"], out["vars"], out["k"] = obs, nvars, k
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small sizes + MAPE-only gate (CI)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="merge metrics into a JSON report (BENCH_shard.json)")
+    args = ap.parse_args()
+
+    _ensure_devices()
+    obs, nvars, k = (512, 64, 32) if args.smoke else (2048, 256, 64)
+    r = run(obs=obs, nvars=nvars, n_designs=4 if args.smoke else 8, k=k,
+            thr=min(128, nvars))
+    if args.json:
+        try:
+            from benchmarks.serve_async import write_json
+        except ImportError:  # run as a bare script instead of -m
+            from serve_async import write_json
+        write_json(args.json, {"sharded": r})
+
+    print("name,us_per_call,derived")
+    for name in ("obs_sharded", "rhs_sharded"):
+        m = r[name]
+        tag = f"serve_sharded[{name}/o{r['obs']}xv{r['vars']}/mesh{r['mesh']}]"
+        print(f"{tag}/sharded,{m['sharded_s']/m['requests']*1e6:.0f},"
+              f"solves_per_s={m['sharded_solves_per_s']:.1f};"
+              f"mape={m['mape_worst']:.2e};"
+              f"parity={m['parity_mape_worst']:.2e}")
+        print(f"{tag}/single,{m['single_s']/m['requests']*1e6:.0f},"
+              f"solves_per_s={m['single_solves_per_s']:.1f}")
+    worst = max(r[n]["mape_worst"] for n in ("obs_sharded", "rhs_sharded"))
+    parity = max(r[n]["parity_mape_worst"]
+                 for n in ("obs_sharded", "rhs_sharded"))
+    # Both gates run in CI: accuracy vs lstsq AND the ISSUE acceptance
+    # criterion that placement-routed results match the single-device
+    # engine at MAPE <= 1e-5 (the slow-marked parity test is deselected in
+    # the tier-1 job, so this is its CI enforcement point).
+    ok = worst <= 1e-4 and parity <= 1e-5
+    print(f"acceptance: worst_mape={worst:.2e} (<=1e-4) "
+          f"parity={parity:.2e} (<=1e-5) -> "
+          f"{'PASS' if ok else 'FAIL'} (throughput informational on "
+          f"virtual-device CPU meshes)")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,55 @@
+"""Repo-root pytest config: seed-inherited known-failure deselection.
+
+``tests/known_failures.txt`` tracks test failures inherited with the seed
+(remat autodiff on CPU, int8-KV numerics — see ROADMAP.md); they are
+deselected at collection time so the tier-1 command from ROADMAP
+(``PYTHONPATH=src python -m pytest -x -q``) is green locally exactly as in
+CI, and any NEW failure stops the run.  Remove lines from the file as the
+root causes get fixed; run with ``--run-known-failures`` to execute the
+tracked tests anyway (e.g. to check whether an entry is stale).
+"""
+
+from __future__ import annotations
+
+import pathlib
+
+_KNOWN = pathlib.Path(__file__).parent / "tests" / "known_failures.txt"
+
+
+def pytest_addoption(parser):
+    parser.addoption(
+        "--run-known-failures",
+        action="store_true",
+        default=False,
+        help="collect tests listed in tests/known_failures.txt instead of deselecting them",
+    )
+
+
+def _known_failures():
+    try:
+        lines = _KNOWN.read_text().splitlines()
+    except OSError:
+        return frozenset()
+    stripped = (line.strip() for line in lines)
+    return frozenset(line for line in stripped if line and not line.startswith("#"))
+
+
+def pytest_collection_modifyitems(config, items):
+    if config.getoption("--run-known-failures"):
+        return
+    known = _known_failures()
+    if not known:
+        return
+    kept, deselected = [], []
+    for item in items:
+        # nodeids are rootdir-relative ("tests/test_x.py::test_y[param]"),
+        # matching the file's entries; parametrised entries may list either
+        # the exact id or the bare function.
+        bare = item.nodeid.split("[", 1)[0]
+        if item.nodeid in known or bare in known:
+            deselected.append(item)
+        else:
+            kept.append(item)
+    if deselected:
+        config.hook.pytest_deselected(items=deselected)
+        items[:] = kept

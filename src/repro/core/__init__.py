@@ -4,7 +4,8 @@ Layout:
   solvebak.py     Algorithm 1 (serial cyclic CD) — paper-faithful baseline.
   solvebakp.py    Algorithm 2 (block-parallel CD) + beyond-paper gram mode.
   solvebakf.py    Algorithm 3 (greedy feature selection) + stepwise baseline.
-  distributed.py  shard_map obs-/vars-/2D-sharded pod-scale solvers.
+  distributed.py  shard_map obs-/vars-/2D-/rhs-sharded pod-scale solvers
+                  (multi-RHS + warm-start capable, serving-placement ready).
   precondition.py column normalisation.
   api.py          public entry points (solve, fit_linear_probe).
 """
@@ -12,6 +13,7 @@ from repro.core.api import fit_linear_probe, solve
 from repro.core.distributed import (
     solvebakp_2d,
     solvebakp_obs_sharded,
+    solvebakp_rhs_sharded,
     solvebakp_vars_sharded,
 )
 from repro.core.precondition import normalize_columns, unscale_coef
@@ -33,6 +35,7 @@ __all__ = [
     "solvebakp",
     "solvebakp_2d",
     "solvebakp_obs_sharded",
+    "solvebakp_rhs_sharded",
     "solvebakp_vars_sharded",
     "stepwise_regression_baseline",
     "unscale_coef",

@@ -29,7 +29,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.core.types import SolveResult, column_norms_sq, safe_inv
+from repro.core.types import (SolveResult, column_norms_sq, safe_inv,
+                              sweep_stop_flags)
 
 
 @functools.partial(
@@ -122,7 +123,7 @@ def solvebak(
         return a, e
 
     def sweep_body(state):
-        a, e, i, sse_prev, history, converged = state
+        a, e, i, sse_prev, history, converged, stop = state
         if order == "random":  # static: resolved at trace time
             perm = jax.random.permutation(jax.random.fold_in(key, i), nvars)
         else:
@@ -133,16 +134,18 @@ def solvebak(
         )
         sse = jnp.vdot(e, e)
         history = history.at[i].set(sse)
-        hit_atol = (atol_sse > 0.0) & (sse <= atol_sse)
-        hit_rtol = (rtol > 0.0) & ((sse_prev - sse) <= rtol * sse_prev)
-        return a, e, i + 1, sse, history, hit_atol | hit_rtol
+        converged, stop = sweep_stop_flags(sse, sse_prev, sse0, atol_sse,
+                                           rtol)
+        return a, e, i + 1, sse, history, converged, stop
 
     def cond(state):
-        _, _, i, _, _, converged = state
-        return (i < max_iter) & ~converged
+        _, _, i, _, _, _, stop = state
+        return (i < max_iter) & ~stop
 
-    a, e, n, sse, history, converged = lax.while_loop(
-        cond, sweep_body, (a, e0, jnp.int32(0), sse0, history0, jnp.bool_(False))
+    a, e, n, sse, history, converged, _ = lax.while_loop(
+        cond, sweep_body,
+        (a, e0, jnp.int32(0), sse0, history0, jnp.bool_(False),
+         jnp.bool_(False))
     )
     if not multi:
         a, e = a[:, 0], e[:, 0]

@@ -45,7 +45,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.core.types import SolveResult, column_norms_sq, safe_inv
+from repro.core.types import (SolveResult, column_norms_sq, safe_inv,
+                              sweep_stop_flags)
 
 
 def _pad_cols(x: jax.Array, thr: int):
@@ -170,20 +171,22 @@ def solvebakp(
         return (ab, e), None
 
     def sweep_body(state):
-        ab, e, i, sse_prev, history, converged = state
+        ab, e, i, sse_prev, history, converged, stop = state
         (ab, e), _ = lax.scan(block_step, (ab, e), jnp.arange(nblocks))
         sse = jnp.vdot(e, e)
         history = history.at[i].set(sse)
-        hit_atol = (atol_sse > 0.0) & (sse <= atol_sse)
-        hit_rtol = (rtol > 0.0) & ((sse_prev - sse) <= rtol * sse_prev)
-        return ab, e, i + 1, sse, history, hit_atol | hit_rtol
+        converged, stop = sweep_stop_flags(sse, sse_prev, sse0, atol_sse,
+                                           rtol)
+        return ab, e, i + 1, sse, history, converged, stop
 
     def cond(state):
-        _, _, i, _, _, converged = state
-        return (i < max_iter) & ~converged
+        _, _, i, _, _, _, stop = state
+        return (i < max_iter) & ~stop
 
-    ab, e, n, sse, history, converged = lax.while_loop(
-        cond, sweep_body, (ab0, e0, jnp.int32(0), sse0, history0, jnp.bool_(False))
+    ab, e, n, sse, history, converged, _ = lax.while_loop(
+        cond, sweep_body,
+        (ab0, e0, jnp.int32(0), sse0, history0, jnp.bool_(False),
+         jnp.bool_(False))
     )
     coef = ab.reshape(nblocks * thr, nrhs)[:nvars]
     if not multi:

@@ -65,3 +65,35 @@ def safe_inv(cn: jax.Array) -> jax.Array:
     defined as 0 for it; this keeps the update well-posed.
     """
     return jnp.where(cn > 0.0, 1.0 / jnp.where(cn > 0.0, cn, 1.0), 0.0)
+
+
+def sweep_stop_flags(sse, sse_prev, sse0, atol_sse, rtol):
+    """Per-sweep stopping decision shared by every iterative solver.
+
+    Returns ``(converged, stop)``:
+
+      * ``stop`` — the loop should exit: the absolute tolerance fired, the
+        sweep improved SSE by less than ``rtol * sse_prev``, or SSE *rose*
+        (no further progress is coming from more sweeps either way).
+      * ``converged`` — whether that exit may be reported as success.  An
+        SSE rise splits on net progress: staying at/near the starting
+        ``sse0`` (within a 1% band — float-accumulation jitter, e.g. a cold
+        run stalled at its accuracy floor or a warm start that was already
+        at the fixed point) is a stall and reports True exactly like the
+        classic rtol exit, while ending materially *above* ``sse0`` is
+        genuine divergence (Jacobi-within-block with correlated columns /
+        too-large ω blows up geometrically, so it clears the band within a
+        sweep) and reports False.  Without the distinction,
+        ``(sse_prev - sse) <= rtol * sse_prev`` is trivially true for any
+        SSE increase and a diverging solve would stop after one sweep
+        claiming success.
+
+    With ``rtol == 0`` the relative/divergence checks are off (the solve
+    runs its full ``max_iter`` budget exactly as before).
+    """
+    improved = sse <= sse_prev
+    hit_atol = (atol_sse > 0.0) & (sse <= atol_sse)
+    hit_rtol = (rtol > 0.0) & improved & ((sse_prev - sse) <= rtol * sse_prev)
+    rose = (rtol > 0.0) & ~improved
+    converged = hit_atol | hit_rtol | (rose & (sse <= 1.01 * sse0))
+    return converged, hit_atol | hit_rtol | rose

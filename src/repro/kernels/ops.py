@@ -17,7 +17,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.core.types import SolveResult, column_norms_sq, safe_inv
+from repro.core.types import (SolveResult, column_norms_sq, safe_inv,
+                              sweep_stop_flags)
 from repro.kernels.block_update import block_update, score_features
 from repro.kernels.cd_sweep import bakp_sweep, cd_sweep
 
@@ -64,21 +65,22 @@ def solvebakp_kernel(
     atol_sse = jnp.float32(obs * nrhs) * jnp.float32(atol) ** 2
 
     def body(state):
-        a, e, i, sse_prev, history, converged = state
+        a, e, i, sse_prev, history, converged, stop = state
         da, e = sweep(x_t, e, inv_cn, block=block, interpret=interpret)
         a = a + da
         sse = jnp.vdot(e, e)
         history = history.at[i].set(sse)
-        hit_atol = (atol_sse > 0.0) & (sse <= atol_sse)
-        hit_rtol = (rtol > 0.0) & ((sse_prev - sse) <= rtol * sse_prev)
-        return a, e, i + 1, sse, history, hit_atol | hit_rtol
+        converged, stop = sweep_stop_flags(sse, sse_prev, sse0, atol_sse,
+                                           rtol)
+        return a, e, i + 1, sse, history, converged, stop
 
     def cond(state):
-        _, _, i, _, _, converged = state
-        return (i < max_iter) & ~converged
+        _, _, i, _, _, _, stop = state
+        return (i < max_iter) & ~stop
 
-    a, e, n, sse, history, converged = lax.while_loop(
-        cond, body, (a0, e0, jnp.int32(0), sse0, history0, jnp.bool_(False)))
+    a, e, n, sse, history, converged, _ = lax.while_loop(
+        cond, body, (a0, e0, jnp.int32(0), sse0, history0, jnp.bool_(False),
+                     jnp.bool_(False)))
     if not multi:
         return SolveResult(a[:, 0], e[0], sse, n, converged, history)
     return SolveResult(a, e.T, sse, n, converged, history)

@@ -13,6 +13,14 @@ Async deadline-aware dispatch (Poisson arrivals through AsyncDispatcher):
         --requests 256 --rate 200 --deadline-ms 500 --max-batch 16 \
         --tenants 32
 
+Mesh-sharded placement (route big buckets / giant same-design groups onto
+the sharded SolveBakP backends; on CPU this forces virtual host devices
+before jax loads, so it must be a fresh process):
+
+    PYTHONPATH=src python -m repro.launch.solver_serve --mesh 4x2 \
+        --requests 256 --obs 2048 --vars 256 --designs 4 \
+        --shard-min-cells 65536 --rhs-shard-min-k 32
+
 ``--designs D`` controls design-matrix reuse: requests cycle over D distinct
 matrices, so every flush window sees same-design groups (coalesced into
 multi-RHS solves) and, across windows, warm design-cache hits.  ``--designs``
@@ -26,9 +34,29 @@ driver reports the deadline hit rate.
 from __future__ import annotations
 
 import argparse
+import os
 import time
 
 import numpy as np
+
+
+def ensure_mesh_devices(spec: str) -> None:
+    """Force enough virtual CPU devices for ``spec`` BEFORE jax imports.
+
+    XLA reads ``--xla_force_host_platform_device_count`` at backend init, so
+    this only works from a fresh process that has not touched jax yet — which
+    is why the driver defers every ``repro.serve`` import into ``main``.  On
+    a real accelerator platform (JAX_PLATFORMS set to tpu/gpu) the flag is
+    left alone: the mesh uses the physical devices.
+    """
+    platforms = os.environ.get("JAX_PLATFORMS", "cpu")
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "cpu" in platforms and "xla_force_host_platform_device_count" not in flags:
+        n = 1  # inline product: importing repro.serve here would pull in jax
+        for part in spec.lower().split("x"):
+            n *= int(part)
+        os.environ["XLA_FLAGS"] = \
+            f"{flags} --xla_force_host_platform_device_count={n}".strip()
 
 
 def build_requests(rng, xs, n, method, max_iter, rtol, thr, noise=0.0,
@@ -65,10 +93,12 @@ def report_engine(engine):
           f"covering {s.multi_rhs_requests} reqs; "
           f"vmap batches={s.vmap_batches} covering {s.vmap_requests} reqs; "
           f"singles={s.single_solves}; warm starts={s.warm_starts}; "
-          f"failures={s.failures})")
+          f"failures={s.failures}; sharded={s.sharded_solves})")
     c = engine.cache.stats
     print(f"design cache: {c.hits} hits / {c.misses} misses "
           f"(hit rate {c.hit_rate:.1%}), {len(engine.cache)} resident")
+    if engine.mesh is not None:
+        print(f"mesh: {engine.mesh.describe()}")
 
 
 def run_sync(args, engine, reqs):
@@ -83,12 +113,16 @@ def run_sync(args, engine, reqs):
     lat = np.array([r.latency_s for r in results])
     kinds = {k: sum(r.batch_kind == k for r in results)
              for k in ("multi_rhs", "vmap", "single", "error")}
+    placements = {}
+    for r in results:
+        placements[r.placement] = placements.get(r.placement, 0) + 1
     print(f"served {len(results)} requests in {wall:.3f}s "
           f"-> {len(results)/wall:.1f} solves/s")
     print(f"latency p50={np.percentile(lat, 50)*1e3:.2f}ms "
           f"p95={np.percentile(lat, 95)*1e3:.2f}ms "
           f"max={lat.max()*1e3:.2f}ms (batch wall time per request)")
     print(f"batch mix: {kinds}")
+    print(f"placement mix: {placements}")
     report_engine(engine)
     return reqs, results
 
@@ -165,6 +199,16 @@ def main():
                     help="sync mode: requests per flush window")
     ap.add_argument("--tenants", type=int, default=0,
                     help="recurring tenant ids (0 = off; enables warm starts)")
+    ap.add_argument("--mesh", default=None, metavar="DxM",
+                    help="route big buckets onto a device mesh, e.g. '8' or "
+                         "'4x2' (data[xmodel]); on CPU forces that many "
+                         "virtual host devices")
+    ap.add_argument("--shard-min-cells", type=int, default=None,
+                    help="bucket obs_p*vars_p at which solves go obs-sharded "
+                         "(default: PlacementPolicy's 2^21)")
+    ap.add_argument("--rhs-shard-min-k", type=int, default=32,
+                    help="same-design group size at which the k axis shards "
+                         "across data devices")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--check", action="store_true",
                     help="verify every request vs numpy lstsq (slow)")
@@ -180,10 +224,24 @@ def main():
                     default="block")
     args = ap.parse_args()
 
-    from repro.serve import ServeConfig, SolverServeEngine
+    if args.mesh:
+        ensure_mesh_devices(args.mesh)  # must precede any jax import
+
+    from repro.serve import (PlacementPolicy, ServeConfig, SolverServeEngine,
+                             build_serve_mesh)
 
     rng = np.random.default_rng(args.seed)
-    engine = SolverServeEngine(ServeConfig())
+    smesh = build_serve_mesh(args.mesh) if args.mesh else None
+    policy = None
+    if args.mesh:
+        defaults = PlacementPolicy()
+        policy = PlacementPolicy(
+            obs_shard_min_cells=(args.shard_min_cells
+                                 if args.shard_min_cells is not None
+                                 else defaults.obs_shard_min_cells),
+            rhs_shard_min_k=args.rhs_shard_min_k)
+    engine = SolverServeEngine(ServeConfig(placement_policy=policy),
+                               mesh=smesh)
     xs = [rng.normal(size=(args.obs, args.vars)).astype(np.float32)
           for _ in range(args.designs)]
     reqs = build_requests(rng, xs, args.requests, args.method, args.max_iter,

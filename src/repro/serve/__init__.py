@@ -14,6 +14,9 @@ Layout:
   batching.py  pow-2 shape buckets, exact zero padding, design fingerprints,
                deterministic request grouping, request validation.
   cache.py     LRU DesignCache of per-design solver state + warm coefs.
+  placement.py Placement/PlacementPolicy/ServeMesh — routing buckets onto
+               the mesh-sharded solvers (obs-sharded, k-sharded multi-RHS,
+               2-D) by padded size.
   engine.py    SolverServeEngine — submit/flush front-end.
   dispatch.py  AsyncDispatcher — bounded intake queue, per-request
                deadlines, full/deadline/idle flush policy, host-side
@@ -32,6 +35,9 @@ from repro.serve.dispatch import (AsyncDispatcher, DispatchConfig,
                                   DispatcherStopped, DispatchStats,
                                   QueueFullError, SolveTicket)
 from repro.serve.engine import ServeConfig, ServeStats, SolverServeEngine
+from repro.serve.placement import (Placement, PlacementPolicy, ServeMesh,
+                                   build_serve_mesh, mesh_device_count,
+                                   placement_for_bucket, placement_for_group)
 from repro.serve.types import ServedSolve, SolveRequest
 
 __all__ = [
@@ -42,13 +48,20 @@ __all__ = [
     "DispatchConfig",
     "DispatchStats",
     "DispatcherStopped",
+    "Placement",
+    "PlacementPolicy",
     "QueueFullError",
     "ServeConfig",
+    "ServeMesh",
     "ServeStats",
     "ServedSolve",
     "SolveRequest",
     "SolveTicket",
     "SolverServeEngine",
+    "build_serve_mesh",
+    "mesh_device_count",
+    "placement_for_bucket",
+    "placement_for_group",
     "bucket_shape",
     "design_fingerprint",
     "group_requests",

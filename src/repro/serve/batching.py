@@ -121,25 +121,35 @@ def request_bucket(req: SolveRequest, *, min_obs: int = 8,
     return bucket_shape(obs, nvars, min_obs=min_obs, min_vars=min_vars)
 
 
-def config_key(req: SolveRequest, bucket: Bucket) -> Tuple:
+def config_key(req: SolveRequest, bucket: Bucket, placement=None) -> Tuple:
     """Outer grouping key: only the knobs the request's method consumes.
 
     Direct methods ("lstsq"/"normal") ignore every iteration knob, so any
     mix of per-tenant max_iter/rtol/thr still coalesces into one multi-RHS
     solve; "bak" additionally ignores ``thr``.  bucket and method always
     lead (the engine reads outer[0]/outer[1]).
+
+    ``placement`` (a ``repro.serve.placement.Placement``, or None for the
+    mesh-less engine) always trails the key: a compiled program is laid out
+    for exactly one mesh placement, so requests routed to different
+    placements must never share a batch even if every solver knob matches.
     """
     if req.method in ("lstsq", "normal"):
-        return (bucket, req.method)
-    if req.method == "bak":
-        return (bucket, req.method, req.max_iter, float(req.atol),
-                float(req.rtol))
-    return (bucket, req.method, req.max_iter, float(req.atol),
-            float(req.rtol), int(req.thr))
+        key: Tuple = (bucket, req.method)
+    elif req.method == "bak":
+        key = (bucket, req.method, req.max_iter, float(req.atol),
+               float(req.rtol))
+    else:
+        key = (bucket, req.method, req.max_iter, float(req.atol),
+               float(req.rtol), int(req.thr))
+    if placement is not None:
+        key = key + (placement,)
+    return key
 
 
 def group_requests(
     requests: List[SolveRequest], *, min_obs: int = 8, min_vars: int = 8,
+    placement_fn=None,
 ) -> Dict[Tuple, Dict[str, List[int]]]:
     """Group request indices: (bucket, method-config) → design key → [idx].
 
@@ -148,11 +158,16 @@ def group_requests(
     solve land in the same group; the inner key is the design fingerprint
     (or caller-supplied ``design_key``).  Insertion order of both levels
     follows first occurrence in ``requests``.
+
+    ``placement_fn(bucket, method) -> Placement`` (optional) appends the
+    mesh placement to the outer key — see ``config_key``.
     """
     groups: Dict[Tuple, Dict[str, List[int]]] = {}
     for i, req in enumerate(requests):
         bucket = request_bucket(req, min_obs=min_obs, min_vars=min_vars)
+        placement = (placement_fn(bucket, req.method)
+                     if placement_fn is not None else None)
         key = req.design_key or design_fingerprint(req.x)
-        groups.setdefault(config_key(req, bucket), {}).setdefault(
+        groups.setdefault(config_key(req, bucket, placement), {}).setdefault(
             key, []).append(i)
     return groups

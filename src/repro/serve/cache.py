@@ -11,12 +11,22 @@ cached across requests, keyed by the design fingerprint:
   * the per-block Gram Cholesky factors for ``mode="gram"`` — the
     O(obs·vars·thr) factorisation that dominates small-iteration solves,
     computed once per (thr, ridge) and reused by every later request;
+  * per-placement sharded device copies — a bucket routed to a mesh-sharded
+    backend (see ``repro.serve.placement``) needs ``x`` laid out for that
+    backend's in_specs (rows over data axes, replicated, 2-D); caching the
+    ``device_put`` per placement means repeat flushes skip the reshard;
   * (optionally) each tenant's last solved coefficients — repeated-design
     tenants re-solve with slowly-drifting ``y``, and warm-starting from the
     previous solution cuts the sweep count without changing the fixed point.
 
 Entries are LRU-evicted so memory is bounded by ``max_entries`` designs;
 per-entry warm coefficients are themselves LRU-bounded by ``max_tenants``.
+
+Thread safety: the async dispatcher's pre-warm thread and the solver thread
+touch the same entries concurrently, so every piece of mutable per-entry
+state (warm-coefficient LRU, derived-factor dicts, per-placement copies) is
+guarded by a per-entry lock — the cache-level lock only covers the LRU map
+itself.
 """
 from __future__ import annotations
 
@@ -35,7 +45,15 @@ from repro.core.types import column_norms_sq
 
 @dataclass
 class DesignEntry:
-    """Cached per-design state.  ``x_pad`` is bucket-padded, fp32, on device."""
+    """Cached per-design state.  ``x_pad`` is bucket-padded, fp32, on device.
+
+    All mutable members (``_warm``, ``chol``, ``_cn_thr``, ``_sharded``) are
+    read AND written from two threads (the dispatcher's pre-warm thread and
+    the engine's solver thread), so every accessor takes the per-entry
+    ``_lock`` — an OrderedDict mid-``move_to_end`` or a dict mid-insert is
+    not safe to race.  The lock is per-entry (not the cache-wide one) so a
+    slow Cholesky build for one design never blocks lookups on another.
+    """
 
     x_pad: jax.Array                      # (obs_p, vars_p)
     cn: jax.Array                         # (vars_p,) squared column norms
@@ -43,16 +61,20 @@ class DesignEntry:
     max_tenants: int = 64
     _cn_thr: Dict[int, jax.Array] = field(default_factory=dict)
     _warm: "OrderedDict[str, np.ndarray]" = field(default_factory=OrderedDict)
+    _sharded: Dict[object, jax.Array] = field(default_factory=dict)
+    _lock: threading.RLock = field(default_factory=threading.RLock,
+                                   repr=False, compare=False)
 
     # --------------------------------------------- per-tenant warm starts
     def warm_coef(self, tenant_id: Optional[str]) -> Optional[np.ndarray]:
         """Last stored coefficients for ``tenant_id`` (None = cold)."""
         if tenant_id is None:
             return None
-        coef = self._warm.get(tenant_id)
-        if coef is not None:
-            self._warm.move_to_end(tenant_id)
-        return coef
+        with self._lock:
+            coef = self._warm.get(tenant_id)
+            if coef is not None:
+                self._warm.move_to_end(tenant_id)
+            return coef
 
     def store_coef(self, tenant_id: Optional[str], coef: np.ndarray) -> None:
         """Retain a tenant's solved (unpadded) coefficients, LRU-bounded.
@@ -63,10 +85,12 @@ class DesignEntry:
         """
         if tenant_id is None:
             return
-        self._warm[tenant_id] = np.array(coef, np.float32, copy=True)
-        self._warm.move_to_end(tenant_id)
-        while len(self._warm) > self.max_tenants:
-            self._warm.popitem(last=False)
+        coef = np.array(coef, np.float32, copy=True)
+        with self._lock:
+            self._warm[tenant_id] = coef
+            self._warm.move_to_end(tenant_id)
+            while len(self._warm) > self.max_tenants:
+                self._warm.popitem(last=False)
 
     def cn_for_thr(self, thr: int) -> jax.Array:
         """Column norms extended to solvebakp's thr-multiple padding."""
@@ -75,24 +99,51 @@ class DesignEntry:
         pad = nblocks * thr - vars_p
         if pad == 0:
             return self.cn
-        if thr not in self._cn_thr:
-            self._cn_thr[thr] = jnp.concatenate(
-                [self.cn, jnp.zeros((pad,), jnp.float32)])
-        return self._cn_thr[thr]
+        with self._lock:
+            if thr not in self._cn_thr:
+                self._cn_thr[thr] = jnp.concatenate(
+                    [self.cn, jnp.zeros((pad,), jnp.float32)])
+            return self._cn_thr[thr]
 
     def chol_for(self, thr: int, ridge: float) -> jax.Array:
         """Block-Gram Cholesky factors for (thr, ridge), computed once."""
         key = (int(thr), float(ridge))
-        if key not in self.chol:
-            obs_p, vars_p = self.x_pad.shape
-            nblocks = -(-vars_p // thr)
-            pad = nblocks * thr - vars_p
-            x = self.x_pad
-            if pad:
-                x = jnp.pad(x, ((0, 0), (0, pad)))
-            xb = x.reshape(obs_p, nblocks, thr)
-            self.chol[key] = block_gram_cholesky(xb, ridge)
-        return self.chol[key]
+        with self._lock:
+            if key not in self.chol:
+                obs_p, vars_p = self.x_pad.shape
+                nblocks = -(-vars_p // thr)
+                pad = nblocks * thr - vars_p
+                x = self.x_pad
+                if pad:
+                    x = jnp.pad(x, ((0, 0), (0, pad)))
+                xb = x.reshape(obs_p, nblocks, thr)
+                self.chol[key] = block_gram_cholesky(xb, ridge)
+            return self.chol[key]
+
+    def x_for_placement(self, placement, smesh) -> jax.Array:
+        """``x_pad`` laid out for a sharded placement's in_specs.
+
+        The ``device_put`` (an all-device scatter or broadcast) happens once
+        per (design, placement) and is memoised, so repeat flushes onto the
+        same mesh reuse the resident copy instead of resharding.
+        """
+        if placement is None or not placement.sharded:
+            return self.x_pad
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        with self._lock:
+            if placement not in self._sharded:
+                if placement.kind == "obs_sharded":
+                    spec = P(smesh.data_axes, None)
+                elif placement.kind == "rhs_sharded":
+                    spec = P(None, None)  # replicated: devices share x
+                elif placement.kind == "mesh_2d":
+                    spec = P(smesh.data_axes, smesh.model_axis)
+                else:
+                    raise ValueError(
+                        f"unknown placement kind {placement.kind!r}")
+                self._sharded[placement] = jax.device_put(
+                    self.x_pad, NamedSharding(smesh.mesh, spec))
+            return self._sharded[placement]
 
 
 @dataclass

@@ -377,7 +377,11 @@ class AsyncDispatcher:
                     record_stats=False)
             except Exception:
                 pass  # engine flush will surface the failure per-request
-        batch = self._pending.setdefault(config_key(req, bucket),
+        # Placement-aware key: batches the dispatcher accumulates line up
+        # with the engine's flush grouping, so a sharded bucket's requests
+        # never share a pending batch with single-device ones.
+        placement = self.engine.placement_for(bucket, req.method)
+        batch = self._pending.setdefault(config_key(req, bucket, placement),
                                          _PendingBatch())
         batch.tickets.append(ticket)
         batch.last_join = time.monotonic()

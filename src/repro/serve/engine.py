@@ -22,6 +22,16 @@ small number of compiled batch solves:
      start from that point instead of zeros.  Warm and cold requests
      coalesce freely: cold members of a group ride a zero column/row of the
      stacked ``a0``, which is bit-identical to the cold path.
+  6. **Mesh placement** — an engine constructed with a ``ServeMesh`` routes
+     buckets onto the mesh-sharded SolveBakP backends
+     (``repro.core.distributed``) by size: big buckets shard their design
+     rows over the data axes (``obs_sharded``), giant same-design multi-RHS
+     groups shard the k axis instead (``rhs_sharded`` — one stream of ``x``
+     per device serves k/D tenants), and optionally pod-scale buckets go
+     2-D.  The placement is part of the grouping key, so one compiled
+     program never mixes mesh layouts; vmap batching stays single-device
+     (vmapping over shard_map is not a thing), so sharded buckets solve
+     their leftover singles individually.
 
 Results come back as per-request ``ServedSolve``s, in submission order, with
 padding stripped and per-request SSE recomputed from the stripped residual.
@@ -52,11 +62,16 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.api import solve
+from repro.core.distributed import (solvebakp_2d, solvebakp_obs_sharded,
+                                    solvebakp_rhs_sharded)
 from repro.core.solvebak import solvebak
 from repro.core.solvebakp import solvebakp
 from repro.serve.batching import (group_requests, next_pow2, pad_x, pad_y,
                                   prepare_request)
 from repro.serve.cache import DesignCache, DesignEntry
+from repro.serve.placement import (SHARDABLE_METHODS, Placement,
+                                   PlacementPolicy, ServeMesh,
+                                   placement_for_bucket, placement_for_group)
 from repro.serve.types import ServedSolve, SolveRequest
 
 # Methods that can be vmap-batched across designs.  Same-design multi-RHS
@@ -78,6 +93,9 @@ class ServeConfig:
     cache_entries: int = 64      # LRU design-cache capacity
     warm_cache: bool = True      # retain per-tenant coefs for warm starts
     warm_tenants: int = 64       # per-design LRU cap on retained tenants
+    placement_policy: Optional[PlacementPolicy] = None  # None → defaults
+    omega_2d: float = 0.5        # damping for the 2-D mesh placement (its
+    # cross-device Jacobi block is D·thr wide — see core.distributed)
 
 
 @dataclass
@@ -91,6 +109,7 @@ class ServeStats:
     single_solves: int = 0
     warm_starts: int = 0
     failures: int = 0
+    sharded_solves: int = 0      # solver calls routed to a mesh placement
 
 
 @functools.lru_cache(maxsize=32)
@@ -130,15 +149,36 @@ def _vmapped_solver(method: str, max_iter: int, rtol: float, thr: int,
 
 
 class SolverServeEngine:
-    """Multi-tenant batched serving front-end for the BAK solver family."""
+    """Multi-tenant batched serving front-end for the BAK solver family.
 
-    def __init__(self, config: Optional[ServeConfig] = None):
+    ``mesh`` (optional) is a ``repro.serve.placement.ServeMesh`` (or a raw
+    ``jax.sharding.Mesh``, wrapped with its first axis as data); with one,
+    the placement policy routes big buckets/groups onto the mesh-sharded
+    solvers.  Without one (default) every solve is single-device, exactly
+    as before.
+    """
+
+    def __init__(self, config: Optional[ServeConfig] = None, mesh=None):
         self.config = config or ServeConfig()
+        if mesh is not None and not isinstance(mesh, ServeMesh):
+            axes = tuple(mesh.axis_names)
+            model = "model" if "model" in axes and len(axes) > 1 else None
+            data = tuple(a for a in axes if a != model)
+            mesh = ServeMesh(mesh=mesh, data_axes=data, model_axis=model)
+        self.mesh: Optional[ServeMesh] = mesh
+        self.policy = self.config.placement_policy or PlacementPolicy()
         self.cache = DesignCache(max_entries=self.config.cache_entries,
                                  max_tenants=self.config.warm_tenants)
         self.stats = ServeStats()
         self._pending: List[SolveRequest] = []
         self._seq = 0
+
+    def placement_for(self, bucket, method: str) -> Optional[Placement]:
+        """Bucket-level placement (None when the engine has no mesh, so
+        mesh-less grouping keys stay identical to the pre-placement ones)."""
+        if self.mesh is None:
+            return None
+        return placement_for_bucket(bucket, method, self.policy, self.mesh)
 
     # ------------------------------------------------------------- intake
     def submit(self, request: SolveRequest) -> str:
@@ -176,10 +216,12 @@ class SolverServeEngine:
         results: List[Optional[ServedSolve]] = [None] * len(requests)
         cfg = self.config
         groups = group_requests(requests, min_obs=cfg.min_obs,
-                                min_vars=cfg.min_vars)
+                                min_vars=cfg.min_vars,
+                                placement_fn=self.placement_for)
         for outer, designs in groups.items():
             bucket = outer[0]
             method = outer[1]
+            placement = self.placement_for(bucket, method)
             singles = []  # (idx, entry, cache_hit)
             for key, idxs in designs.items():
                 try:
@@ -191,12 +233,17 @@ class SolverServeEngine:
                 if cfg.coalesce and len(idxs) > 1:
                     try:
                         self._solve_multi_rhs(requests, idxs, entry, hit,
-                                              bucket, results)
+                                              bucket, results, placement)
                     except Exception as exc:
                         self._fail(requests, idxs, bucket, exc, results)
                 else:
                     singles.extend((i, entry, hit) for i in idxs)
-            if cfg.vmap_batch and len(singles) > 1 and method in _BATCHABLE:
+            # vmap batching is single-device only (a vmapped shard_map would
+            # nest meshes); sharded buckets solve leftovers individually.
+            use_vmap = (cfg.vmap_batch and len(singles) > 1
+                        and method in _BATCHABLE
+                        and (placement is None or not placement.sharded))
+            if use_vmap:
                 for lo in range(0, len(singles), cfg.max_vmap_batch):
                     chunk = singles[lo:lo + cfg.max_vmap_batch]
                     try:
@@ -205,7 +252,7 @@ class SolverServeEngine:
                                                 results)
                         else:
                             self._solve_one(requests, *chunk[0], bucket,
-                                            results)
+                                            results, placement)
                     except Exception as exc:
                         self._fail(requests, [i for i, _, _ in chunk], bucket,
                                    exc, results)
@@ -213,7 +260,7 @@ class SolverServeEngine:
                 for idx, entry, hit in singles:
                     try:
                         self._solve_one(requests, idx, entry, hit, bucket,
-                                        results)
+                                        results, placement)
                     except Exception as exc:
                         self._fail(requests, [idx], bucket, exc, results)
         assert all(r is not None for r in results)
@@ -282,7 +329,7 @@ class SolverServeEngine:
         return atol * math.sqrt(n_real / n_padded)
 
     def _call_solver(self, req: SolveRequest, entry: DesignEntry, y_dev,
-                     atol: float, a0=None):
+                     atol: float, a0=None, placement=None):
         """One (possibly multi-RHS) solve on the padded design.
 
         ``atol`` is the padding-corrected absolute tolerance (see
@@ -290,9 +337,34 @@ class SolverServeEngine:
         ``a0`` is the bucket-padded warm start (or None for the cold
         program — kept as a separate jit signature so cold solves don't pay
         the warm path's extra residual matmul).
+
+        ``placement`` routes the solve onto a mesh-sharded backend; the
+        design comes from the entry's per-placement sharded copy, and the
+        sharded programs compute their block factors in-program (psum'd
+        across shards) instead of taking the cached single-device
+        ``cn``/``chol`` — those are laid out for one device.
         """
         cfg = self.config
         m = req.method
+        if placement is not None and placement.sharded:
+            sm = self.mesh
+            x_dev = entry.x_for_placement(placement, sm)
+            kw = dict(thr=req.thr, max_iter=req.max_iter, atol=atol,
+                      rtol=req.rtol, ridge=cfg.ridge,
+                      mode="gram" if m == "bakp_gram" else "jacobi", a0=a0)
+            if placement.kind == "obs_sharded":
+                return solvebakp_obs_sharded(
+                    x_dev, y_dev, sm.mesh, data_axes=sm.data_axes,
+                    omega=cfg.omega, **kw)
+            if placement.kind == "rhs_sharded":
+                return solvebakp_rhs_sharded(
+                    x_dev, y_dev, sm.mesh, data_axes=sm.data_axes,
+                    omega=cfg.omega, **kw)
+            if placement.kind == "mesh_2d":
+                return solvebakp_2d(
+                    x_dev, y_dev, sm.mesh, data_axes=sm.data_axes,
+                    model_axis=sm.model_axis, omega=cfg.omega_2d, **kw)
+            raise ValueError(f"unknown placement kind {placement.kind!r}")
         if m == "bak":
             return solvebak(entry.x_pad, y_dev, max_iter=req.max_iter,
                             atol=atol, rtol=req.rtol, cn=entry.cn, a0=a0)
@@ -313,7 +385,7 @@ class SolverServeEngine:
 
     def _strip(self, req: SolveRequest, coef, residual, *, bucket, kind,
                group_size, latency, hit, n_sweeps, converged, entry=None,
-               warm=False) -> ServedSolve:
+               warm=False, placement=None) -> ServedSolve:
         obs, nvars = np.asarray(req.x).shape
         coef = np.asarray(coef)[:nvars]
         residual = np.asarray(residual)[:obs]
@@ -334,18 +406,30 @@ class SolverServeEngine:
             latency_s=latency,
             cache_hit=hit,
             warm_start=warm,
+            placement=placement.kind if placement is not None else "single",
         )
 
-    def _solve_multi_rhs(self, requests, idxs, entry, hit, bucket, results):
+    def _solve_multi_rhs(self, requests, idxs, entry, hit, bucket, results,
+                         placement=None):
         """Coalesce same-design requests into one (obs, k_pad) solve.
 
         Warm and cold members coalesce: if any member warm-starts, the
         group solve gets a stacked ``a0`` whose cold columns are zero
         (identical to those members' cold path).
+
+        A large group in a single-device bucket upgrades to the k-sharded
+        mesh backend here (k is only known after coalescing): one stream of
+        ``x`` per device then serves k/D tenants, with the group-global SSE
+        stopping keeping results identical to the single-device coalesced
+        solve.
         """
         obs_p, vars_p = bucket
         k = len(idxs)
         k_pad = next_pow2(k)
+        if (self.mesh is not None
+                and requests[idxs[0]].method in SHARDABLE_METHODS):
+            placement = placement_for_group(
+                placement or Placement(), k_pad, self.policy, self.mesh)
         ys = np.zeros((obs_p, k_pad), np.float32)
         for c, idx in enumerate(idxs):
             y = np.asarray(requests[idx].y, np.float32)
@@ -367,7 +451,8 @@ class SolverServeEngine:
         obs_real = np.asarray(req0.x).shape[0]
         atol = self._padded_atol(req0.atol, obs_real * k, obs_p * k_pad)
         t0 = time.perf_counter()
-        res = self._call_solver(req0, entry, jnp.asarray(ys), atol, a0=a0_mat)
+        res = self._call_solver(req0, entry, jnp.asarray(ys), atol, a0=a0_mat,
+                                placement=placement)
         jax.block_until_ready(res.coef)
         dt = time.perf_counter() - t0
         coef = np.asarray(res.coef)
@@ -377,10 +462,12 @@ class SolverServeEngine:
                 requests[idx], coef[:, c], resid[:, c], bucket=bucket,
                 kind="multi_rhs", group_size=k, latency=dt, hit=hit,
                 n_sweeps=res.n_sweeps, converged=res.converged, entry=entry,
-                warm=a0s[c] is not None)
+                warm=a0s[c] is not None, placement=placement)
         self.stats.solver_calls += 1
         self.stats.multi_rhs_groups += 1
         self.stats.multi_rhs_requests += k
+        if placement is not None and placement.sharded:
+            self.stats.sharded_solves += 1
 
     def _solve_vmapped(self, requests, singles, bucket, results):
         """Stack same-bucket single-design requests into one vmapped solve."""
@@ -440,7 +527,8 @@ class SolverServeEngine:
         self.stats.vmap_batches += 1
         self.stats.vmap_requests += b
 
-    def _solve_one(self, requests, idx, entry, hit, bucket, results):
+    def _solve_one(self, requests, idx, entry, hit, bucket, results,
+                   placement=None):
         req = requests[idx]
         obs_real = np.asarray(req.x).shape[0]
         y_pad = pad_y(np.asarray(req.y, np.float32), bucket[0])
@@ -451,12 +539,15 @@ class SolverServeEngine:
             a0_dev = jnp.asarray(self._pad_a0(a0, bucket[1]))
         t0 = time.perf_counter()
         res = self._call_solver(req, entry, jnp.asarray(y_pad), atol,
-                                a0=a0_dev)
+                                a0=a0_dev, placement=placement)
         jax.block_until_ready(res.coef)
         dt = time.perf_counter() - t0
         results[idx] = self._strip(
             req, res.coef, res.residual, bucket=bucket, kind="single",
             group_size=1, latency=dt, hit=hit, n_sweeps=res.n_sweeps,
-            converged=res.converged, entry=entry, warm=a0_dev is not None)
+            converged=res.converged, entry=entry, warm=a0_dev is not None,
+            placement=placement)
         self.stats.solver_calls += 1
         self.stats.single_solves += 1
+        if placement is not None and placement.sharded:
+            self.stats.sharded_solves += 1

@@ -84,6 +84,12 @@ class ServedSolve:
     isolates the poisoned batch, fills ``error`` with the exception text and
     returns zero coefficients (``converged=False``) instead of wedging the
     whole flush — check ``ok`` before trusting ``coef``.
+
+    ``placement`` records which backend the solve ran on: "single" (one
+    device), or a mesh placement — "obs_sharded" (design rows sharded over
+    the data axes), "rhs_sharded" (the coalesced group's k axis sharded,
+    ``x`` replicated) or "mesh_2d" (rows × columns over a 2-D mesh).  See
+    ``repro.serve.placement``.
     """
 
     request_id: str
@@ -98,6 +104,7 @@ class ServedSolve:
     latency_s: float = 0.0
     cache_hit: bool = False
     warm_start: bool = False
+    placement: str = "single"
     error: Optional[str] = None
     extra: dict = field(default_factory=dict)
 

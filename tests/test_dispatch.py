@@ -345,10 +345,10 @@ class TestFlushExceptionSafety:
         eng = SolverServeEngine()
         real = eng._call_solver
 
-        def boom(req, entry, y_dev, atol, a0=None):
+        def boom(req, entry, y_dev, atol, a0=None, placement=None):
             if req.design_key == "bad":
                 raise RuntimeError("injected solver failure")
-            return real(req, entry, y_dev, atol, a0=a0)
+            return real(req, entry, y_dev, atol, a0=a0, placement=placement)
 
         monkeypatch.setattr(eng, "_call_solver", boom)
         out = eng.serve([

@@ -1,0 +1,243 @@
+"""Sharded serving: placement routing, mesh parity, cache thread-safety.
+
+The engine-level parity check runs in a subprocess with 8 forced virtual
+CPU devices (the main test process keeps the single-device view, see
+tests/conftest.py); placement policy and cache-locking tests run in-process
+— they don't touch device state.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+import threading
+
+import numpy as np
+import pytest
+
+from repro.serve import (Placement, PlacementPolicy, SolveRequest,
+                         mesh_device_count, placement_for_group)
+from repro.serve.batching import config_key
+from repro.serve.cache import DesignCache
+
+# Parity workload + assertions, executed under an 8-device mesh.  The same
+# requests go through a mesh-routed engine and a plain single-device engine;
+# results must line up in submission order with MAPE <= 1e-5 per request.
+PARITY_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import numpy as np
+    from repro.serve import (PlacementPolicy, ServeConfig, SolveRequest,
+                            SolverServeEngine, build_serve_mesh)
+
+    K = 32  # same-design group size: exercises the k-sharded multi-RHS path
+
+    def workload(seed):
+        rng = np.random.default_rng(seed)
+        reqs = []
+        # big-bucket designs (pad to 512x64 >= policy threshold)
+        # -> obs-sharded singles on the mesh engine
+        for i in range(3):
+            x = rng.normal(size=(500, 60)).astype(np.float32)
+            a = rng.normal(size=(60,)).astype(np.float32)
+            reqs.append(SolveRequest(
+                x=x, y=x @ a, thr=16, max_iter=40, rtol=0.0,
+                design_key=f"big-{i}", request_id=f"big-{i}",
+                tenant_id=f"big-t{i}"))
+        # giant same-design group, small bucket -> rhs-sharded multi-RHS
+        xs = rng.normal(size=(200, 24)).astype(np.float32)
+        A = rng.normal(size=(24, K)).astype(np.float32)
+        for i in range(K):
+            reqs.append(SolveRequest(
+                x=xs, y=xs @ A[:, i], thr=16, max_iter=40, rtol=0.0,
+                design_key="grp", request_id=f"grp-{i}",
+                tenant_id=f"grp-t{i}"))
+        # distinct small designs -> vmap batch (single-device on BOTH)
+        for i in range(4):
+            x = rng.normal(size=(100, 12)).astype(np.float32)
+            a = rng.normal(size=(12,)).astype(np.float32)
+            reqs.append(SolveRequest(
+                x=x, y=x @ a, thr=8, max_iter=40, rtol=0.0,
+                design_key=f"sm-{i}", request_id=f"sm-{i}"))
+        return reqs
+
+    policy = PlacementPolicy(obs_shard_min_cells=512 * 64, rhs_shard_min_k=32)
+    eng_mesh = SolverServeEngine(ServeConfig(placement_policy=policy),
+                                 mesh=build_serve_mesh("4x2"))
+    eng_single = SolverServeEngine(ServeConfig())
+
+    for rnd in range(2):  # round 2 = warm starts via tenant_id on both sides
+        r_mesh = eng_mesh.serve(workload(7))
+        r_single = eng_single.serve(workload(7))
+        assert [r.request_id for r in r_mesh] == \\
+            [r.request_id for r in r_single], "submission order diverged"
+        assert not [r.error for r in r_mesh + r_single if r.error]
+        placements = {r.request_id: r.placement for r in r_mesh}
+        for i in range(3):
+            assert placements[f"big-{i}"] == "obs_sharded", placements
+        for i in range(K):
+            assert placements[f"grp-{i}"] == "rhs_sharded", placements
+        for i in range(4):
+            assert placements[f"sm-{i}"] == "single", placements
+        kinds = {r.request_id: r.batch_kind for r in r_mesh}
+        assert all(kinds[f"grp-{i}"] == "multi_rhs" for i in range(K))
+        assert all(kinds[f"sm-{i}"] == "vmap" for i in range(4))
+        assert all(r.placement == "single" for r in r_single)
+        worst = 0.0
+        for m, s in zip(r_mesh, r_single):
+            denom = np.maximum(np.abs(s.coef), 1e-12)
+            worst = max(worst, float(np.mean(np.abs(m.coef - s.coef)
+                                             / denom)))
+        assert worst <= 1e-5, f"round {rnd}: parity MAPE {worst}"
+        print(f"round {rnd}: worst parity MAPE {worst:.2e}")
+    assert eng_mesh.stats.sharded_solves >= 8   # 3 obs + 1 rhs per round
+    assert eng_mesh.stats.warm_starts > 0       # round 2 warm-started
+    assert eng_single.stats.sharded_solves == 0
+    print("PARITY_OK")
+""")
+
+
+@pytest.mark.slow
+def test_sharded_engine_parity_subprocess():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    p = subprocess.run([sys.executable, "-c", PARITY_SCRIPT],
+                       capture_output=True, text=True, env=env, timeout=600)
+    assert p.returncode == 0, p.stdout + "\n" + p.stderr
+    assert "PARITY_OK" in p.stdout
+
+
+# ----------------------------------------------------------- policy (pure)
+class _FakeMesh:
+    """Shape-only stand-in so policy tests never touch jax device state."""
+
+    def __init__(self, shape):
+        self.shape = dict(shape)
+        self.axis_names = tuple(shape)
+
+
+def _smesh(data=4, model=2):
+    from repro.serve import ServeMesh
+    shape = {"data": data}
+    if model:
+        shape["model"] = model
+    return ServeMesh(mesh=_FakeMesh(shape), data_axes=("data",),
+                     model_axis="model" if model else None)
+
+
+class TestPlacementPolicy:
+    def test_no_mesh_is_single(self):
+        from repro.serve import placement_for_bucket
+        p = placement_for_bucket((1 << 12, 1 << 12), "bakp_gram",
+                                 PlacementPolicy(), None)
+        assert p.kind == "single"
+
+    def test_threshold_routes_obs_sharded(self):
+        from repro.serve import placement_for_bucket
+        pol = PlacementPolicy(obs_shard_min_cells=1 << 16)
+        sm = _smesh()
+        assert placement_for_bucket((512, 128), "bakp_gram", pol,
+                                    sm).kind == "obs_sharded"
+        assert placement_for_bucket((128, 128), "bakp_gram", pol,
+                                    sm).kind == "single"
+        # non-shardable methods stay single at any size
+        for m in ("bak", "lstsq", "normal"):
+            assert placement_for_bucket((512, 128), m, pol, sm).kind == \
+                "single"
+
+    def test_divisibility_guard(self):
+        from repro.serve import placement_for_bucket
+        pol = PlacementPolicy(obs_shard_min_cells=1)
+        sm = _smesh(data=8, model=None)
+        # obs_p=4 not divisible by 8 data devices -> single
+        assert placement_for_bucket((4, 1 << 10), "bakp", pol, sm).kind == \
+            "single"
+
+    def test_mesh_2d_opt_in(self):
+        from repro.serve import placement_for_bucket
+        sm = _smesh()
+        off = PlacementPolicy(obs_shard_min_cells=1)
+        assert placement_for_bucket((512, 128), "bakp_gram", off,
+                                    sm).kind == "obs_sharded"
+        on = PlacementPolicy(obs_shard_min_cells=1, mesh_2d_min_cells=1 << 16)
+        assert placement_for_bucket((512, 128), "bakp_gram", on,
+                                    sm).kind == "mesh_2d"
+
+    def test_group_upgrade(self):
+        pol = PlacementPolicy(rhs_shard_min_k=32)
+        sm = _smesh()
+        single = Placement("single")
+        assert placement_for_group(single, 32, pol, sm).kind == "rhs_sharded"
+        assert placement_for_group(single, 16, pol, sm).kind == "single"
+        # k not divisible by the data axes -> stays single
+        pol2 = PlacementPolicy(rhs_shard_min_k=2)
+        assert placement_for_group(single, 2, pol2, sm).kind == "single"
+        # already-sharded buckets keep their placement
+        obs = Placement("obs_sharded")
+        assert placement_for_group(obs, 64, pol, sm).kind == "obs_sharded"
+
+    def test_config_key_carries_placement(self, rng):
+        x = rng.normal(size=(40, 6)).astype(np.float32)
+        req = SolveRequest(x=x, y=x[:, 0])
+        bucket = (64, 8)
+        base = config_key(req, bucket)
+        assert config_key(req, bucket, None) == base
+        keyed = config_key(req, bucket, Placement("obs_sharded"))
+        assert keyed != base
+        assert keyed[:len(base)] == base
+
+    def test_mesh_device_count(self):
+        assert mesh_device_count("8") == 8
+        assert mesh_device_count("4x2") == 8
+
+
+# ------------------------------------------------- cache thread-safety
+class TestDesignEntryLocking:
+    def test_concurrent_entry_mutation(self, rng):
+        """Regression: per-entry state (warm-coef OrderedDict, chol/cn_thr
+        dicts) was mutated from the dispatcher pre-warm thread and the
+        solver thread with no lock.  Hammer every accessor from several
+        threads; under the old code this intermittently corrupted the
+        OrderedDict / raised RuntimeError."""
+        cache = DesignCache(max_entries=4, max_tenants=8)
+        x = rng.normal(size=(64, 24)).astype(np.float32)
+        entry, _ = cache.get_or_build("d0", lambda: x)
+        stop = threading.Event()
+        errors = []
+
+        def hammer(tid):
+            try:
+                i = 0
+                while not stop.is_set():
+                    t = f"tenant-{tid}-{i % 13}"
+                    entry.store_coef(t, np.full((24,), float(i), np.float32))
+                    entry.warm_coef(t)
+                    entry.warm_coef(f"tenant-{(tid + 1) % 4}-{i % 13}")
+                    entry.cn_for_thr(5 + (i % 3))
+                    entry.chol_for(8, 1e-6)
+                    i += 1
+            except Exception as exc:  # pragma: no cover - the regression
+                errors.append(exc)
+
+        threads = [threading.Thread(target=hammer, args=(t,))
+                   for t in range(4)]
+        for t in threads:
+            t.start()
+        import time
+        time.sleep(1.0)
+        stop.set()
+        for t in threads:
+            t.join(timeout=10)
+        assert not errors, errors
+        # LRU bound survived the stampede
+        assert len(entry._warm) <= 8
+
+    def test_store_coef_copies(self, rng):
+        cache = DesignCache()
+        x = rng.normal(size=(16, 4)).astype(np.float32)
+        entry, _ = cache.get_or_build("d0", lambda: x)
+        coef = np.ones((4,), np.float32)
+        entry.store_coef("t", coef)
+        coef[:] = -1.0  # caller mutates the returned ServedSolve.coef
+        np.testing.assert_array_equal(entry.warm_coef("t"),
+                                      np.ones((4,), np.float32))
