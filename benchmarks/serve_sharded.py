@@ -53,9 +53,11 @@ def _serve_timed(engine, reqs):
 def run(obs=2048, nvars=256, n_designs=8, k=64, thr=128, max_iter=40,
         seed=0):
     from repro.serve import (PlacementPolicy, ServeConfig, SolveRequest,
-                             SolverServeEngine, build_serve_mesh)
+                             SolverSpec, SolverServeEngine, build_serve_mesh)
 
     smesh = build_serve_mesh(MESH_SPEC)
+    spec = SolverSpec(method="bakp_gram", thr=thr, max_iter=max_iter,
+                      rtol=0.0)
     # Thresholds sized so the benchmark's big bucket (obs × vars) routes
     # obs-sharded and the k-group routes rhs-sharded — the policy under
     # test is the routing machinery, not the default production numbers.
@@ -69,9 +71,8 @@ def run(obs=2048, nvars=256, n_designs=8, k=64, thr=128, max_iter=40,
     big_a = [rng.normal(size=(nvars,)).astype(np.float32) for _ in big]
 
     def obs_reqs():
-        return [SolveRequest(x=x, y=x @ a, thr=thr, max_iter=max_iter,
-                             rtol=0.0, design_key=f"big-{i}",
-                             request_id=f"big-{i}")
+        return [SolveRequest(x=x, y=x @ a, spec=spec,
+                             design_key=f"big-{i}", request_id=f"big-{i}")
                 for i, (x, a) in enumerate(zip(big, big_a))]
 
     # rhs-sharded scenario: one small-bucket design shared by k tenants.
@@ -80,8 +81,7 @@ def run(obs=2048, nvars=256, n_designs=8, k=64, thr=128, max_iter=40,
     ys = xs @ A
 
     def rhs_reqs():
-        return [SolveRequest(x=xs, y=ys[:, i], thr=thr, max_iter=max_iter,
-                             rtol=0.0, design_key="grp",
+        return [SolveRequest(x=xs, y=ys[:, i], spec=spec, design_key="grp",
                              request_id=f"grp-{i}")
                 for i in range(k)]
 

@@ -4,11 +4,13 @@
 
 The acceptance scenario for ``repro.serve``: 64 tenants share one design
 matrix (the repeated-X workload serving is built for).  The baseline answers
-them with 64 sequential ``repro.core.solve`` calls; the engine coalesces
-them into ONE multi-RHS solve — one stream of ``x`` serves all 64 — plus a
-design-cache hit for the column norms / Gram factors.  Both paths are
-jit-warmed before timing, so the speedup is steady-state compute, not
-compile time.
+them with 64 sequential one-shot ``repro.core.solve`` calls; a second
+baseline holds a ``prepare(x, spec)`` handle and runs 64 per-RHS
+``handle.solve(y)`` calls (the design state — column norms, Gram factors —
+amortised, but still one stream of ``x`` per request); the engine coalesces
+them into ONE multi-RHS solve — one stream of ``x`` serves all 64.  All
+paths are jit-warmed before timing, so the speedups are steady-state
+compute, not compile time.
 
 Prints ``name,us_per_call,derived`` CSV rows like ``benchmarks.run`` and
 exits non-zero if speedup < 5x or any per-request MAPE vs lstsq > 1e-3.
@@ -29,7 +31,7 @@ def run(obs=2048, nvars=256, n_requests=64, method="bakp_gram", thr=128,
     import jax
     import jax.numpy as jnp
 
-    from repro.core import solve
+    from repro.core import SolverSpec, prepare, solve
     from repro.serve import ServeConfig, SolveRequest, SolverServeEngine
 
     rng = np.random.default_rng(seed)
@@ -37,32 +39,46 @@ def run(obs=2048, nvars=256, n_requests=64, method="bakp_gram", thr=128,
     coefs = rng.normal(size=(nvars, n_requests)).astype(np.float32)
     ys = (x @ coefs).astype(np.float32)
     xd = jnp.asarray(x)
-    kw = dict(method=method, max_iter=max_iter, rtol=rtol, thr=thr)
+    spec = SolverSpec(method=method, max_iter=max_iter, rtol=rtol, thr=thr)
 
     def sequential():
         out = []
         for i in range(n_requests):
-            res = solve(xd, jnp.asarray(ys[:, i]), **kw)
+            res = solve(xd, jnp.asarray(ys[:, i]), spec=spec)
+            jax.block_until_ready(res.coef)
+            out.append(np.asarray(res.coef))
+        return out
+
+    handle = prepare(xd, spec)
+
+    def prepared_sequential():
+        out = []
+        for i in range(n_requests):
+            res = handle.solve(jnp.asarray(ys[:, i]))
             jax.block_until_ready(res.coef)
             out.append(np.asarray(res.coef))
         return out
 
     def make_requests():
-        return [SolveRequest(x=x, y=ys[:, i], method=method,
-                             max_iter=max_iter, rtol=rtol, thr=thr,
+        return [SolveRequest(x=x, y=ys[:, i], spec=spec,
                              design_key="bench-design",
                              request_id=f"req-{i}")
                 for i in range(n_requests)]
 
     engine = SolverServeEngine(ServeConfig())
 
-    # Warm both paths (jit compile + engine design cache).
+    # Warm all paths (jit compile + design state + engine design cache).
     sequential()
+    prepared_sequential()
     engine.serve(make_requests())
 
     t0 = time.perf_counter()
     seq_coefs = sequential()
     t_seq = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    prep_coefs = prepared_sequential()
+    t_prep = time.perf_counter() - t0
 
     t0 = time.perf_counter()
     served = engine.serve(make_requests())
@@ -75,6 +91,9 @@ def run(obs=2048, nvars=256, n_requests=64, method="bakp_gram", thr=128,
                 for i in range(n_requests)]
     mape_seq = [float(np.mean(np.abs(seq_coefs[i] - ref[:, i]) / denom[:, i]))
                 for i in range(n_requests)]
+    mape_prep = [float(np.mean(np.abs(prep_coefs[i] - ref[:, i])
+                               / denom[:, i]))
+                 for i in range(n_requests)]
 
     assert all(r.batch_kind == "multi_rhs" for r in served), \
         "engine failed to coalesce same-design requests"
@@ -83,12 +102,15 @@ def run(obs=2048, nvars=256, n_requests=64, method="bakp_gram", thr=128,
     return {
         "obs": obs, "vars": nvars, "n_requests": n_requests,
         "method": method,
-        "seq_s": t_seq, "engine_s": t_eng,
+        "seq_s": t_seq, "prepared_s": t_prep, "engine_s": t_eng,
         "speedup": t_seq / t_eng,
+        "prepared_speedup": t_seq / t_prep,
         "seq_solves_per_s": n_requests / t_seq,
+        "prepared_solves_per_s": n_requests / t_prep,
         "engine_solves_per_s": n_requests / t_eng,
         "mape_worst": max(mape_eng),
         "mape_seq_worst": max(mape_seq),
+        "mape_prepared_worst": max(mape_prep),
     }
 
 
@@ -119,6 +141,10 @@ def main():
     print(f"{tag}/sequential,{r['seq_s']/r['n_requests']*1e6:.0f},"
           f"solves_per_s={r['seq_solves_per_s']:.1f};"
           f"mape={r['mape_seq_worst']:.2e}")
+    print(f"{tag}/prepared,{r['prepared_s']/r['n_requests']*1e6:.0f},"
+          f"solves_per_s={r['prepared_solves_per_s']:.1f};"
+          f"mape={r['mape_prepared_worst']:.2e};"
+          f"speedup={r['prepared_speedup']:.2f}")
     print(f"{tag}/engine,{r['engine_s']/r['n_requests']*1e6:.0f},"
           f"solves_per_s={r['engine_solves_per_s']:.1f};"
           f"mape={r['mape_worst']:.2e};speedup={r['speedup']:.2f}")

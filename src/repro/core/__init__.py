@@ -1,13 +1,25 @@
 """repro.core — the paper's contribution: the BAK solver family.
 
+Public API model (PR 4): a frozen ``SolverSpec`` names the method + every
+knob; ``prepare(x, spec)`` builds a ``PreparedDesign`` handle owning the
+reusable per-design state (fingerprint, column norms, block-Gram Cholesky,
+sharded copies, warm-start coefficients); ``handle.solve(y, a0)`` runs cheap
+per-RHS solves.  ``solve()``/``fit_linear_probe`` are one-shot shims over
+that model.  Methods live in a registry (``register_method``) — the serving
+stack dispatches through it, so new backends plug in without touching it.
+
 Layout:
+  spec.py         SolverSpec + the method registry (MethodEntry).
+  prepare.py      prepare()/PreparedDesign — the design-handle API.
+  methods.py      built-in method registrations (bak/bakp/bakp_gram/bakf/
+                  lstsq/normal) as PreparedDesign-consuming kernels.
   solvebak.py     Algorithm 1 (serial cyclic CD) — paper-faithful baseline.
   solvebakp.py    Algorithm 2 (block-parallel CD) + beyond-paper gram mode.
   solvebakf.py    Algorithm 3 (greedy feature selection) + stepwise baseline.
   distributed.py  shard_map obs-/vars-/2D-/rhs-sharded pod-scale solvers
                   (multi-RHS + warm-start capable, serving-placement ready).
   precondition.py column normalisation.
-  api.py          public entry points (solve, fit_linear_probe).
+  api.py          one-shot entry points (solve, fit_linear_probe).
 """
 from repro.core.api import fit_linear_probe, solve
 from repro.core.distributed import (
@@ -17,17 +29,27 @@ from repro.core.distributed import (
     solvebakp_vars_sharded,
 )
 from repro.core.precondition import normalize_columns, unscale_coef
+from repro.core.prepare import PreparedDesign, design_fingerprint, prepare
 from repro.core.solvebak import solvebak, solvebak_onesweep
 from repro.core.solvebakf import solvebakf, stepwise_regression_baseline
 from repro.core.solvebakp import block_gram_cholesky, solvebakp
+from repro.core.spec import (MethodEntry, SolverSpec, method_names,
+                             register_method, solver_method)
 from repro.core.types import SelectResult, SolveResult
 
 __all__ = [
+    "MethodEntry",
+    "PreparedDesign",
     "SelectResult",
     "SolveResult",
+    "SolverSpec",
     "block_gram_cholesky",
+    "design_fingerprint",
     "fit_linear_probe",
+    "method_names",
     "normalize_columns",
+    "prepare",
+    "register_method",
     "solve",
     "solvebak",
     "solvebak_onesweep",
@@ -37,6 +59,7 @@ __all__ = [
     "solvebakp_obs_sharded",
     "solvebakp_rhs_sharded",
     "solvebakp_vars_sharded",
+    "solver_method",
     "stepwise_regression_baseline",
     "unscale_coef",
 ]

@@ -1,31 +1,28 @@
-"""Public solve API — one entry point over the BAK family + LAPACK baseline.
+"""Public solve API — legacy one-shot entry points over the spec/prepare model.
 
-``solve(x, y, method=...)`` dispatches to:
+The primary API is the two-step handle model (see ``repro.core.prepare``):
 
-  * "bak"        — Algorithm 1, serial cyclic CD (paper-faithful baseline).
-  * "bakp"       — Algorithm 2, block-Jacobi CD (paper-faithful parallel).
-  * "bakp_gram"  — beyond-paper exact block CD (DESIGN.md §3).
-  * "lstsq"      — LAPACK-path baseline (the paper's comparison column),
-                   via jnp.linalg.lstsq.
-  * "normal"     — normal-equation Cholesky (the fast direct baseline for
-                   tall systems).
+    spec = SolverSpec(method="bakp_gram", rtol=1e-8)
+    design = prepare(x, spec)        # once per design matrix
+    res = design.solve(y)            # cheap per-RHS solves, warm-startable
 
-``fit_linear_probe`` is the framework-integration entry point: fit a linear
-readout on (tokens × features) activations — the tall-system regression the
-paper targets.
+``solve(x, y, method=..., **knobs)`` and ``fit_linear_probe`` below are thin
+shims kept for one-shot callers and backwards compatibility: they build a
+``SolverSpec`` from the loose kwargs, ``prepare`` the design and run a
+single solve.  Methods are dispatched through the registry
+(``repro.core.spec``) — ``method_names()`` lists what is available,
+including "bakf" (Algorithm 3 to full selection) alongside the original
+five.
 
-All methods accept ``y`` of shape (obs,) or (obs, k): the multi-RHS form
-solves k systems against the same design matrix in one pass over ``x``
-(coef/residual come back as (vars, k)/(obs, k)).  ``repro.serve`` builds its
-same-design request coalescing on this.
+All multi-RHS-capable methods accept ``y`` of shape (obs,) or (obs, k): the
+multi-RHS form solves k systems against the same design matrix in one pass
+over ``x`` (coef/residual come back as (vars, k)/(obs, k)).  ``repro.serve``
+builds its same-design request coalescing on this.
 
-The iterative methods accept ``a0`` initial coefficients ((vars,) or
-(vars, k)) and start from that point instead of zeros — the warm-start
-primitive behind ``repro.serve``'s per-tenant coefficient retention: a
-tenant re-solving against the same design with a slightly-drifted ``y``
-converges in a fraction of the cold sweeps, something one-shot
-sketching/direct solvers structurally cannot exploit.  Direct methods
-ignore ``a0``.
+Iterative methods accept ``a0`` initial coefficients ((vars,) or (vars, k))
+and start from that point instead of zeros — the warm-start primitive behind
+``repro.serve``'s per-tenant coefficient retention.  Direct methods ignore
+``a0`` (documented once, on ``SolverSpec``).
 """
 from __future__ import annotations
 
@@ -34,11 +31,10 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.solvebak import solvebak
-from repro.core.solvebakp import solvebakp
+import repro.core.methods  # noqa: F401  (populates the method registry)
+from repro.core.prepare import prepare
+from repro.core.spec import SolverSpec, method_names
 from repro.core.types import SolveResult
-
-_METHODS = ("bak", "bakp", "bakp_gram", "lstsq", "normal")
 
 
 def solve(
@@ -51,36 +47,23 @@ def solve(
     rtol: float = 0.0,
     thr: int = 128,
     omega: float = 1.0,
+    ridge: float = 1e-6,
+    order: str = "cyclic",
     a0: Optional[jax.Array] = None,
     key: Optional[jax.Array] = None,
+    spec: Optional[SolverSpec] = None,
 ) -> SolveResult:
-    if method == "bak":
-        return solvebak(x, y, max_iter=max_iter, atol=atol, rtol=rtol, a0=a0,
-                        key=key)
-    if method == "bakp":
-        return solvebakp(x, y, thr=thr, max_iter=max_iter, atol=atol,
-                         rtol=rtol, omega=omega, mode="jacobi", a0=a0)
-    if method == "bakp_gram":
-        return solvebakp(x, y, thr=thr, max_iter=max_iter, atol=atol,
-                         rtol=rtol, omega=omega, mode="gram", a0=a0)
-    if method == "lstsq":
-        coef = jnp.linalg.lstsq(x.astype(jnp.float32), y.astype(jnp.float32))[0]
-        return _direct_result(x, y, coef, max_iter)
-    if method == "normal":
-        xf = x.astype(jnp.float32)
-        g = xf.T @ xf + 1e-6 * jnp.eye(x.shape[1], dtype=jnp.float32)
-        coef = jax.scipy.linalg.cho_solve(
-            (jax.scipy.linalg.cholesky(g, lower=True), True),
-            xf.T @ y.astype(jnp.float32))
-        return _direct_result(x, y, coef, max_iter)
-    raise ValueError(f"method must be one of {_METHODS}, got {method!r}")
+    """One-shot solve: ``prepare(x, spec).solve(y, a0, key=key)``.
 
-
-def _direct_result(x, y, coef, max_iter) -> SolveResult:
-    e = y.astype(jnp.float32) - x.astype(jnp.float32) @ coef
-    sse = jnp.vdot(e, e)
-    hist = jnp.full((max_iter,), jnp.nan, jnp.float32).at[0].set(sse)
-    return SolveResult(coef, e, sse, jnp.int32(1), jnp.bool_(True), hist)
+    ``spec`` (a ``SolverSpec``) overrides every loose knob when given.
+    Repeated solves against the same ``x`` should hold a ``prepare`` handle
+    instead — this shim rebuilds the design state every call.
+    """
+    if spec is None:
+        spec = SolverSpec(method=method, max_iter=max_iter, atol=atol,
+                          rtol=rtol, thr=thr, omega=omega, ridge=ridge,
+                          order=order)
+    return prepare(x, spec).solve(y, a0, key=key)
 
 
 def fit_linear_probe(
@@ -92,15 +75,34 @@ def fit_linear_probe(
     rtol: float = 1e-7,
     thr: int = 128,
     a0: Optional[jax.Array] = None,
+    spec: Optional[SolverSpec] = None,
 ) -> SolveResult:
     """Fit a linear readout ``features @ a ≈ targets``.
 
-    ``features``: (tokens, d) frozen backbone activations (tall system —
-    exactly the paper's regression setting).  ``targets``: (tokens,) scalar
-    target (e.g. a logit, a value-head label, a probe class margin).
-    ``a0``: optional (d,) warm start — pass the previous fit's ``coef`` when
-    re-fitting the probe on a grown activation buffer.
+    ``features``: (..., tokens, d) frozen backbone activations, flattened
+    over leading axes (tall system — exactly the paper's regression
+    setting).  ``targets``: matching (..., tokens) scalar target, or
+    (..., tokens, k) for ``k`` readouts fit in ONE multi-RHS pass over the
+    activations (k logits, k value heads, k probe classes) — coef comes
+    back (d, k).  ``a0``: optional (d,) / (d, k) warm start — pass the
+    previous fit's ``coef`` when re-fitting on a grown activation buffer.
     """
     feats = features.reshape(-1, features.shape[-1])
-    return solve(feats, targets.reshape(-1), method=method,
-                 max_iter=max_iter, rtol=rtol, thr=thr, a0=a0)
+    targets = jnp.asarray(targets)
+    if targets.ndim == features.ndim:
+        # (..., tokens, k): multi-output — keep k and ride the multi-RHS
+        # path instead of silently flattening k targets into one.
+        t = targets.reshape(-1, targets.shape[-1])
+    else:
+        t = targets.reshape(-1)
+    if t.shape[0] != feats.shape[0]:
+        raise ValueError(
+            f"targets {tuple(targets.shape)} do not match features "
+            f"{tuple(features.shape)}: expected (..., tokens) or "
+            f"(..., tokens, k) with the same leading/token axes")
+    return solve(feats, t, method=method, max_iter=max_iter, rtol=rtol,
+                 thr=thr, a0=a0, spec=spec)
+
+
+# Deprecated alias (pre-registry): the live list is ``method_names()``.
+_METHODS = method_names()

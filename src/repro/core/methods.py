@@ -1,0 +1,217 @@
+"""Built-in solver methods, registered against ``repro.core.spec``.
+
+Every method the public API dispatches on is declared here as a
+``MethodEntry`` whose kernel consumes a ``PreparedDesign``:
+
+  * "bak"        — Algorithm 1, serial cyclic CD (paper-faithful baseline).
+  * "bakp"       — Algorithm 2, block-Jacobi CD (paper-faithful parallel).
+  * "bakp_gram"  — beyond-paper exact block CD (DESIGN.md §3).
+  * "bakf"       — Algorithm 3 run to full selection: greedy forward CD over
+                   every column with per-step refit.  Single-RHS, ignores
+                   warm starts (selection always restarts).
+  * "lstsq"      — LAPACK-path baseline (the paper's comparison column).
+  * "normal"     — normal-equation Cholesky with a ``SolverSpec.ridge``
+                   Tikhonov diagonal (the fast direct baseline).
+
+The BAK family reads its reusable design state (column norms, block Gram
+Cholesky factors, per-placement sharded copies) off the handle, so repeated
+solves against one design never recompute it; the prepare hooks warm exactly
+that state.  The mesh-sharded placements route to
+``repro.core.distributed`` — only methods registered ``shardable=True`` are
+eligible, which is what the serving placement policy keys on.
+
+Adding a backend = writing a kernel with this signature and calling
+``register_method`` — ``solve()``, ``prepare()``, the serving engine, the
+async dispatcher and the placement policy all pick it up from the registry.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.distributed import (solvebakp_2d, solvebakp_obs_sharded,
+                                    solvebakp_rhs_sharded)
+from repro.core.solvebak import solvebak
+from repro.core.solvebakf import solvebakf
+from repro.core.solvebakp import solvebakp
+from repro.core.spec import (_ITER_FIELDS, MethodEntry, SolverSpec,
+                             register_method)
+from repro.core.types import SolveResult
+
+_SHARDED_BACKENDS = {
+    "obs_sharded": solvebakp_obs_sharded,
+    "rhs_sharded": solvebakp_rhs_sharded,
+}
+
+
+# --------------------------------------------------------------- BAK family
+def _bak_solve(p, y, spec: SolverSpec, *, a0=None, key=None, placement=None,
+               mesh=None):
+    return solvebak(p.x_pad, y, max_iter=spec.max_iter, atol=spec.atol,
+                    rtol=spec.rtol, a0=a0, order=spec.order, key=key,
+                    cn=p.cn)
+
+
+def _bak_vmap_one(spec: SolverSpec):
+    if spec.order != "cyclic":
+        # Keep batch and single-solve semantics identical: the single path
+        # rejects order="random" without a PRNG key (serving requests carry
+        # none), so the vmapped path must error too rather than silently
+        # solving with cyclic order.
+        raise ValueError(
+            f"order={spec.order!r} requires a PRNG key and is not "
+            f"vmap-batchable; serve it with order='cyclic'")
+
+    def one(x, y, cn, atol, a0=None):
+        return solvebak(x, y, max_iter=spec.max_iter, atol=atol,
+                        rtol=spec.rtol, cn=cn, a0=a0)
+    return one
+
+
+def _bakp_solve(mode: str):
+    def kernel(p, y, spec: SolverSpec, *, a0=None, key=None, placement=None,
+               mesh=None):
+        if placement is not None and placement.sharded:
+            if mesh is None:
+                raise ValueError(
+                    f"placement {placement.kind!r} needs a ServeMesh")
+            x_dev = p.x_for_placement(placement, mesh)
+            kw = dict(thr=spec.thr, max_iter=spec.max_iter, atol=spec.atol,
+                      rtol=spec.rtol, omega=spec.omega, mode=mode,
+                      ridge=spec.ridge, a0=a0)
+            if placement.kind == "mesh_2d":
+                return solvebakp_2d(x_dev, y, mesh.mesh,
+                                    data_axes=mesh.data_axes,
+                                    model_axis=mesh.model_axis, **kw)
+            backend = _SHARDED_BACKENDS.get(placement.kind)
+            if backend is None:
+                raise ValueError(
+                    f"unknown placement kind {placement.kind!r}")
+            return backend(x_dev, y, mesh.mesh, data_axes=mesh.data_axes,
+                           **kw)
+        return solvebakp(
+            p.x_pad, y, thr=spec.thr, max_iter=spec.max_iter, atol=spec.atol,
+            rtol=spec.rtol, omega=spec.omega, mode=mode, ridge=spec.ridge,
+            cn=p.cn_for_thr(spec.thr),
+            chol=(p.chol_for(spec.thr, spec.ridge) if mode == "gram"
+                  else None),
+            a0=a0)
+    return kernel
+
+
+def _bakp_vmap_one(mode: str):
+    def build(spec: SolverSpec):
+        if mode == "gram":
+            def one(x, y, cn, atol, chol, a0=None):
+                return solvebakp(x, y, thr=spec.thr, max_iter=spec.max_iter,
+                                 atol=atol, rtol=spec.rtol, omega=spec.omega,
+                                 mode="gram", ridge=spec.ridge, cn=cn,
+                                 chol=chol, a0=a0)
+        else:
+            def one(x, y, cn, atol, a0=None):
+                return solvebakp(x, y, thr=spec.thr, max_iter=spec.max_iter,
+                                 atol=atol, rtol=spec.rtol, omega=spec.omega,
+                                 mode="jacobi", cn=cn, a0=a0)
+        return one
+    return build
+
+
+def _prep_bak(p, spec: SolverSpec):
+    p.cn  # property access materialises the lazy column norms
+
+
+def _prep_bakp(p, spec: SolverSpec):
+    p.cn_for_thr(spec.thr)
+
+
+def _prep_bakp_gram(p, spec: SolverSpec):
+    p.cn_for_thr(spec.thr)
+    p.chol_for(spec.thr, spec.ridge)
+
+
+# ---------------------------------------------------- greedy selection (A3)
+def _bakf_solve(p, y, spec: SolverSpec, *, a0=None, key=None, placement=None,
+                mesh=None):
+    """Algorithm 3 run to full selection as a solver: greedily order every
+    column by SSE reduction, refitting after each pick.  The final refit
+    over all columns is an exact-block CD solve, so the solution matches
+    "bak"/"bakp" on the same system (parity-tested); the selection order
+    itself is the extra information this method pays O(vars) matvecs for.
+    """
+    nvars = p.x_pad.shape[1]
+    sel = solvebakf(p.x_pad, y, max_feat=nvars,
+                    refit_sweeps=spec.max_iter,
+                    refit_thr=min(spec.thr, nvars))
+    coef = jnp.zeros((nvars,), jnp.float32).at[sel.selected].set(sel.coef)
+    e = sel.residual
+    sse = jnp.vdot(e, e)
+    hist = jnp.full((spec.max_iter,), jnp.nan, jnp.float32).at[0].set(sse)
+    return SolveResult(coef, e, sse, jnp.int32(nvars), jnp.bool_(True), hist)
+
+
+# ----------------------------------------------------------- direct methods
+def _direct_result(x, y, coef, max_iter: int) -> SolveResult:
+    e = y.astype(jnp.float32) - x @ coef
+    sse = jnp.vdot(e, e)
+    hist = jnp.full((max_iter,), jnp.nan, jnp.float32).at[0].set(sse)
+    return SolveResult(coef, e, sse, jnp.int32(1), jnp.bool_(True), hist)
+
+
+@functools.partial(jax.jit, static_argnames=("max_iter",))
+def _lstsq_kernel(x, y, max_iter: int) -> SolveResult:
+    coef = jnp.linalg.lstsq(x, y.astype(jnp.float32))[0]
+    return _direct_result(x, y, coef, max_iter)
+
+
+@functools.partial(jax.jit, static_argnames=("max_iter",))
+def _normal_kernel(x, y, ridge, max_iter: int) -> SolveResult:
+    g = x.T @ x + ridge * jnp.eye(x.shape[1], dtype=jnp.float32)
+    coef = jax.scipy.linalg.cho_solve(
+        (jax.scipy.linalg.cholesky(g, lower=True), True),
+        x.T @ y.astype(jnp.float32))
+    return _direct_result(x, y, coef, max_iter)
+
+
+def _lstsq_solve(p, y, spec: SolverSpec, *, a0=None, key=None, placement=None,
+                 mesh=None):
+    return _lstsq_kernel(p.x_pad, y, spec.max_iter)
+
+
+def _normal_solve(p, y, spec: SolverSpec, *, a0=None, key=None,
+                  placement=None, mesh=None):
+    return _normal_kernel(p.x_pad, y, jnp.float32(spec.ridge), spec.max_iter)
+
+
+# ------------------------------------------------------------- registration
+register_method(MethodEntry(
+    name="bak", solve=_bak_solve, consumes=_ITER_FIELDS + ("order",),
+    iterative=True, multi_rhs=True, batchable=True, shardable=False,
+    blocked=False, prepare=_prep_bak, vmap_one=_bak_vmap_one,
+    summary="Algorithm 1: serial cyclic coordinate descent"))
+register_method(MethodEntry(
+    name="bakp", solve=_bakp_solve("jacobi"),
+    consumes=_ITER_FIELDS + ("thr", "omega"),
+    iterative=True, multi_rhs=True, batchable=True, shardable=True,
+    blocked=True, prepare=_prep_bakp, vmap_one=_bakp_vmap_one("jacobi"),
+    summary="Algorithm 2: block-Jacobi coordinate descent"))
+register_method(MethodEntry(
+    name="bakp_gram", solve=_bakp_solve("gram"),
+    consumes=_ITER_FIELDS + ("thr", "omega", "ridge"),
+    iterative=True, multi_rhs=True, batchable=True, shardable=True,
+    blocked=True, needs_chol=True, prepare=_prep_bakp_gram,
+    vmap_one=_bakp_vmap_one("gram"),
+    summary="exact block CD via cached block-Gram Cholesky (beyond-paper)"))
+register_method(MethodEntry(
+    name="lstsq", solve=_lstsq_solve, consumes=(),
+    iterative=False, multi_rhs=True,
+    summary="LAPACK lstsq baseline (the paper's comparison column)"))
+register_method(MethodEntry(
+    name="normal", solve=_normal_solve, consumes=("ridge",),
+    iterative=False, multi_rhs=True,
+    summary="normal-equation Cholesky with SolverSpec.ridge diagonal"))
+register_method(MethodEntry(
+    name="bakf", solve=_bakf_solve, consumes=("max_iter", "thr"),
+    iterative=False, multi_rhs=False,
+    summary="Algorithm 3 to full selection: greedy forward CD + refit"))

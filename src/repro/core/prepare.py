@@ -1,0 +1,321 @@
+"""prepare()/PreparedDesign — the design-handle half of the solver API.
+
+The paper's central structural property is that one sweep streams each
+element of ``x`` exactly once, while everything reusable about the design is
+computable up front: squared column norms (Algorithm 1 line 3), block Gram
+Cholesky factors (``mode="gram"``), and — in a serving system — the
+device-resident (possibly mesh-sharded) copies of ``x`` itself.  Related
+direct/sketching baselines make the same split (factor once, solve per RHS);
+here it is first-class:
+
+    spec = SolverSpec(method="bakp_gram", rtol=1e-8)
+    design = prepare(x, spec)            # once per design matrix
+    res1 = design.solve(y1)              # cheap per-RHS solves
+    res2 = design.solve(y2, a0=res1.coef)  # warm-started re-solve
+
+``PreparedDesign`` owns, per design matrix:
+
+  * the device-resident fp32 copy of ``x`` (``x_pad`` — callers may hand in
+    an already shape-padded matrix, as the serving engine does);
+  * its content ``fingerprint`` (identity for caches and request coalescing);
+  * the squared column norms, plus thr-padded layouts per block width;
+  * block Gram Cholesky factors per ``(thr, ridge)``;
+  * per-placement sharded device copies (a mesh backend needs ``x`` laid out
+    for its in_specs; the ``device_put`` happens once per placement);
+  * an LRU of per-tenant warm-start coefficients (serving re-solves with
+    drifting ``y`` start from the tenant's last solution).
+
+All of that state is mutated lazily from multiple threads in the serving
+path (the async dispatcher pre-warms entries while the solver thread reads
+them), so every accessor takes the per-design ``_lock``; the lock is
+per-design so a slow Cholesky build on one design never blocks another.
+
+Compiled programs are cached keyed by (spec static knobs, operand shapes,
+placement): the single-device kernels are ``jit``-cached, the mesh backends
+``lru_cache`` their ``shard_map`` programs, and ``_solve_protocol`` below
+memoises the per-(spec, placement) dispatch so a repeated solve re-enters
+its compiled program without re-touching the registry.
+"""
+from __future__ import annotations
+
+import hashlib
+import threading
+from collections import OrderedDict
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.spec import SolverSpec, solver_method
+from repro.core.types import SolveResult, column_norms_sq
+
+
+def design_fingerprint(x, *, _prefix: str = "d") -> str:
+    """Content fingerprint of a design matrix (shape + dtype + bytes).
+
+    Two matrices that hash equal are the same design: they may share one
+    ``PreparedDesign`` (and, in serving, coalesce into one multi-RHS solve).
+    """
+    a = np.ascontiguousarray(np.asarray(x))
+    h = hashlib.blake2b(digest_size=16)
+    h.update(str((a.shape, a.dtype.str)).encode())
+    h.update(a.view(np.uint8).data)
+    return f"{_prefix}:{h.hexdigest()}"
+
+
+@dataclass
+class PreparedDesign:
+    """Per-design solver state + the ``solve`` handle (see module doc).
+
+    ``x_pad`` is the device-resident fp32 design exactly as prepared —
+    callers that bucket-pad (the serving engine) hand the padded matrix in.
+    All mutable members (``chol``, ``_cn``, ``_cn_thr``, ``_warm``,
+    ``_sharded``) are read AND written from concurrent threads in the
+    serving path, so every accessor takes the per-design ``_lock``.
+
+    Program caching note: the compiled programs behind ``solve`` are cached
+    one level down, keyed by exactly (spec static knobs, operand shapes,
+    placement) — ``jit`` on the single-device kernels, ``lru_cache``d
+    ``shard_map`` programs for the mesh backends — so a repeat solve
+    re-enters its compiled executable; the registry lookup itself is a
+    plain dict access, never memoised (a re-``register_method`` with
+    ``overwrite=True`` takes effect immediately).
+    """
+
+    x_pad: jax.Array                      # (obs, vars) fp32, device-resident
+    spec: Optional[SolverSpec] = None     # default spec bound by prepare()
+    fingerprint: Optional[str] = None
+    mesh: Optional[object] = None         # serve.placement.ServeMesh-like
+    chol: Dict[Tuple[int, float], jax.Array] = field(default_factory=dict)
+    max_tenants: int = 64
+    _cn: Optional[jax.Array] = field(default=None, repr=False)
+    _cn_thr: Dict[int, jax.Array] = field(default_factory=dict)
+    _warm: "OrderedDict[str, np.ndarray]" = field(default_factory=OrderedDict)
+    _sharded: Dict[object, jax.Array] = field(default_factory=dict)
+    _lock: threading.RLock = field(default_factory=threading.RLock,
+                                   repr=False, compare=False)
+
+    # ------------------------------------------------------------ identity
+    @property
+    def shape(self) -> Tuple[int, int]:
+        return tuple(self.x_pad.shape)
+
+    def design_key(self) -> str:
+        """This design's identity: the fingerprint handed to ``prepare``
+        (serving passes its cache key) or, lazily on first use, the content
+        hash of the matrix bytes.  Lazy because hashing is an O(obs·vars)
+        host pass the plain ``solve()`` shim should never pay."""
+        with self._lock:
+            if self.fingerprint is None:
+                self.fingerprint = design_fingerprint(np.asarray(self.x_pad))
+            return self.fingerprint
+
+    # --------------------------------------------- per-tenant warm starts
+    def warm_coef(self, tenant_id: Optional[str]) -> Optional[np.ndarray]:
+        """Last stored coefficients for ``tenant_id`` (None = cold)."""
+        if tenant_id is None:
+            return None
+        with self._lock:
+            coef = self._warm.get(tenant_id)
+            if coef is not None:
+                self._warm.move_to_end(tenant_id)
+            return coef
+
+    def store_coef(self, tenant_id: Optional[str], coef: np.ndarray) -> None:
+        """Retain a tenant's solved (unpadded) coefficients, LRU-bounded.
+
+        Copies: the same array is handed back to callers, and an in-place
+        mutation there must not corrupt the tenant's next warm start.
+        """
+        if tenant_id is None:
+            return
+        coef = np.array(coef, np.float32, copy=True)
+        with self._lock:
+            self._warm[tenant_id] = coef
+            self._warm.move_to_end(tenant_id)
+            while len(self._warm) > self.max_tenants:
+                self._warm.popitem(last=False)
+
+    # ------------------------------------------------- derived design state
+    @property
+    def cn(self) -> jax.Array:
+        """Squared column norms (vars,), computed lazily on first use — the
+        O(obs·vars) pass only the iterative methods need; direct methods
+        ("lstsq"/"normal") never touch it, so a one-shot direct solve pays
+        nothing extra."""
+        with self._lock:
+            if self._cn is None:
+                self._cn = column_norms_sq(self.x_pad)
+            return self._cn
+
+    def cn_for_thr(self, thr: int) -> jax.Array:
+        """Column norms extended to SolveBakP's thr-multiple padding."""
+        vars_p = self.x_pad.shape[1]
+        nblocks = -(-vars_p // thr)
+        pad = nblocks * thr - vars_p
+        if pad == 0:
+            return self.cn
+        with self._lock:
+            if thr not in self._cn_thr:
+                self._cn_thr[thr] = jnp.concatenate(
+                    [self.cn, jnp.zeros((pad,), jnp.float32)])
+            return self._cn_thr[thr]
+
+    def chol_for(self, thr: int, ridge: float) -> jax.Array:
+        """Block-Gram Cholesky factors for (thr, ridge), computed once."""
+        from repro.core.solvebakp import block_gram_cholesky
+
+        key = (int(thr), float(ridge))
+        with self._lock:
+            if key not in self.chol:
+                obs_p, vars_p = self.x_pad.shape
+                nblocks = -(-vars_p // thr)
+                pad = nblocks * thr - vars_p
+                x = self.x_pad
+                if pad:
+                    x = jnp.pad(x, ((0, 0), (0, pad)))
+                xb = x.reshape(obs_p, nblocks, thr)
+                self.chol[key] = block_gram_cholesky(xb, ridge)
+            return self.chol[key]
+
+    def x_for_placement(self, placement, smesh) -> jax.Array:
+        """``x_pad`` laid out for a sharded placement's in_specs.
+
+        The ``device_put`` (an all-device scatter or broadcast) happens once
+        per (design, placement) and is memoised, so repeat solves onto the
+        same mesh reuse the resident copy instead of resharding.
+        """
+        if placement is None or not placement.sharded:
+            return self.x_pad
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        with self._lock:
+            if placement not in self._sharded:
+                if placement.kind == "obs_sharded":
+                    spec = P(smesh.data_axes, None)
+                elif placement.kind == "rhs_sharded":
+                    spec = P(None, None)  # replicated: devices share x
+                elif placement.kind == "mesh_2d":
+                    spec = P(smesh.data_axes, smesh.model_axis)
+                else:
+                    raise ValueError(
+                        f"unknown placement kind {placement.kind!r}")
+                self._sharded[placement] = jax.device_put(
+                    self.x_pad, NamedSharding(smesh.mesh, spec))
+            return self._sharded[placement]
+
+    def warm_method_state(self, spec: SolverSpec) -> None:
+        """Run ``spec.method``'s prepare hook (column-norm layouts, Gram
+        factors, ...) so later solves find their derived state resident.
+        Idempotent and thread-safe; serving pre-warm calls this off the
+        solver thread."""
+        entry = solver_method(spec.method)
+        if entry.prepare is not None:
+            entry.prepare(self, spec)
+
+    # ---------------------------------------------------------------- solve
+    def solve(
+        self,
+        y: jax.Array,
+        a0: Optional[jax.Array] = None,
+        *,
+        spec: Optional[SolverSpec] = None,
+        key: Optional[jax.Array] = None,
+        tenant_id: Optional[str] = None,
+        placement=None,
+        mesh=None,
+    ) -> SolveResult:
+        """Solve ``x @ a ≈ y`` against this prepared design.
+
+        Args:
+          y: (obs,) right-hand side, or (obs, k) for a multi-RHS solve (one
+            stream of ``x`` serves all k systems — methods with
+            ``multi_rhs=False`` reject the 2-D form).
+          a0: optional (vars,)/(vars, k) warm-start coefficients.  Direct
+            methods ignore ``a0`` (see ``SolverSpec``); iterative methods
+            start from it instead of zeros.
+          spec: overrides the spec bound at ``prepare`` time (the serving
+            engine shares one PreparedDesign across specs this way).
+          key: PRNG key for ``order="random"``.
+          tenant_id: when set and ``a0`` is None, warm-start from this
+            tenant's last stored coefficients and store the new solution
+            back afterwards (the serving warm-start protocol, available to
+            direct users of the handle too).
+          placement / mesh: mesh-sharded execution (serving placement layer;
+            ``mesh`` defaults to the one bound at ``prepare`` time).
+
+        Returns:
+          ``SolveResult`` in this design's (padded) shapes.
+        """
+        spec = spec if spec is not None else self.spec
+        if spec is None:
+            raise ValueError(
+                "no SolverSpec bound to this PreparedDesign; pass spec=")
+        mesh = mesh if mesh is not None else self.mesh
+        y = jnp.asarray(y)
+        entry = solver_method(spec.method)
+        if y.ndim == 2 and not entry.multi_rhs:
+            raise ValueError(
+                f"method {spec.method!r} does not support multi-RHS "
+                f"y of shape {y.shape}")
+        store_tenant = None
+        if a0 is None and tenant_id is not None and entry.iterative:
+            store_tenant = tenant_id
+            warm = self.warm_coef(tenant_id)
+            # A stored coefficient only warm-starts a compatible solve: the
+            # kernels take (vars,) — broadcast over RHS — or exactly
+            # (vars, k).  A tenant alternating RHS counts (say a (vars, 4)
+            # multi-RHS fit followed by a single-RHS solve) falls back to a
+            # cold start instead of crashing the kernel's a0 check.
+            nvars = self.x_pad.shape[1]
+            nrhs = y.shape[1] if y.ndim == 2 else 1
+            if warm is not None and warm.shape in ((nvars,), (nvars, nrhs)):
+                a0 = jnp.asarray(warm)
+        if a0 is not None and not entry.iterative:
+            a0 = None  # direct methods ignore warm starts (SolverSpec doc)
+        res = entry.solve(self, y, spec, a0=a0, key=key,
+                          placement=placement, mesh=mesh)
+        if store_tenant is not None:
+            self.store_coef(store_tenant, np.asarray(res.coef))
+        return res
+
+
+def prepare(
+    x: jax.Array,
+    spec: Optional[SolverSpec] = None,
+    mesh=None,
+    *,
+    fingerprint: Optional[str] = None,
+    max_tenants: int = 64,
+) -> PreparedDesign:
+    """Build a ``PreparedDesign`` for ``x`` (see module doc).
+
+    Args:
+      x: (obs, vars) design matrix; copied to device as fp32.
+      spec: default ``SolverSpec`` for ``PreparedDesign.solve``.  When given,
+        the method's prepare hook runs eagerly (column norms for its block
+        width, Gram Cholesky factors, ...) so the first ``solve`` is as
+        cheap as a repeat one.  Without it, pass ``spec=`` per solve.
+      mesh: optional ``repro.serve.placement.ServeMesh`` bound as the
+        default for placement-routed solves.
+      fingerprint: caller-known identity for ``x`` (skips hashing the
+        bytes); None defers to a lazy content hash on first
+        ``design_key()`` access.
+      max_tenants: LRU bound on retained per-tenant warm-start coefficients.
+    """
+    x = jnp.asarray(x, jnp.float32)
+    if x.ndim != 2:
+        raise ValueError(f"x must be 2D (obs, vars), got {x.shape}")
+    if spec is not None:
+        solver_method(spec.method)  # fail fast on unknown methods
+    prepared = PreparedDesign(
+        x_pad=x,
+        spec=spec,
+        fingerprint=fingerprint,
+        mesh=mesh,
+        max_tenants=max_tenants,
+    )
+    if spec is not None:
+        prepared.warm_method_state(spec)
+    return prepared

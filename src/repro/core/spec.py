@@ -1,0 +1,206 @@
+"""SolverSpec + the solver-method registry — the public solver configuration.
+
+The paper's structural split — everything reusable about the design matrix
+is computable once up front, while each solve streams ``x`` against one (or
+k) right-hand sides — is expressed here as two first-class objects:
+
+  * ``SolverSpec``: a frozen, hashable bag of every solver knob.  It replaces
+    the ``method="..."`` string plus loose kwargs that used to be duplicated
+    across ``core.solve()``, ``serve.SolveRequest`` and the serving cache.
+    Because it is hashable it keys compiled-program caches and serving batch
+    groups directly.
+  * the **method registry**: each solver method ("bak", "bakp", "bakp_gram",
+    "bakf", "lstsq", "normal", ...) is a ``MethodEntry`` naming its kernel
+    (a callable consuming a ``repro.core.prepare.PreparedDesign``), the spec
+    fields it consumes, and its serving capabilities (multi-RHS?
+    vmap-batchable? mesh-shardable?).  New backends register one entry plus
+    an optional prepare hook instead of patching dispatch sites in
+    ``core.api``, the serving engine, the placement policy and the async
+    dispatcher.
+
+This module is dependency-light on purpose (no jax import): specs are
+constructed by CLIs and request validators that must stay cheap, and the
+registry is populated by ``repro.core.methods`` at package import.
+
+``SolverSpec`` semantics shared by every method:
+
+  * ``atol``/``rtol`` — iterative stopping tolerances (see ``solvebak``);
+    direct methods ("lstsq"/"normal") ignore them.
+  * ``a0`` warm starts are a *solve-time* argument, not a spec field; direct
+    methods ignore ``a0`` entirely (this is THE place that documents it —
+    the per-solver docstrings defer here).
+  * ``ridge`` — Tikhonov diagonal used by the "normal" baseline's normal
+    equations AND by ``mode="gram"`` block factorisations (previously a
+    hardcoded 1e-6 inside ``solve()``).
+  * fields a method does not consume (``MethodEntry.consumes``) are ignored
+    by it; ``canonical()`` resets them to defaults so equivalent specs
+    compare/hash equal — serving uses this to coalesce requests whose knob
+    differences are irrelevant to their method.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Callable, Dict, Optional, Tuple
+
+# Spec fields every iterative BAK-family method consumes.
+_ITER_FIELDS = ("max_iter", "atol", "rtol")
+
+
+@dataclass(frozen=True)
+class SolverSpec:
+    """Frozen, hashable solver configuration.
+
+    Attributes:
+      method:   registry name of the solver method (see ``method_names()``).
+      max_iter: sweep budget for iterative methods.
+      atol:     absolute RMSE tolerance (0 disables).
+      rtol:     relative per-sweep improvement tolerance (0 disables).
+      thr:      block width for the SolveBakP family (paper thread count).
+      omega:    block-update relaxation factor (1.0 = paper-faithful).
+      order:    column order for "bak": "cyclic" or "random" (the latter
+                needs a PRNG ``key`` at solve time).
+      ridge:    Tikhonov diagonal for the "normal" baseline and for
+                ``mode="gram"`` block Gram factorisations.
+
+    Warm starts (``a0``) and PRNG keys are solve-time arguments — see
+    ``PreparedDesign.solve``.  Direct methods ignore ``a0``.
+    """
+
+    method: str = "bakp_gram"
+    max_iter: int = 50
+    atol: float = 0.0
+    rtol: float = 0.0
+    thr: int = 128
+    omega: float = 1.0
+    order: str = "cyclic"
+    ridge: float = 1e-6
+
+    def __post_init__(self):
+        # Type-normalise so e.g. rtol=0 and rtol=0.0 hash identically
+        # (specs key program caches and serving groups).  Knob *values* are
+        # deliberately not range-checked here: the kernels validate at
+        # trace/call time, which lets the serving engine isolate a poisoned
+        # request's batch instead of failing a whole flush at grouping.
+        object.__setattr__(self, "max_iter", int(self.max_iter))
+        object.__setattr__(self, "thr", int(self.thr))
+        for f in ("atol", "rtol", "omega", "ridge"):
+            object.__setattr__(self, f, float(getattr(self, f)))
+        # Unknown methods fail on use (registry population happens at
+        # repro.core import); validate eagerly when the registry is live.
+        if _REGISTRY and self.method not in _REGISTRY:
+            raise ValueError(
+                f"method must be one of {method_names()}, got {self.method!r}")
+
+    def replace(self, **changes) -> "SolverSpec":
+        """A copy with ``changes`` applied (dataclasses.replace)."""
+        return dataclasses.replace(self, **changes)
+
+    def canonical(self) -> "SolverSpec":
+        """The spec with every field its method ignores reset to defaults.
+
+        Two requests whose canonical specs compare equal can legally share
+        one compiled solve — the serving engine groups on this (e.g. any
+        mix of ``max_iter``/``thr`` still coalesces under "lstsq").
+        """
+        entry = solver_method(self.method)
+        changes = {
+            f.name: f.default
+            for f in dataclasses.fields(self)
+            if f.name != "method" and f.name not in entry.consumes
+        }
+        return self.replace(**changes) if changes else self
+
+
+@dataclass(frozen=True)
+class MethodEntry:
+    """One registered solver method.
+
+    Attributes:
+      name:      registry key (``SolverSpec.method``).
+      solve:     kernel ``(prepared, y, spec, *, a0, key, placement, mesh)
+                 -> SolveResult`` consuming a ``PreparedDesign``.
+      consumes:  SolverSpec fields that change this method's result —
+                 drives ``SolverSpec.canonical()`` and therefore serving
+                 batch grouping.
+      iterative: consumes ``max_iter``/``atol``/``rtol`` and honours ``a0``
+                 warm starts (direct methods ignore all four).
+      multi_rhs: accepts ``y`` of shape (obs, k) — required for the serving
+                 engine's same-design coalescing.
+      batchable: vmap-batchable across designs (needs ``vmap_one``).
+      shardable: has mesh-sharded backends (``repro.core.distributed``) the
+                 serving placement policy may route to.
+      blocked:   consumes ``thr`` (SolveBakP family) — tells callers which
+                 cached column-norm layout the kernel wants.
+      needs_chol: wants precomputed block-Gram Cholesky factors
+                 (``PreparedDesign.chol_for``).
+      prepare:   optional hook ``(prepared, spec) -> None`` warming the
+                 per-design state this method reuses (column norms for a
+                 given ``thr``, Gram factors, ...); run by ``prepare()`` and
+                 by the serving cache's pre-warm path.
+      vmap_one:  optional ``(spec) -> one(x, y, cn, atol[, chol][, a0])``
+                 per-system callable the serving engine wraps in
+                 ``jit(vmap(...))`` for cross-design batches.
+      summary:   one-line description (shown by ``describe_methods()``).
+    """
+
+    name: str
+    solve: Callable
+    consumes: Tuple[str, ...]
+    iterative: bool = True
+    multi_rhs: bool = True
+    batchable: bool = False
+    shardable: bool = False
+    blocked: bool = False
+    needs_chol: bool = False
+    prepare: Optional[Callable] = None
+    vmap_one: Optional[Callable] = None
+    summary: str = ""
+
+
+_REGISTRY: Dict[str, MethodEntry] = {}
+
+
+def register_method(entry: MethodEntry, *, overwrite: bool = False) -> MethodEntry:
+    """Register a solver method.  Third-party backends call this once and
+    become dispatchable from ``solve()``, ``prepare()`` and ``repro.serve``
+    without touching any of those call sites."""
+    if not overwrite and entry.name in _REGISTRY:
+        raise ValueError(f"method {entry.name!r} is already registered")
+    _REGISTRY[entry.name] = entry
+    return entry
+
+
+def solver_method(name: str) -> MethodEntry:
+    """Look up a registered method; raises ValueError on unknown names."""
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"method must be one of {method_names()}, got {name!r}") from None
+
+
+def method_names() -> Tuple[str, ...]:
+    """Registered method names, in registration order."""
+    return tuple(_REGISTRY)
+
+
+def is_registered(name: str) -> bool:
+    return name in _REGISTRY
+
+
+def shardable_methods() -> Tuple[str, ...]:
+    """Methods with a mesh-sharded backend (serving placement eligibility)."""
+    return tuple(n for n, e in _REGISTRY.items() if e.shardable)
+
+
+def batchable_methods() -> Tuple[str, ...]:
+    """Methods the serving engine may vmap-batch across designs."""
+    return tuple(n for n, e in _REGISTRY.items() if e.batchable)
+
+
+def describe_methods() -> str:
+    """Human-readable registry listing (CLI ``--help`` fodder)."""
+    width = max((len(n) for n in _REGISTRY), default=0)
+    return "\n".join(f"{e.name:<{width}}  {e.summary}"
+                     for e in _REGISTRY.values())

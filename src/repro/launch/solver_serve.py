@@ -67,8 +67,9 @@ def build_requests(rng, xs, n, method, max_iter, rtol, thr, noise=0.0,
     matrix, which is why the designs are drawn once and shared between the
     warmup and the timed stream.
     """
-    from repro.serve import SolveRequest
+    from repro.serve import SolveRequest, SolverSpec
 
+    spec = SolverSpec(method=method, max_iter=max_iter, rtol=rtol, thr=thr)
     designs = len(xs)
     nvars = xs[0].shape[1]
     reqs = []
@@ -79,8 +80,8 @@ def build_requests(rng, xs, n, method, max_iter, rtol, thr, noise=0.0,
         if noise:
             y = y + noise * rng.normal(size=y.shape[0]).astype(np.float32)
         reqs.append(SolveRequest(
-            x=xs[d], y=y, method=method, max_iter=max_iter, rtol=rtol,
-            thr=thr, design_key=f"design-{d}", request_id=f"req-{i}",
+            x=xs[d], y=y, spec=spec,
+            design_key=f"design-{d}", request_id=f"req-{i}",
             tenant_id=f"tenant-{i % tenants}" if tenants else None,
             deadline_s=deadline_s))
     return reqs
@@ -191,7 +192,9 @@ def main():
     ap.add_argument("--vars", type=int, default=256)
     ap.add_argument("--designs", type=int, default=8)
     ap.add_argument("--method", default="bakp_gram",
-                    choices=["bak", "bakp", "bakp_gram", "lstsq", "normal"])
+                    help="solver method; any name in the core method "
+                         "registry (repro.core.method_names()) — validated "
+                         "after jax loads so --mesh device forcing works")
     ap.add_argument("--max-iter", type=int, default=40)
     ap.add_argument("--rtol", type=float, default=1e-10)
     ap.add_argument("--thr", type=int, default=128)
@@ -227,9 +230,13 @@ def main():
     if args.mesh:
         ensure_mesh_devices(args.mesh)  # must precede any jax import
 
+    from repro.core import method_names
     from repro.serve import (PlacementPolicy, ServeConfig, SolverServeEngine,
                              build_serve_mesh)
 
+    if args.method not in method_names():
+        raise SystemExit(
+            f"--method must be one of {method_names()}, got {args.method!r}")
     rng = np.random.default_rng(args.seed)
     smesh = build_serve_mesh(args.mesh) if args.mesh else None
     policy = None

@@ -9,11 +9,20 @@ per-tenant warm-start coefficients) is memoised in an LRU cache, and an
 async dispatcher overlays deadline-aware batching with backpressure on top
 of the synchronous engine.
 
+The engine is a consumer of the public core API (PR 4): requests carry a
+``repro.core.SolverSpec`` (or legacy per-field knobs, mirrored into one),
+per-design state is a ``repro.core.PreparedDesign`` handle cached in the
+``DesignCache``, and every solve dispatches through
+``PreparedDesign.solve`` + the method registry — backends registered via
+``repro.core.register_method`` are servable without touching this package.
+
 Layout:
   types.py     SolveRequest / ServedSolve records.
   batching.py  pow-2 shape buckets, exact zero padding, design fingerprints,
-               deterministic request grouping, request validation.
-  cache.py     LRU DesignCache of per-design solver state + warm coefs.
+               deterministic request grouping (canonical-spec keyed),
+               request validation.
+  cache.py     LRU DesignCache of PreparedDesign handles (per-design solver
+               state + warm coefs).
   placement.py Placement/PlacementPolicy/ServeMesh — routing buckets onto
                the mesh-sharded solvers (obs-sharded, k-sharded multi-RHS,
                2-D) by padded size.
@@ -27,6 +36,8 @@ Drivers: ``repro.launch.solver_serve`` (CLI; sync + async modes),
 and ``benchmarks/serve_async.py`` (async latency/deadline + warm-start
 sweep savings).
 """
+from repro.core.prepare import PreparedDesign
+from repro.core.spec import SolverSpec
 from repro.serve.batching import (bucket_shape, design_fingerprint,
                                   group_requests, next_pow2, pad_x, pad_y,
                                   prepare_request)
@@ -50,6 +61,7 @@ __all__ = [
     "DispatcherStopped",
     "Placement",
     "PlacementPolicy",
+    "PreparedDesign",
     "QueueFullError",
     "ServeConfig",
     "ServeMesh",
@@ -58,6 +70,7 @@ __all__ = [
     "SolveRequest",
     "SolveTicket",
     "SolverServeEngine",
+    "SolverSpec",
     "build_serve_mesh",
     "mesh_device_count",
     "placement_for_bucket",

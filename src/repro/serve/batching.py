@@ -20,12 +20,13 @@ same buckets, the same groups and the same intra-group ordering.
 """
 from __future__ import annotations
 
-import hashlib
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.core.api import _METHODS
+import repro.core.methods  # noqa: F401  (populates the method registry)
+from repro.core.prepare import design_fingerprint as _core_fingerprint
+from repro.core.spec import SolverSpec, is_registered, method_names
 from repro.serve.types import SolveRequest
 
 Bucket = Tuple[int, int]
@@ -41,6 +42,10 @@ def prepare_request(req: SolveRequest, *,
     with whatever solve is in flight on the device.  Idempotent: a prepared
     request passes through unchanged, so engine.submit re-preparing one the
     dispatcher already handled is free.
+
+    A request carrying an explicit ``SolveRequest.spec`` has its legacy
+    mirror fields (method/max_iter/atol/rtol/thr) synced from it, so code
+    that still reads those sees the authoritative values.
     """
     x = req.x = np.asarray(req.x)
     if x.ndim != 2:
@@ -56,9 +61,15 @@ def prepare_request(req: SolveRequest, *,
             raise ValueError(
                 f"request a0 must be (vars,) = ({x.shape[1]},) matching x "
                 f"columns, got {a0.shape}")
-    if req.method not in _METHODS:
+    if req.spec is not None:  # spec wins; mirror for legacy readers
+        req.method = req.spec.method
+        req.max_iter = req.spec.max_iter
+        req.atol = req.spec.atol
+        req.rtol = req.spec.rtol
+        req.thr = req.spec.thr
+    if not is_registered(req.method):
         raise ValueError(
-            f"method must be one of {_METHODS}, got {req.method!r}")
+            f"method must be one of {method_names()}, got {req.method!r}")
     if req.deadline_s is not None and req.deadline_s <= 0:
         raise ValueError(f"deadline_s must be positive, got {req.deadline_s}")
     if fingerprint and req.design_key is None:
@@ -101,18 +112,16 @@ def pad_y(y: np.ndarray, obs_p: int) -> np.ndarray:
 
 
 def design_fingerprint(x, *, _prefix: str = "d") -> str:
-    """Content fingerprint of a design matrix (shape + dtype + bytes).
+    """Content fingerprint of a design matrix (delegates to
+    ``repro.core.design_fingerprint`` — the identity lives with the
+    ``PreparedDesign`` handle now).
 
     Two requests whose ``x`` hash equal are coalesced into one multi-RHS
     solve and share one design-cache entry.  Callers that already know two
     matrices are identical can skip this by setting
     ``SolveRequest.design_key``.
     """
-    a = np.ascontiguousarray(np.asarray(x))
-    h = hashlib.blake2b(digest_size=16)
-    h.update(str((a.shape, a.dtype.str)).encode())
-    h.update(a.view(np.uint8).data)
-    return f"{_prefix}:{h.hexdigest()}"
+    return _core_fingerprint(x, _prefix=_prefix)
 
 
 def request_bucket(req: SolveRequest, *, min_obs: int = 8,
@@ -121,27 +130,28 @@ def request_bucket(req: SolveRequest, *, min_obs: int = 8,
     return bucket_shape(obs, nvars, min_obs=min_obs, min_vars=min_vars)
 
 
-def config_key(req: SolveRequest, bucket: Bucket, placement=None) -> Tuple:
-    """Outer grouping key: only the knobs the request's method consumes.
+def config_key(req: SolveRequest, bucket: Bucket, placement=None,
+               spec: Optional[SolverSpec] = None) -> Tuple:
+    """Outer grouping key: ``(bucket, method, canonical spec[, placement])``.
 
-    Direct methods ("lstsq"/"normal") ignore every iteration knob, so any
-    mix of per-tenant max_iter/rtol/thr still coalesces into one multi-RHS
-    solve; "bak" additionally ignores ``thr``.  bucket and method always
-    lead (the engine reads outer[0]/outer[1]).
+    The canonical spec (``SolverSpec.canonical``) resets every field the
+    method's registry entry does not consume, so only knob differences that
+    would change the result split a group — direct methods ignore every
+    iteration knob and any mix of per-tenant max_iter/rtol/thr still
+    coalesces into one multi-RHS solve; "bak" additionally ignores ``thr``.
+    bucket and method always lead (the engine reads outer[0]/outer[1]).
+
+    ``spec`` overrides the spec derived from the request — the engine passes
+    its effective spec (engine-level omega/ridge applied) so grouping always
+    matches what will actually be solved.
 
     ``placement`` (a ``repro.serve.placement.Placement``, or None for the
     mesh-less engine) always trails the key: a compiled program is laid out
     for exactly one mesh placement, so requests routed to different
     placements must never share a batch even if every solver knob matches.
     """
-    if req.method in ("lstsq", "normal"):
-        key: Tuple = (bucket, req.method)
-    elif req.method == "bak":
-        key = (bucket, req.method, req.max_iter, float(req.atol),
-               float(req.rtol))
-    else:
-        key = (bucket, req.method, req.max_iter, float(req.atol),
-               float(req.rtol), int(req.thr))
+    spec = spec if spec is not None else req.solver_spec()
+    key: Tuple = (bucket, spec.method, spec.canonical())
     if placement is not None:
         key = key + (placement,)
     return key
@@ -149,7 +159,7 @@ def config_key(req: SolveRequest, bucket: Bucket, placement=None) -> Tuple:
 
 def group_requests(
     requests: List[SolveRequest], *, min_obs: int = 8, min_vars: int = 8,
-    placement_fn=None,
+    placement_fn=None, spec_fn=None,
 ) -> Dict[Tuple, Dict[str, List[int]]]:
     """Group request indices: (bucket, method-config) → design key → [idx].
 
@@ -160,14 +170,17 @@ def group_requests(
     follows first occurrence in ``requests``.
 
     ``placement_fn(bucket, method) -> Placement`` (optional) appends the
-    mesh placement to the outer key — see ``config_key``.
+    mesh placement to the outer key; ``spec_fn(request) -> SolverSpec``
+    (optional) supplies the effective spec (the engine passes
+    ``SolverServeEngine.spec_for``) — see ``config_key``.
     """
     groups: Dict[Tuple, Dict[str, List[int]]] = {}
     for i, req in enumerate(requests):
         bucket = request_bucket(req, min_obs=min_obs, min_vars=min_vars)
-        placement = (placement_fn(bucket, req.method)
+        spec = spec_fn(req) if spec_fn is not None else req.solver_spec()
+        placement = (placement_fn(bucket, spec.method)
                      if placement_fn is not None else None)
         key = req.design_key or design_fingerprint(req.x)
-        groups.setdefault(config_key(req, bucket, placement), {}).setdefault(
-            key, []).append(i)
+        groups.setdefault(config_key(req, bucket, placement, spec),
+                          {}).setdefault(key, []).append(i)
     return groups

@@ -1,149 +1,46 @@
-"""Design cache — memoised per-design solver state for repeated-X traffic.
+"""Design cache — LRU of ``PreparedDesign`` handles for repeated-X traffic.
 
 Serving workloads are dominated by repeated design matrices (the same
 feature matrix queried with many targets: probes, ablations, per-user
-heads).  Everything about a solve that depends only on ``x`` is therefore
-cached across requests, keyed by the design fingerprint:
+heads).  Everything about a solve that depends only on ``x`` therefore lives
+on one ``repro.core.prepare.PreparedDesign`` per design, cached across
+requests and keyed by the design fingerprint:
 
   * the padded device-resident copy of ``x`` (skips re-pad + host→device
     transfer on every request);
-  * the squared column norms (the O(obs·vars) pass of Algorithm 1 line 3);
-  * the per-block Gram Cholesky factors for ``mode="gram"`` — the
-    O(obs·vars·thr) factorisation that dominates small-iteration solves,
-    computed once per (thr, ridge) and reused by every later request;
+  * the squared column norms (the O(obs·vars) pass of Algorithm 1 line 3)
+    and their per-``thr`` padded layouts;
+  * the per-block Gram Cholesky factors for ``mode="gram"``, computed once
+    per (thr, ridge) and reused by every later request;
   * per-placement sharded device copies — a bucket routed to a mesh-sharded
-    backend (see ``repro.serve.placement``) needs ``x`` laid out for that
-    backend's in_specs (rows over data axes, replicated, 2-D); caching the
-    ``device_put`` per placement means repeat flushes skip the reshard;
-  * (optionally) each tenant's last solved coefficients — repeated-design
-    tenants re-solve with slowly-drifting ``y``, and warm-starting from the
-    previous solution cuts the sweep count without changing the fixed point.
+    backend (see ``repro.serve.placement``) reuses its resident reshard;
+  * each tenant's last solved coefficients (warm starts), LRU-bounded.
+
+This module used to carry its own ``DesignEntry`` dataclass with exactly
+that state; PR 4 promoted it to the public ``PreparedDesign`` handle, and
+the cache now stores handles directly — ``DesignEntry`` remains as an alias
+so existing callers and tests keep working.  The per-entry lock semantics
+(every mutable accessor guarded, per-design so one slow Cholesky build never
+blocks another design's lookups) moved with the state and are unchanged.
 
 Entries are LRU-evicted so memory is bounded by ``max_entries`` designs;
 per-entry warm coefficients are themselves LRU-bounded by ``max_tenants``.
-
-Thread safety: the async dispatcher's pre-warm thread and the solver thread
-touch the same entries concurrently, so every piece of mutable per-entry
-state (warm-coefficient LRU, derived-factor dicts, per-placement copies) is
-guarded by a per-entry lock — the cache-level lock only covers the LRU map
-itself.
+The cache-level lock only covers the LRU map itself.
 """
 from __future__ import annotations
 
 import threading
 from collections import OrderedDict
-from dataclasses import dataclass, field
-from typing import Dict, Optional, Tuple
+from dataclasses import dataclass
+from typing import Optional, Tuple
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core.solvebakp import block_gram_cholesky
-from repro.core.types import column_norms_sq
+from repro.core.prepare import PreparedDesign, prepare
+from repro.core.spec import SolverSpec
 
-
-@dataclass
-class DesignEntry:
-    """Cached per-design state.  ``x_pad`` is bucket-padded, fp32, on device.
-
-    All mutable members (``_warm``, ``chol``, ``_cn_thr``, ``_sharded``) are
-    read AND written from two threads (the dispatcher's pre-warm thread and
-    the engine's solver thread), so every accessor takes the per-entry
-    ``_lock`` — an OrderedDict mid-``move_to_end`` or a dict mid-insert is
-    not safe to race.  The lock is per-entry (not the cache-wide one) so a
-    slow Cholesky build for one design never blocks lookups on another.
-    """
-
-    x_pad: jax.Array                      # (obs_p, vars_p)
-    cn: jax.Array                         # (vars_p,) squared column norms
-    chol: Dict[Tuple[int, float], jax.Array] = field(default_factory=dict)
-    max_tenants: int = 64
-    _cn_thr: Dict[int, jax.Array] = field(default_factory=dict)
-    _warm: "OrderedDict[str, np.ndarray]" = field(default_factory=OrderedDict)
-    _sharded: Dict[object, jax.Array] = field(default_factory=dict)
-    _lock: threading.RLock = field(default_factory=threading.RLock,
-                                   repr=False, compare=False)
-
-    # --------------------------------------------- per-tenant warm starts
-    def warm_coef(self, tenant_id: Optional[str]) -> Optional[np.ndarray]:
-        """Last stored coefficients for ``tenant_id`` (None = cold)."""
-        if tenant_id is None:
-            return None
-        with self._lock:
-            coef = self._warm.get(tenant_id)
-            if coef is not None:
-                self._warm.move_to_end(tenant_id)
-            return coef
-
-    def store_coef(self, tenant_id: Optional[str], coef: np.ndarray) -> None:
-        """Retain a tenant's solved (unpadded) coefficients, LRU-bounded.
-
-        Copies: the same array is handed to the caller as
-        ``ServedSolve.coef``, and an in-place mutation there must not
-        corrupt the tenant's next warm start.
-        """
-        if tenant_id is None:
-            return
-        coef = np.array(coef, np.float32, copy=True)
-        with self._lock:
-            self._warm[tenant_id] = coef
-            self._warm.move_to_end(tenant_id)
-            while len(self._warm) > self.max_tenants:
-                self._warm.popitem(last=False)
-
-    def cn_for_thr(self, thr: int) -> jax.Array:
-        """Column norms extended to solvebakp's thr-multiple padding."""
-        vars_p = self.x_pad.shape[1]
-        nblocks = -(-vars_p // thr)
-        pad = nblocks * thr - vars_p
-        if pad == 0:
-            return self.cn
-        with self._lock:
-            if thr not in self._cn_thr:
-                self._cn_thr[thr] = jnp.concatenate(
-                    [self.cn, jnp.zeros((pad,), jnp.float32)])
-            return self._cn_thr[thr]
-
-    def chol_for(self, thr: int, ridge: float) -> jax.Array:
-        """Block-Gram Cholesky factors for (thr, ridge), computed once."""
-        key = (int(thr), float(ridge))
-        with self._lock:
-            if key not in self.chol:
-                obs_p, vars_p = self.x_pad.shape
-                nblocks = -(-vars_p // thr)
-                pad = nblocks * thr - vars_p
-                x = self.x_pad
-                if pad:
-                    x = jnp.pad(x, ((0, 0), (0, pad)))
-                xb = x.reshape(obs_p, nblocks, thr)
-                self.chol[key] = block_gram_cholesky(xb, ridge)
-            return self.chol[key]
-
-    def x_for_placement(self, placement, smesh) -> jax.Array:
-        """``x_pad`` laid out for a sharded placement's in_specs.
-
-        The ``device_put`` (an all-device scatter or broadcast) happens once
-        per (design, placement) and is memoised, so repeat flushes onto the
-        same mesh reuse the resident copy instead of resharding.
-        """
-        if placement is None or not placement.sharded:
-            return self.x_pad
-        from jax.sharding import NamedSharding, PartitionSpec as P
-        with self._lock:
-            if placement not in self._sharded:
-                if placement.kind == "obs_sharded":
-                    spec = P(smesh.data_axes, None)
-                elif placement.kind == "rhs_sharded":
-                    spec = P(None, None)  # replicated: devices share x
-                elif placement.kind == "mesh_2d":
-                    spec = P(smesh.data_axes, smesh.model_axis)
-                else:
-                    raise ValueError(
-                        f"unknown placement kind {placement.kind!r}")
-                self._sharded[placement] = jax.device_put(
-                    self.x_pad, NamedSharding(smesh.mesh, spec))
-            return self._sharded[placement]
+# Backwards-compatible name: per-design cached state IS the public handle.
+DesignEntry = PreparedDesign
 
 
 @dataclass
@@ -159,13 +56,14 @@ class CacheStats:
 
 
 class DesignCache:
-    """LRU cache: design key → ``DesignEntry``.
+    """LRU cache: design key → ``PreparedDesign``.
 
     Thread-safe: the async dispatcher pre-warms entries from its dispatch
-    thread (overlapping padding + host→device transfer with in-flight
-    solves) while the solver thread reads them, so the LRU bookkeeping is
-    guarded by a lock.  Entry *construction* runs outside the lock; on a
-    build race the first ``put`` wins and the loser's entry is dropped.
+    thread (overlapping padding + host→device transfer + method-state
+    warming with in-flight solves) while the solver thread reads them, so
+    the LRU bookkeeping is guarded by a lock.  Entry *construction* runs
+    outside the lock; on a build race the first ``put`` wins and the
+    loser's entry is dropped.
     """
 
     def __init__(self, max_entries: int = 64, max_tenants: int = 64):
@@ -173,13 +71,13 @@ class DesignCache:
         self.max_tenants = max_tenants
         self.stats = CacheStats()
         self._lock = threading.Lock()
-        self._entries: "OrderedDict[str, DesignEntry]" = OrderedDict()
+        self._entries: "OrderedDict[str, PreparedDesign]" = OrderedDict()
 
     def __len__(self) -> int:
         return len(self._entries)
 
     def get(self, key: str,
-            record_stats: bool = True) -> Optional[DesignEntry]:
+            record_stats: bool = True) -> Optional[PreparedDesign]:
         """Fetch (and LRU-touch) an entry.  ``record_stats=False`` makes the
         lookup invisible to hit/miss accounting — used by the dispatcher's
         pre-warm so each request still logs exactly one cache event, at
@@ -195,7 +93,7 @@ class DesignCache:
                 self.stats.hits += 1
             return entry
 
-    def put(self, key: str, entry: DesignEntry) -> DesignEntry:
+    def put(self, key: str, entry: PreparedDesign) -> PreparedDesign:
         with self._lock:
             existing = self._entries.get(key)
             if existing is not None:  # build race: first writer wins
@@ -208,17 +106,26 @@ class DesignCache:
             return entry
 
     def get_or_build(self, key: str, build_x_pad,
-                     record_stats: bool = True) -> Tuple[DesignEntry, bool]:
-        """Fetch the entry for ``key``, building it on miss.
+                     spec: Optional[SolverSpec] = None,
+                     record_stats: bool = True
+                     ) -> Tuple[PreparedDesign, bool]:
+        """Fetch the ``PreparedDesign`` for ``key``, preparing it on miss.
 
         ``build_x_pad`` is a zero-arg callable returning the bucket-padded
         design matrix — only invoked on a miss, so hits skip the host-side
-        padding entirely.  Returns (entry, cache_hit).
+        padding entirely.  ``spec`` (optional) additionally warms the
+        method's derived state (thr-padded column norms, block-Gram
+        Cholesky) on hit AND miss — the dispatcher's pre-warm passes it so
+        those builds run off the solver thread; idempotent + per-entry
+        locked, so racing with the solver thread is safe.  Returns
+        (entry, cache_hit).
         """
         entry = self.get(key, record_stats)
-        if entry is not None:
-            return entry, True
-        x_pad = jnp.asarray(build_x_pad(), jnp.float32)
-        entry = DesignEntry(x_pad=x_pad, cn=column_norms_sq(x_pad),
-                            max_tenants=self.max_tenants)
-        return self.put(key, entry), False
+        hit = entry is not None
+        if not hit:
+            built = prepare(np.asarray(build_x_pad(), np.float32),
+                            fingerprint=key, max_tenants=self.max_tenants)
+            entry = self.put(key, built)
+        if spec is not None:
+            entry.warm_method_state(spec)
+        return entry, hit

@@ -366,23 +366,29 @@ class AsyncDispatcher:
         ecfg = self.engine.config
         bucket = request_bucket(req, min_obs=ecfg.min_obs,
                                 min_vars=ecfg.min_vars)
+        spec = self.engine.spec_for(req)
         if self.config.prewarm_cache:
             try:
                 # record_stats=False: the flush-time lookup is the one cache
                 # event per request, so hit rates stay comparable with the
                 # synchronous path ("hit" = design state resident at flush).
+                # Passing the effective spec also warms the method's derived
+                # design state (thr-padded column norms, block-Gram Cholesky
+                # factors) here on the dispatch thread, overlapping those
+                # builds with whatever solve is in flight on the device.
                 self.engine.cache.get_or_build(
                     req.design_key,
                     lambda: pad_x(np.asarray(req.x), bucket),
+                    spec=spec,
                     record_stats=False)
             except Exception:
                 pass  # engine flush will surface the failure per-request
-        # Placement-aware key: batches the dispatcher accumulates line up
-        # with the engine's flush grouping, so a sharded bucket's requests
-        # never share a pending batch with single-device ones.
-        placement = self.engine.placement_for(bucket, req.method)
-        batch = self._pending.setdefault(config_key(req, bucket, placement),
-                                         _PendingBatch())
+        # Placement- and spec-aware key: batches the dispatcher accumulates
+        # line up with the engine's flush grouping, so a sharded bucket's
+        # requests never share a pending batch with single-device ones.
+        placement = self.engine.placement_for(bucket, spec.method)
+        batch = self._pending.setdefault(
+            config_key(req, bucket, placement, spec), _PendingBatch())
         batch.tickets.append(ticket)
         batch.last_join = time.monotonic()
 

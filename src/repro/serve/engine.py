@@ -13,9 +13,14 @@ small number of compiled batch solves:
   3. **Same-bucket vmap batching** — leftover single-design requests in a
      bucket are stacked and solved with one vmapped call (batch padded to a
      power of two by replicating the last system; replicas are discarded).
-  4. **Design caching** — everything that depends only on ``x`` (device
-     copy, column norms, block-Gram Cholesky factors) is memoised across
-     flushes in an LRU ``DesignCache``.
+  4. **Design caching** — everything that depends only on ``x`` lives on a
+     ``repro.core.PreparedDesign`` handle (device copy, column norms,
+     block-Gram Cholesky factors, sharded copies, warm coefficients),
+     memoised across flushes in an LRU ``DesignCache``.  Solves dispatch
+     through ``PreparedDesign.solve`` with the request's effective
+     ``SolverSpec`` (see ``spec_for``), so the engine is a consumer of the
+     public core API — methods registered via ``repro.core.register_method``
+     are servable without engine changes.
   5. **Warm starts** — a request may carry initial coefficients
      (``SolveRequest.a0``), or name a ``tenant_id`` whose last solved
      coefficients the design cache retained; the iterative solvers then
@@ -61,22 +66,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.api import solve
-from repro.core.distributed import (solvebakp_2d, solvebakp_obs_sharded,
-                                    solvebakp_rhs_sharded)
-from repro.core.solvebak import solvebak
-from repro.core.solvebakp import solvebakp
+from repro.core.prepare import PreparedDesign
+from repro.core.spec import SolverSpec, solver_method
 from repro.serve.batching import (group_requests, next_pow2, pad_x, pad_y,
                                   prepare_request)
-from repro.serve.cache import DesignCache, DesignEntry
-from repro.serve.placement import (SHARDABLE_METHODS, Placement,
-                                   PlacementPolicy, ServeMesh,
+from repro.serve.cache import DesignCache
+from repro.serve.placement import (Placement, PlacementPolicy, ServeMesh,
                                    placement_for_bucket, placement_for_group)
 from repro.serve.types import ServedSolve, SolveRequest
-
-# Methods that can be vmap-batched across designs.  Same-design multi-RHS
-# coalescing applies to every method (all of them accept y of shape (obs, k)).
-_BATCHABLE = ("bak", "bakp", "bakp_gram")
 
 
 @dataclass
@@ -113,36 +110,27 @@ class ServeStats:
 
 
 @functools.lru_cache(maxsize=32)
-def _vmapped_solver(method: str, max_iter: int, rtol: float, thr: int,
-                    omega: float, ridge: float, warm: bool):
+def _vmapped_solver(spec: SolverSpec, warm: bool):
     """jit(vmap(...)) batch solver for one static solver config.
 
-    Module-level lru_cache keeps the function object (and therefore the jit
-    compile cache) stable across engine instances and flushes; the bounded
-    maxsize caps memory when tenants send many distinct knob combinations
-    (evicting the wrapper releases its jit executables).  ``atol`` is a
-    *traced per-element* argument (not part of the cache key): requests in
-    one bucket can have different real obs, so each gets its own
-    padding-corrected absolute tolerance without recompiling.  ``warm``
-    selects the variant that threads a batched ``a0`` through — kept out of
-    the cold signature so all-cold batches keep their original program.
+    ``spec`` must be canonical with ``atol`` zeroed (the engine passes
+    ``spec.canonical().replace(atol=0.0)``): ``atol`` is a *traced
+    per-element* argument, not part of the cache key — requests in one
+    bucket can have different real obs, so each gets its own
+    padding-corrected absolute tolerance without recompiling.  The
+    per-system callable comes from the method's registry entry
+    (``MethodEntry.vmap_one``), so registered backends become batchable by
+    providing one.  Module-level lru_cache keeps the function object (and
+    therefore the jit compile cache) stable across engine instances and
+    flushes; the bounded maxsize caps memory when tenants send many
+    distinct knob combinations.  ``warm`` selects the variant that threads
+    a batched ``a0`` through — kept out of the cold signature so all-cold
+    batches keep their original program.
     """
-    if method == "bak":
-        def one(x, y, cn, atol, a0=None):
-            return solvebak(x, y, max_iter=max_iter, atol=atol, rtol=rtol,
-                            cn=cn, a0=a0)
-    elif method == "bakp":
-        def one(x, y, cn, atol, a0=None):
-            return solvebakp(x, y, thr=thr, max_iter=max_iter, atol=atol,
-                             rtol=rtol, omega=omega, mode="jacobi", cn=cn,
-                             a0=a0)
-    elif method == "bakp_gram":
-        def one(x, y, cn, atol, chol, a0=None):
-            return solvebakp(x, y, thr=thr, max_iter=max_iter, atol=atol,
-                             rtol=rtol, omega=omega, mode="gram", ridge=ridge,
-                             cn=cn, chol=chol, a0=a0)
-    else:
-        raise ValueError(f"method {method!r} is not vmap-batchable")
+    entry = solver_method(spec.method)
+    if entry.vmap_one is None:
+        raise ValueError(f"method {spec.method!r} is not vmap-batchable")
+    one = entry.vmap_one(spec)
     if warm:
         return jax.jit(jax.vmap(one))
     return jax.jit(jax.vmap(functools.partial(one, a0=None)))
@@ -179,6 +167,20 @@ class SolverServeEngine:
         if self.mesh is None:
             return None
         return placement_for_bucket(bucket, method, self.policy, self.mesh)
+
+    def spec_for(self, req: SolveRequest) -> SolverSpec:
+        """The effective ``SolverSpec`` a request solves under.
+
+        An explicit ``SolveRequest.spec`` is authoritative; legacy
+        per-field requests get the engine-level ``omega``/``ridge``
+        (``ServeConfig``) applied, preserving the pre-spec behaviour where
+        those two knobs were engine configuration.
+        """
+        spec = req.solver_spec()
+        if req.spec is None:
+            spec = spec.replace(omega=self.config.omega,
+                                ridge=self.config.ridge)
+        return spec
 
     # ------------------------------------------------------------- intake
     def submit(self, request: SolveRequest) -> str:
@@ -217,10 +219,12 @@ class SolverServeEngine:
         cfg = self.config
         groups = group_requests(requests, min_obs=cfg.min_obs,
                                 min_vars=cfg.min_vars,
-                                placement_fn=self.placement_for)
+                                placement_fn=self.placement_for,
+                                spec_fn=self.spec_for)
         for outer, designs in groups.items():
             bucket = outer[0]
             method = outer[1]
+            mentry = solver_method(method)
             placement = self.placement_for(bucket, method)
             singles = []  # (idx, entry, cache_hit)
             for key, idxs in designs.items():
@@ -230,7 +234,7 @@ class SolverServeEngine:
                 except Exception as exc:  # bad design: fail just this group
                     self._fail(requests, idxs, bucket, exc, results)
                     continue
-                if cfg.coalesce and len(idxs) > 1:
+                if cfg.coalesce and len(idxs) > 1 and mentry.multi_rhs:
                     try:
                         self._solve_multi_rhs(requests, idxs, entry, hit,
                                               bucket, results, placement)
@@ -241,7 +245,7 @@ class SolverServeEngine:
             # vmap batching is single-device only (a vmapped shard_map would
             # nest meshes); sharded buckets solve leftovers individually.
             use_vmap = (cfg.vmap_batch and len(singles) > 1
-                        and method in _BATCHABLE
+                        and mentry.batchable
                         and (placement is None or not placement.sharded))
             if use_vmap:
                 for lo in range(0, len(singles), cfg.max_vmap_batch):
@@ -291,9 +295,9 @@ class SolverServeEngine:
             )
             self.stats.failures += 1
 
-    def _resolve_a0(self, req: SolveRequest, entry: DesignEntry):
+    def _resolve_a0(self, req: SolveRequest, entry: PreparedDesign):
         """Warm-start coefficients for a request: explicit ``a0`` wins,
-        then the design cache's per-tenant store; None means cold."""
+        then the design handle's per-tenant store; None means cold."""
         if req.a0 is not None:
             return np.asarray(req.a0, np.float32)
         if self.config.warm_cache:
@@ -328,60 +332,24 @@ class SolverServeEngine:
             return atol
         return atol * math.sqrt(n_real / n_padded)
 
-    def _call_solver(self, req: SolveRequest, entry: DesignEntry, y_dev,
+    def _call_solver(self, spec: SolverSpec, entry: PreparedDesign, y_dev,
                      atol: float, a0=None, placement=None):
-        """One (possibly multi-RHS) solve on the padded design.
+        """One (possibly multi-RHS) solve on the prepared design.
 
-        ``atol`` is the padding-corrected absolute tolerance (see
-        ``_padded_atol``); ``req.atol`` itself must not be used here.
-        ``a0`` is the bucket-padded warm start (or None for the cold
-        program — kept as a separate jit signature so cold solves don't pay
-        the warm path's extra residual matmul).
-
-        ``placement`` routes the solve onto a mesh-sharded backend; the
-        design comes from the entry's per-placement sharded copy, and the
-        sharded programs compute their block factors in-program (psum'd
-        across shards) instead of taking the cached single-device
-        ``cn``/``chol`` — those are laid out for one device.
+        Everything dispatches through ``PreparedDesign.solve`` — the
+        engine's only job here is the serving-side corrections: ``atol`` is
+        the padding-corrected absolute tolerance (see ``_padded_atol``;
+        ``spec.atol`` itself must not be used), and a 2-D mesh placement
+        gets the engine's ``omega_2d`` damping (its cross-device Jacobi
+        block is D·thr wide).  ``a0`` is the bucket-padded warm start (or
+        None for the cold program — a separate jit signature, so cold
+        solves don't pay the warm path's extra residual matmul).
         """
-        cfg = self.config
-        m = req.method
-        if placement is not None and placement.sharded:
-            sm = self.mesh
-            x_dev = entry.x_for_placement(placement, sm)
-            kw = dict(thr=req.thr, max_iter=req.max_iter, atol=atol,
-                      rtol=req.rtol, ridge=cfg.ridge,
-                      mode="gram" if m == "bakp_gram" else "jacobi", a0=a0)
-            if placement.kind == "obs_sharded":
-                return solvebakp_obs_sharded(
-                    x_dev, y_dev, sm.mesh, data_axes=sm.data_axes,
-                    omega=cfg.omega, **kw)
-            if placement.kind == "rhs_sharded":
-                return solvebakp_rhs_sharded(
-                    x_dev, y_dev, sm.mesh, data_axes=sm.data_axes,
-                    omega=cfg.omega, **kw)
-            if placement.kind == "mesh_2d":
-                return solvebakp_2d(
-                    x_dev, y_dev, sm.mesh, data_axes=sm.data_axes,
-                    model_axis=sm.model_axis, omega=cfg.omega_2d, **kw)
-            raise ValueError(f"unknown placement kind {placement.kind!r}")
-        if m == "bak":
-            return solvebak(entry.x_pad, y_dev, max_iter=req.max_iter,
-                            atol=atol, rtol=req.rtol, cn=entry.cn, a0=a0)
-        if m == "bakp":
-            return solvebakp(entry.x_pad, y_dev, thr=req.thr,
-                             max_iter=req.max_iter, atol=atol,
-                             rtol=req.rtol, omega=cfg.omega, mode="jacobi",
-                             cn=entry.cn_for_thr(req.thr), a0=a0)
-        if m == "bakp_gram":
-            return solvebakp(entry.x_pad, y_dev, thr=req.thr,
-                             max_iter=req.max_iter, atol=atol,
-                             rtol=req.rtol, omega=cfg.omega, mode="gram",
-                             ridge=cfg.ridge, cn=entry.cn_for_thr(req.thr),
-                             chol=entry.chol_for(req.thr, cfg.ridge), a0=a0)
-        # Direct baselines ride the cached padded design but not cn/chol
-        # (atol/a0 are iteration knobs; direct methods don't use them).
-        return solve(entry.x_pad, y_dev, method=m, max_iter=req.max_iter)
+        eff = spec.replace(atol=atol)
+        if placement is not None and placement.kind == "mesh_2d":
+            eff = eff.replace(omega=self.config.omega_2d)
+        return entry.solve(y_dev, a0, spec=eff, placement=placement,
+                           mesh=self.mesh)
 
     def _strip(self, req: SolveRequest, coef, residual, *, bucket, kind,
                group_size, latency, hit, n_sweeps, converged, entry=None,
@@ -426,16 +394,17 @@ class SolverServeEngine:
         obs_p, vars_p = bucket
         k = len(idxs)
         k_pad = next_pow2(k)
-        if (self.mesh is not None
-                and requests[idxs[0]].method in SHARDABLE_METHODS):
+        req0 = requests[idxs[0]]
+        spec = self.spec_for(req0)
+        mentry = solver_method(spec.method)
+        if self.mesh is not None and mentry.shardable:
             placement = placement_for_group(
                 placement or Placement(), k_pad, self.policy, self.mesh)
         ys = np.zeros((obs_p, k_pad), np.float32)
         for c, idx in enumerate(idxs):
             y = np.asarray(requests[idx].y, np.float32)
             ys[: y.shape[0], c] = y
-        req_method = requests[idxs[0]].method
-        if req_method in _BATCHABLE:
+        if mentry.iterative:
             a0s = [self._resolve_a0(requests[idx], entry) for idx in idxs]
         else:  # direct methods don't iterate, so warm starts are meaningless
             a0s = [None] * k
@@ -446,12 +415,11 @@ class SolverServeEngine:
                 if a is not None:
                     a0_mat[:, c] = self._pad_a0(a, vars_p)
             a0_mat = jnp.asarray(a0_mat)
-        req0 = requests[idxs[0]]
         # Same design => same real obs for every member of the group.
         obs_real = np.asarray(req0.x).shape[0]
-        atol = self._padded_atol(req0.atol, obs_real * k, obs_p * k_pad)
+        atol = self._padded_atol(spec.atol, obs_real * k, obs_p * k_pad)
         t0 = time.perf_counter()
-        res = self._call_solver(req0, entry, jnp.asarray(ys), atol, a0=a0_mat,
+        res = self._call_solver(spec, entry, jnp.asarray(ys), atol, a0=a0_mat,
                                 placement=placement)
         jax.block_until_ready(res.coef)
         dt = time.perf_counter() - t0
@@ -473,6 +441,8 @@ class SolverServeEngine:
         """Stack same-bucket single-design requests into one vmapped solve."""
         obs_p, vars_p = bucket
         req0 = requests[singles[0][0]]
+        spec = self.spec_for(req0)
+        mentry = solver_method(spec.method)
         b = len(singles)
         b_pad = next_pow2(b)
         # Pad the batch by replicating the last system (discarded below) so
@@ -484,26 +454,22 @@ class SolverServeEngine:
              for i, _, _ in padded]))
         a0s = [self._resolve_a0(requests[i], e) for i, e, _ in padded]
         warm = any(a is not None for a in a0s)
-        m = req0.method
-        solver = _vmapped_solver(m, req0.max_iter, float(req0.rtol),
-                                 int(req0.thr), float(self.config.omega),
-                                 float(self.config.ridge), warm)
+        solver = _vmapped_solver(spec.canonical().replace(atol=0.0), warm)
         # Per-element padding-corrected atol (real obs varies within a
         # bucket); traced, so it never forces a recompile.
         atols = jnp.asarray([
-            self._padded_atol(req0.atol, np.asarray(requests[i].x).shape[0],
+            self._padded_atol(spec.atol, np.asarray(requests[i].x).shape[0],
                               obs_p)
             for i, _, _ in padded], dtype=jnp.float32)
-        if m == "bakp_gram":
-            cns = jnp.stack([e.cn_for_thr(req0.thr) for _, e, _ in padded])
-            chols = jnp.stack(
-                [e.chol_for(req0.thr, self.config.ridge) for _, e, _ in padded])
-            args = (xs, ys, cns, atols, chols)
-        elif m == "bakp":
-            cns = jnp.stack([e.cn_for_thr(req0.thr) for _, e, _ in padded])
-            args = (xs, ys, cns, atols)
-        else:  # "bak"
+        if mentry.blocked:
+            cns = jnp.stack([e.cn_for_thr(spec.thr) for _, e, _ in padded])
+        else:
             cns = jnp.stack([e.cn for _, e, _ in padded])
+        if mentry.needs_chol:
+            chols = jnp.stack(
+                [e.chol_for(spec.thr, spec.ridge) for _, e, _ in padded])
+            args = (xs, ys, cns, atols, chols)
+        else:
             args = (xs, ys, cns, atols)
         if warm:
             a0_mat = np.zeros((b_pad, vars_p), np.float32)
@@ -530,15 +496,18 @@ class SolverServeEngine:
     def _solve_one(self, requests, idx, entry, hit, bucket, results,
                    placement=None):
         req = requests[idx]
+        spec = self.spec_for(req)
         obs_real = np.asarray(req.x).shape[0]
         y_pad = pad_y(np.asarray(req.y, np.float32), bucket[0])
-        atol = self._padded_atol(req.atol, obs_real, bucket[0])
-        a0 = self._resolve_a0(req, entry)
+        atol = self._padded_atol(spec.atol, obs_real, bucket[0])
+        a0 = None
+        if solver_method(spec.method).iterative:
+            a0 = self._resolve_a0(req, entry)
         a0_dev = None
-        if a0 is not None and req.method in _BATCHABLE:
+        if a0 is not None:
             a0_dev = jnp.asarray(self._pad_a0(a0, bucket[1]))
         t0 = time.perf_counter()
-        res = self._call_solver(req, entry, jnp.asarray(y_pad), atol,
+        res = self._call_solver(spec, entry, jnp.asarray(y_pad), atol,
                                 a0=a0_dev, placement=placement)
         jax.block_until_ready(res.coef)
         dt = time.perf_counter() - t0

@@ -47,8 +47,16 @@ from typing import Optional, Tuple
 
 import numpy as np
 
-# Methods with a sharded (SolveBakP-family) backend.
-SHARDABLE_METHODS = ("bakp", "bakp_gram")
+import repro.core.methods  # noqa: F401  (populates the method registry)
+from repro.core.spec import is_registered, solver_method
+
+
+def _is_shardable(method: str) -> bool:
+    """A method is placement-eligible iff its registry entry says so —
+    third-party backends registered ``shardable=True`` route like the
+    built-in SolveBakP family without touching this module.  O(1): this
+    runs once per request in the grouping hot path."""
+    return is_registered(method) and solver_method(method).shardable
 
 
 @dataclass(frozen=True)
@@ -144,7 +152,7 @@ def placement_for_bucket(bucket: Tuple[int, int], method: str,
                          policy: PlacementPolicy,
                          smesh: Optional[ServeMesh]) -> Placement:
     """Bucket-level placement (known before design coalescing)."""
-    if smesh is None or method not in SHARDABLE_METHODS:
+    if smesh is None or not _is_shardable(method):
         return SINGLE
     obs_p, vars_p = bucket
     cells = obs_p * vars_p

@@ -12,6 +12,8 @@ from typing import Any, Optional
 
 import numpy as np
 
+from repro.core.spec import SolverSpec
+
 
 @dataclass
 class SolveRequest:
@@ -20,10 +22,15 @@ class SolveRequest:
     Attributes:
       x: (obs, vars) design matrix (numpy or jax array).
       y: (obs,) right-hand side.
-      method: solver method — "bak", "bakp", "bakp_gram", "lstsq" or
-        "normal" (same namespace as ``repro.core.solve``).  Requests are
-        only coalesced/batched with requests using the same method.
-      max_iter / atol / rtol / thr: solver knobs (see ``repro.core``).
+      spec: optional ``repro.core.SolverSpec`` carrying the full solver
+        configuration — the preferred form.  When set it wins over the
+        legacy per-field knobs below (which are synced from it during
+        validation so older readers keep seeing consistent values).
+      method: solver method — any name in ``repro.core.method_names()``
+        (same registry as ``repro.core.solve``).  Requests are only
+        coalesced/batched with requests whose canonical spec matches.
+      max_iter / atol / rtol / thr: legacy solver knobs (see
+        ``repro.core.SolverSpec``); ignored when ``spec`` is given.
       a0: optional (vars,) initial coefficients (warm start).  The iterative
         methods start from ``a0`` instead of zeros, so a request whose ``y``
         drifted only slightly since its last solve converges in a fraction of
@@ -52,11 +59,23 @@ class SolveRequest:
     atol: float = 0.0
     rtol: float = 0.0
     thr: int = 128
+    spec: Optional[SolverSpec] = None
     a0: Optional[Any] = None
     tenant_id: Optional[str] = None
     deadline_s: Optional[float] = None
     design_key: Optional[str] = None
     request_id: Optional[str] = None
+
+    def solver_spec(self) -> SolverSpec:
+        """The request's ``SolverSpec``: the explicit ``spec`` when given,
+        else one built from the legacy per-field knobs (engine-level
+        ``omega``/``ridge`` defaults are applied by the engine — see
+        ``SolverServeEngine.spec_for``)."""
+        if self.spec is not None:
+            return self.spec
+        return SolverSpec(method=self.method, max_iter=int(self.max_iter),
+                          atol=float(self.atol), rtol=float(self.rtol),
+                          thr=int(self.thr))
 
 
 @dataclass

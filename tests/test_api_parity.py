@@ -1,0 +1,328 @@
+"""Golden parity suite: legacy ``solve(x, y, method=..., **kw)`` call
+patterns vs the spec/prepare handle API, plus the PR-4 satellite fixes
+(bakf registration, multi-output ``fit_linear_probe``, the ``normal``
+ridge spec field) and serve-engine end-to-end parity with the core API.
+
+The contract: every legacy pattern and its ``prepare(x, spec).solve(y)``
+equivalent agree to <= 1e-6, and both agree with the raw underlying kernels
+(``solvebak``/``solvebakp`` called directly — the pre-refactor ground
+truth) to the same tolerance.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import make_system
+from repro.core import (SolverSpec, fit_linear_probe, prepare, solve,
+                        solvebak, solvebakp, solver_method)
+
+TOL = dict(rtol=1e-6, atol=1e-6)
+
+# One spec per method, exercising that method's own knobs.
+SPECS = {
+    "bak": SolverSpec(method="bak", max_iter=60, rtol=1e-12),
+    "bakp": SolverSpec(method="bakp", max_iter=60, rtol=1e-12, thr=8),
+    "bakp_gram": SolverSpec(method="bakp_gram", max_iter=60, rtol=1e-12,
+                            thr=8),
+    "bakf": SolverSpec(method="bakf", max_iter=40, thr=8),
+    "lstsq": SolverSpec(method="lstsq"),
+    "normal": SolverSpec(method="normal"),
+}
+
+
+def _legacy_kwargs(spec: SolverSpec) -> dict:
+    return dict(method=spec.method, max_iter=spec.max_iter, atol=spec.atol,
+                rtol=spec.rtol, thr=spec.thr)
+
+
+class TestGoldenParity:
+    """legacy solve(**kw) == prepare(x, spec).solve(y), all methods."""
+
+    @pytest.mark.parametrize("method", sorted(SPECS))
+    def test_single_rhs(self, rng, method):
+        x, y, _ = make_system(rng, 300, 24)
+        spec = SPECS[method]
+        legacy = solve(jnp.array(x), jnp.array(y), **_legacy_kwargs(spec))
+        handle = prepare(x, spec).solve(y)
+        np.testing.assert_allclose(np.array(legacy.coef),
+                                   np.array(handle.coef), **TOL)
+        np.testing.assert_allclose(np.array(legacy.residual),
+                                   np.array(handle.residual), **TOL)
+        assert int(legacy.n_sweeps) == int(handle.n_sweeps)
+        assert bool(legacy.converged) == bool(handle.converged)
+
+    @pytest.mark.parametrize(
+        "method", sorted(m for m in SPECS if solver_method(m).multi_rhs))
+    def test_multi_rhs(self, rng, method):
+        x, _, _ = make_system(rng, 300, 24)
+        a_true = rng.normal(size=(24, 5)).astype(np.float32)
+        ys = x @ a_true
+        spec = SPECS[method]
+        legacy = solve(jnp.array(x), jnp.array(ys), **_legacy_kwargs(spec))
+        handle = prepare(x, spec).solve(ys)
+        assert legacy.coef.shape == handle.coef.shape == (24, 5)
+        np.testing.assert_allclose(np.array(legacy.coef),
+                                   np.array(handle.coef), **TOL)
+
+    @pytest.mark.parametrize(
+        "method", sorted(m for m in SPECS if solver_method(m).iterative))
+    def test_warm_start(self, rng, method):
+        x, y, a_true = make_system(rng, 300, 24)
+        a0 = (a_true + 0.1 * rng.normal(size=24).astype(np.float32))
+        spec = SPECS[method]
+        legacy = solve(jnp.array(x), jnp.array(y), a0=jnp.array(a0),
+                       **_legacy_kwargs(spec))
+        handle = prepare(x, spec).solve(y, a0=a0)
+        np.testing.assert_allclose(np.array(legacy.coef),
+                                   np.array(handle.coef), **TOL)
+        assert int(legacy.n_sweeps) == int(handle.n_sweeps)
+
+    def test_matches_raw_kernels(self, rng):
+        """Both API layers agree with the raw pre-refactor kernels."""
+        x, y, _ = make_system(rng, 300, 24)
+        raw = solvebak(jnp.array(x), jnp.array(y), max_iter=60, rtol=1e-12)
+        via_api = solve(jnp.array(x), jnp.array(y), method="bak",
+                        max_iter=60, rtol=1e-12)
+        np.testing.assert_allclose(np.array(raw.coef), np.array(via_api.coef),
+                                   **TOL)
+        rawp = solvebakp(jnp.array(x), jnp.array(y), thr=8, max_iter=60,
+                         rtol=1e-12, mode="gram")
+        via_apip = solve(jnp.array(x), jnp.array(y), method="bakp_gram",
+                         thr=8, max_iter=60, rtol=1e-12)
+        np.testing.assert_allclose(np.array(rawp.coef),
+                                   np.array(via_apip.coef), **TOL)
+
+    def test_tenant_rhs_count_change_falls_back_cold(self, rng):
+        """Regression: a tenant's stored (vars, k) multi-RHS coefficients
+        must not crash (or mis-shape) their next solve with a different
+        RHS count — incompatible warm state means a cold start."""
+        x, y, _ = make_system(rng, 200, 16)
+        handle = prepare(x, SPECS["bakp_gram"])
+        ys = x @ rng.normal(size=(16, 4)).astype(np.float32)
+        handle.solve(ys, tenant_id="t1")          # stores (16, 4)
+        single = handle.solve(y, tenant_id="t1")  # cold fallback, no crash
+        cold = handle.solve(y)
+        np.testing.assert_array_equal(np.array(single.coef),
+                                      np.array(cold.coef))
+        # Same-k re-solve accepts the stored (16, 4) warm state and lands
+        # on the same fixed point (sweep counts at the accuracy floor are
+        # jittery, so parity of the solution is the stable assertion).
+        warm = handle.solve(ys, tenant_id="t1")
+        np.testing.assert_allclose(np.array(warm.coef),
+                                   np.array(handle.solve(ys).coef),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_direct_methods_skip_column_norms(self, rng):
+        """Regression: prepare() must not pay the O(obs·vars) column-norm
+        pass for methods that never read it."""
+        x, y, _ = make_system(rng, 200, 16)
+        handle = prepare(x, SPECS["lstsq"])
+        handle.solve(y)
+        assert handle._cn is None
+        _ = handle.cn                      # iterative path materialises it
+        assert handle._cn is not None
+
+    def test_bak_random_order_errors_in_vmap_batch(self, rng):
+        """Regression: order="random" (no key in serving) must error in a
+        vmap batch exactly like it does solo — never silently solve with
+        cyclic order."""
+        from repro.serve import SolveRequest, SolverServeEngine
+
+        spec = SolverSpec(method="bak", max_iter=20, order="random")
+        reqs = []
+        for i in range(2):  # distinct designs, same bucket -> vmap path
+            x = rng.normal(size=(100, 8)).astype(np.float32)
+            reqs.append(SolveRequest(x=x, y=x[:, 0], spec=spec,
+                                     design_key=f"rd-{i}"))
+        out = SolverServeEngine().serve(reqs)
+        assert all(not r.ok for r in out)
+        assert all("PRNG key" in r.error for r in out)
+
+    def test_prepared_reuse_is_stable(self, rng):
+        """Repeated solves off one handle return identical results (cached
+        cn/chol state must not drift)."""
+        x, y, _ = make_system(rng, 200, 16)
+        handle = prepare(x, SPECS["bakp_gram"])
+        r1 = handle.solve(y)
+        r2 = handle.solve(y)
+        np.testing.assert_array_equal(np.array(r1.coef), np.array(r2.coef))
+
+
+class TestBakfMethod:
+    """Satellite: solvebakf registered as method "bakf"."""
+
+    def test_parity_vs_solvebak(self, rng):
+        x, y, a_true = make_system(rng, 400, 16)
+        bakf = solve(jnp.array(x), jnp.array(y), method="bakf", max_iter=40,
+                     thr=8)
+        bak = solvebak(jnp.array(x), jnp.array(y), max_iter=200, rtol=1e-14)
+        # Both converge to the least-squares solution of a consistent
+        # system; greedy selection order must not change the fixed point.
+        np.testing.assert_allclose(np.array(bakf.coef), np.array(bak.coef),
+                                   rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(np.array(bakf.coef), a_true, rtol=1e-3,
+                                   atol=1e-3)
+        assert float(bakf.sse) <= 1e-4
+
+    def test_rejects_multi_rhs(self, rng):
+        x, _, _ = make_system(rng, 100, 8)
+        ys = rng.normal(size=(100, 3)).astype(np.float32)
+        with pytest.raises(ValueError, match="multi-RHS"):
+            solve(jnp.array(x), jnp.array(ys), method="bakf")
+
+    def test_registry_flags(self):
+        entry = solver_method("bakf")
+        assert not entry.multi_rhs
+        assert not entry.batchable
+        assert not entry.shardable
+
+
+class TestFitLinearProbe:
+    """Satellite: (tokens, k) targets ride the multi-RHS path."""
+
+    def test_multi_output_targets(self, rng):
+        feats = rng.normal(size=(300, 16)).astype(np.float32)
+        a_true = rng.normal(size=(16, 4)).astype(np.float32)
+        targets = feats @ a_true
+        res = fit_linear_probe(jnp.array(feats), jnp.array(targets),
+                               max_iter=100, rtol=1e-10, thr=8)
+        assert res.coef.shape == (16, 4)
+        np.testing.assert_allclose(np.array(res.coef), a_true, rtol=1e-3,
+                                   atol=1e-3)
+        # Column-by-column parity with single-output fits: the multi-output
+        # fit is the k single fits run side by side.
+        for j in range(4):
+            single = fit_linear_probe(jnp.array(feats),
+                                      jnp.array(targets[:, j]),
+                                      max_iter=100, rtol=1e-10, thr=8)
+            np.testing.assert_allclose(np.array(res.coef[:, j]),
+                                       np.array(single.coef), rtol=1e-5,
+                                       atol=1e-5)
+
+    def test_leading_axes_flattened(self, rng):
+        feats = rng.normal(size=(4, 50, 8)).astype(np.float32)
+        a_true = rng.normal(size=(8, 3)).astype(np.float32)
+        targets = feats @ a_true                      # (4, 50, 3)
+        res = fit_linear_probe(jnp.array(feats), jnp.array(targets),
+                               max_iter=100, rtol=1e-10, thr=8)
+        assert res.coef.shape == (8, 3)
+        np.testing.assert_allclose(np.array(res.coef), a_true, rtol=1e-3,
+                                   atol=1e-3)
+
+    def test_scalar_targets_unchanged(self, rng):
+        feats = rng.normal(size=(4, 50, 8)).astype(np.float32)
+        a_true = rng.normal(size=(8,)).astype(np.float32)
+        res = fit_linear_probe(jnp.array(feats), jnp.array(feats @ a_true),
+                               max_iter=100, rtol=1e-10, thr=8)
+        assert res.coef.shape == (8,)
+        np.testing.assert_allclose(np.array(res.coef), a_true, rtol=1e-3,
+                                   atol=1e-3)
+
+    def test_shape_mismatch_raises(self, rng):
+        feats = rng.normal(size=(50, 8)).astype(np.float32)
+        with pytest.raises(ValueError, match="do not match"):
+            fit_linear_probe(jnp.array(feats),
+                             jnp.array(np.zeros((49,), np.float32)))
+
+
+class TestNormalRidge:
+    """Satellite: the "normal" baseline's ridge is a SolverSpec field."""
+
+    def test_default_matches_legacy_hardcode(self, rng):
+        x, y, _ = make_system(rng, 200, 16)
+        res = solve(jnp.array(x), jnp.array(y), method="normal")
+        spec_res = solve(jnp.array(x), jnp.array(y),
+                         spec=SolverSpec(method="normal", ridge=1e-6))
+        np.testing.assert_allclose(np.array(res.coef),
+                                   np.array(spec_res.coef), **TOL)
+
+    def test_ridge_changes_solution(self, rng):
+        x, y, _ = make_system(rng, 200, 16)
+        # Gram diagonal is ~obs here, so the ridge must dwarf it to bite.
+        soft = solve(jnp.array(x), jnp.array(y), method="normal", ridge=1e4)
+        hard = solve(jnp.array(x), jnp.array(y), method="normal", ridge=1e-6)
+        # A strong ridge shrinks the coefficients toward zero.
+        assert (float(jnp.sum(soft.coef ** 2))
+                < 0.9 * float(jnp.sum(hard.coef ** 2)))
+
+    def test_direct_methods_ignore_a0(self, rng):
+        """The SolverSpec contract: a0 is ignored by direct methods —
+        passing garbage must not change the answer."""
+        x, y, _ = make_system(rng, 200, 16)
+        for method in ("lstsq", "normal"):
+            cold = solve(jnp.array(x), jnp.array(y), method=method)
+            warm = prepare(x, SolverSpec(method=method)).solve(
+                y, a0=np.full((16,), 1e6, np.float32))
+            np.testing.assert_array_equal(np.array(cold.coef),
+                                          np.array(warm.coef))
+
+
+class TestServeEngineParity:
+    """Serve engine end-to-end results match direct handle solves, for both
+    legacy-kwargs and spec-carrying requests (the PR-3 behaviour contract:
+    the engine is now a consumer of the same public API)."""
+
+    def test_engine_matches_handle(self, rng):
+        from repro.serve import SolveRequest, SolverServeEngine
+
+        eng = SolverServeEngine()
+        x = rng.normal(size=(300, 24)).astype(np.float32)
+        spec = SolverSpec(method="bakp_gram", thr=16, max_iter=60,
+                          rtol=1e-12)
+        ys = [x @ rng.normal(size=(24,)).astype(np.float32)
+              for _ in range(3)]
+        legacy_reqs = [SolveRequest(x=x, y=y, method="bakp_gram", thr=16,
+                                    max_iter=60, rtol=1e-12) for y in ys]
+        spec_reqs = [SolveRequest(x=x, y=y, spec=spec) for y in ys]
+        served_legacy = eng.serve(legacy_reqs)
+        served_spec = eng.serve(spec_reqs)
+
+        # The equivalent direct core-API call: one prepared design, one
+        # coalesced multi-RHS solve on the bucket-padded system.
+        from repro.serve import pad_x, pad_y
+        bucket = (512, 32)
+        handle = prepare(pad_x(x, bucket), spec)
+        ys_pad = pad_y(np.stack(ys, axis=1), bucket[0])
+        ys_pad = np.concatenate(
+            [ys_pad, np.zeros((bucket[0], 1), np.float32)], axis=1)  # k_pad=4
+        direct = handle.solve(ys_pad)
+        for c, (sl, ss) in enumerate(zip(served_legacy, served_spec)):
+            assert sl.batch_kind == ss.batch_kind == "multi_rhs"
+            np.testing.assert_allclose(sl.coef, ss.coef, **TOL)
+            np.testing.assert_allclose(
+                sl.coef, np.array(direct.coef)[:24, c], **TOL)
+
+    def test_spec_and_legacy_requests_group_together(self, rng):
+        """A spec-carrying request and an equivalent legacy one coalesce
+        into the same multi-RHS group."""
+        from repro.serve import SolveRequest, SolverServeEngine
+
+        eng = SolverServeEngine()
+        x = rng.normal(size=(100, 8)).astype(np.float32)
+        spec = SolverSpec(method="bakp_gram", thr=8, max_iter=40,
+                          rtol=1e-12)
+        out = eng.serve([
+            SolveRequest(x=x, y=x[:, 0], spec=spec, design_key="d"),
+            SolveRequest(x=x, y=x[:, 1], method="bakp_gram", thr=8,
+                         max_iter=40, rtol=1e-12, design_key="d"),
+        ])
+        assert [r.batch_kind for r in out] == ["multi_rhs", "multi_rhs"]
+        assert eng.stats.multi_rhs_groups == 1
+
+    def test_bakf_served_singly(self, rng):
+        """A non-multi-RHS method is servable: same-design requests fall
+        back to per-request solves instead of coalescing."""
+        from repro.serve import SolveRequest, SolverServeEngine
+
+        eng = SolverServeEngine()
+        x = rng.normal(size=(100, 8)).astype(np.float32)
+        a = rng.normal(size=(8,)).astype(np.float32)
+        out = eng.serve([
+            SolveRequest(x=x, y=x @ a, spec=SolverSpec(method="bakf", thr=8),
+                         design_key="d")
+            for _ in range(2)
+        ])
+        assert [r.batch_kind for r in out] == ["single", "single"]
+        for r in out:
+            assert r.ok
+            np.testing.assert_allclose(r.coef, a, rtol=1e-3, atol=1e-3)

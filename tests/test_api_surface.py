@@ -1,0 +1,146 @@
+"""Public-API snapshot: guards accidental surface breakage.
+
+These are exact-equality assertions on the exported names, the
+``SolverSpec`` field set (name, order-independent) and the method
+registry's capability flags.  Changing the public API is fine — but it must
+be a *decision*: update the snapshot here together with the README
+migration table, never as a side effect of a refactor.
+"""
+import dataclasses
+
+import repro.core as core
+import repro.serve as serve
+from repro.core import SolverSpec, method_names, solver_method
+
+CORE_EXPORTS = {
+    "MethodEntry",
+    "PreparedDesign",
+    "SelectResult",
+    "SolveResult",
+    "SolverSpec",
+    "block_gram_cholesky",
+    "design_fingerprint",
+    "fit_linear_probe",
+    "method_names",
+    "normalize_columns",
+    "prepare",
+    "register_method",
+    "solve",
+    "solvebak",
+    "solvebak_onesweep",
+    "solvebakf",
+    "solvebakp",
+    "solvebakp_2d",
+    "solvebakp_obs_sharded",
+    "solvebakp_rhs_sharded",
+    "solvebakp_vars_sharded",
+    "solver_method",
+    "stepwise_regression_baseline",
+    "unscale_coef",
+}
+
+SERVE_EXPORTS = {
+    "AsyncDispatcher",
+    "CacheStats",
+    "DesignCache",
+    "DesignEntry",
+    "DispatchConfig",
+    "DispatchStats",
+    "DispatcherStopped",
+    "Placement",
+    "PlacementPolicy",
+    "PreparedDesign",
+    "QueueFullError",
+    "ServeConfig",
+    "ServeMesh",
+    "ServeStats",
+    "ServedSolve",
+    "SolveRequest",
+    "SolveTicket",
+    "SolverServeEngine",
+    "SolverSpec",
+    "build_serve_mesh",
+    "mesh_device_count",
+    "placement_for_bucket",
+    "placement_for_group",
+    "bucket_shape",
+    "design_fingerprint",
+    "group_requests",
+    "next_pow2",
+    "pad_x",
+    "pad_y",
+    "prepare_request",
+}
+
+SOLVER_SPEC_FIELDS = {
+    "method": "bakp_gram",
+    "max_iter": 50,
+    "atol": 0.0,
+    "rtol": 0.0,
+    "thr": 128,
+    "omega": 1.0,
+    "order": "cyclic",
+    "ridge": 1e-6,
+}
+
+# method -> (iterative, multi_rhs, batchable, shardable)
+METHOD_CAPABILITIES = {
+    "bak": (True, True, True, False),
+    "bakp": (True, True, True, True),
+    "bakp_gram": (True, True, True, True),
+    "lstsq": (False, True, False, False),
+    "normal": (False, True, False, False),
+    "bakf": (False, False, False, False),
+}
+
+
+def test_core_exports():
+    assert set(core.__all__) == CORE_EXPORTS
+    for name in CORE_EXPORTS:
+        assert hasattr(core, name), f"repro.core.{name} missing"
+
+
+def test_serve_exports():
+    assert set(serve.__all__) == SERVE_EXPORTS
+    for name in SERVE_EXPORTS:
+        assert hasattr(serve, name), f"repro.serve.{name} missing"
+
+
+def test_solver_spec_fields():
+    fields = {f.name: f.default for f in dataclasses.fields(SolverSpec)}
+    assert fields == SOLVER_SPEC_FIELDS
+    # Frozen + hashable: specs key program caches and serving groups.
+    spec = SolverSpec()
+    assert hash(spec) == hash(SolverSpec())
+    try:
+        spec.method = "bak"
+        raise AssertionError("SolverSpec must be frozen")
+    except dataclasses.FrozenInstanceError:
+        pass
+
+
+def test_method_registry_snapshot():
+    assert set(method_names()) == set(METHOD_CAPABILITIES)
+    for name, (it, mrhs, batch, shard) in METHOD_CAPABILITIES.items():
+        e = solver_method(name)
+        assert (e.iterative, e.multi_rhs, e.batchable, e.shardable) == \
+            (it, mrhs, batch, shard), name
+        # Every method consumes a subset of real SolverSpec fields.
+        field_names = {f.name for f in dataclasses.fields(SolverSpec)}
+        assert set(e.consumes) <= field_names, name
+
+
+def test_design_entry_is_prepared_design():
+    """The serving cache's per-design state IS the public handle."""
+    assert serve.DesignEntry is core.PreparedDesign
+
+
+def test_solve_request_spec_roundtrip():
+    """Legacy-kwargs requests and spec requests express the same config."""
+    req = serve.SolveRequest(x=None, y=None, method="bakp", max_iter=7,
+                             atol=0.5, rtol=1e-3, thr=4)
+    spec = req.solver_spec()
+    assert spec == SolverSpec(method="bakp", max_iter=7, atol=0.5,
+                              rtol=1e-3, thr=4)
+    explicit = serve.SolveRequest(x=None, y=None, spec=spec)
+    assert explicit.solver_spec() is spec
