@@ -1,4 +1,5 @@
-"""Roofline accounting for the solver kernels (the paper's workload itself).
+"""Roofline accounting + kernel-path benchmark for the solver (the paper's
+workload itself).
 
 One BAK/BAKP sweep over an (obs × vars) system:
   flops       ≈ 4·obs·vars      (dot + axpy per column/block)
@@ -6,22 +7,37 @@ One BAK/BAKP sweep over an (obs × vars) system:
   ⇒ arithmetic intensity = 4/dtype_bytes flops/byte (2.0 for bf16) —
     firmly MEMORY-BOUND on v5e (ridge at 197e12/819e9 ≈ 240 flops/byte).
 
-Per-device roofline time for one sweep and the achievable effective
-flops/s are derived analytically; the distributed solvers add one (thr,)
-psum per block step (obs-sharded) — collective bytes = vars·4 per sweep,
-negligible vs the x stream.  Measured CPU wall times are printed for
-context only (this container is not the target hardware).
+The fused megakernel (``repro.kernels.fused_solve``) changes the *solve*
+traffic: x crosses HBM once per solve instead of once per sweep, so its
+roofline bound is ``obs·vars·dtype / HBM_BW`` per solve, not per sweep.
+
+``bench_kernel_paths`` measures the three execution models against each
+other on tall / wide / square systems, cold-start vs early-converging:
+
+  fused     — one pallas_call for the whole solve (new hot path),
+  persweep  — one pallas_call per sweep from a host while_loop (the
+              pre-fusion model, ``solvebakp_persweep_kernel``),
+  xla       — plain-XLA ``solvebakp`` (mode="jacobi").
+
+Measured CPU wall times run the kernels in interpret mode — the relative
+ordering (fused ≥ persweep on early-converging solves: no post-convergence
+sweeps, no per-sweep residual round-trip) holds there too and is what the
+``--smoke`` gate asserts, together with fused-vs-persweep parity.  Absolute
+GB/s numbers on CPU are context only (this container is not the target
+hardware); the analytic per-device roofline rows are the TPU reference.
+
+    PYTHONPATH=src python -m benchmarks.solver_roofline --smoke \
+        --json BENCH_core.json
 """
 from __future__ import annotations
 
+import argparse
+import functools
+import sys
 import time
 from typing import Dict, List
 
-import jax
-import jax.numpy as jnp
 import numpy as np
-
-from repro.kernels import solvebakp_kernel
 
 PEAK_FLOPS = 197e12
 HBM_BW = 819e9
@@ -50,13 +66,21 @@ def solver_roofline_rows(cases=((1 << 14, 1024, 2), (1 << 16, 4096, 2),
 
 def measured_sweep_throughput() -> Dict:
     """CPU-measured kernel sweep throughput (context only)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels import solvebakp_kernel
+
     rng = np.random.default_rng(0)
     obs, nvars = 8192, 512
     x_t = jnp.array(rng.normal(size=(nvars, obs)).astype(np.float32))
     y = jnp.array(rng.normal(size=(obs,)).astype(np.float32))
 
     def run():
-        return solvebakp_kernel(x_t, y, block=128, max_iter=4)
+        # donate=False: the same y is passed on every repeat — donation
+        # would invalidate it after the first call on accelerator backends.
+        return solvebakp_kernel(x_t, y, block=128, max_iter=4,
+                                donate=False)
 
     r = run()
     jax.block_until_ready(r.coef)
@@ -68,3 +92,160 @@ def measured_sweep_throughput() -> Dict:
     return {"obs": obs, "vars": nvars, "sweeps": sweeps,
             "cpu_s_per_sweep": dt / sweeps,
             "cpu_gbytes_per_s": obs * nvars * 4 * sweeps / dt / 1e9}
+
+
+def _time(fn, repeats: int) -> float:
+    import jax
+
+    jax.block_until_ready(fn().coef)       # warm the compile cache
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        jax.block_until_ready(fn().coef)
+    return (time.perf_counter() - t0) / repeats
+
+
+def _make_design(rng, obs: int, nvars: int) -> np.ndarray:
+    """Well-conditioned design (singular values in [1, 2]) — the paper's
+    consistent-system setting, where SolveBakP converges to the f32 floor
+    well inside any reasonable sweep budget for every aspect ratio."""
+    m = min(obs, nvars)
+    u, _ = np.linalg.qr(rng.normal(size=(obs, m)))
+    v, _ = np.linalg.qr(rng.normal(size=(nvars, m)))
+    s = rng.uniform(1.0, 2.0, size=m)
+    return ((u * s) @ v.T).astype(np.float32)
+
+
+def bench_kernel_paths(shapes=None, *, max_iter=100, full_iter=30,
+                       rtol=1e-6, repeats=3, seed=0) -> List[Dict]:
+    """fused vs per-sweep-launch vs XLA solvebakp, per shape.
+
+    Each shape runs two regimes:
+      * early  — consistent system + ``rtol`` stopping under a generous
+        ``max_iter`` budget, so the solve converges in ``n_sweeps ≪
+        max_iter`` (the serving steady state);
+      * full   — no tolerances, all ``full_iter`` sweeps run (worst case).
+
+    ``achieved_gbps`` charges each path the x bytes it actually reads:
+    n_sweeps·obs·vars·4 for the streaming paths, obs·vars·4 once for fused.
+    """
+    import jax.numpy as jnp
+
+    from repro.core import solvebakp
+    from repro.kernels import fused_solve, solvebakp_persweep_kernel
+
+    if shapes is None:
+        shapes = [("tall", 4096, 256, 64), ("wide", 512, 1024, 64),
+                  ("square", 1024, 1024, 128)]
+    rng = np.random.default_rng(seed)
+    rows = []
+    for name, obs, nvars, block in shapes:
+        x = _make_design(rng, obs, nvars)
+        a = rng.normal(size=(nvars,)).astype(np.float32)
+        y = (x @ a).astype(np.float32)
+        xd, x_t, yd = jnp.asarray(x), jnp.asarray(x.T), jnp.asarray(y)
+        for regime, common in (
+                ("early", dict(max_iter=max_iter, rtol=rtol)),
+                ("full", dict(max_iter=full_iter))):
+            # donate=False everywhere: each path re-solves the SAME yd
+            # device array `repeats` times — default-on accelerator
+            # donation would delete it after the first call.
+            runs = {
+                "fused": functools.partial(
+                    fused_solve, x_t, yd, block=block, donate=False,
+                    **common),
+                "persweep": functools.partial(
+                    solvebakp_persweep_kernel, x_t, yd, block=block,
+                    donate=False, **common),
+                "xla": functools.partial(
+                    solvebakp, xd, yd, thr=block, mode="jacobi",
+                    donate=False, **common),
+            }
+            res = {k: f() for k, f in runs.items()}
+            times = {k: _time(f, repeats) for k, f in runs.items()}
+            n = {k: int(r.n_sweeps) for k, r in res.items()}
+            parity = float(np.max(np.abs(
+                np.asarray(res["fused"].coef)
+                - np.asarray(res["persweep"].coef))))
+            x_bytes = obs * nvars * 4
+            rows.append({
+                "shape": name, "obs": obs, "vars": nvars, "block": block,
+                "regime": regime, "max_iter": common["max_iter"],
+                "n_sweeps": n["fused"],
+                "n_sweeps_persweep": n["persweep"],
+                "fused_s": times["fused"],
+                "persweep_s": times["persweep"],
+                "xla_s": times["xla"],
+                "fused_speedup_vs_persweep":
+                    times["persweep"] / times["fused"],
+                "fused_speedup_vs_xla": times["xla"] / times["fused"],
+                # x-bytes each path actually reads / wall time
+                "fused_gbps": x_bytes / times["fused"] / 1e9,
+                "persweep_gbps":
+                    n["persweep"] * x_bytes / times["persweep"] / 1e9,
+                "roofline_sweep_s": x_bytes / HBM_BW,
+                "parity_fused_vs_persweep": parity,
+            })
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small shapes + CI gate: fused beats the per-sweep "
+                         "launch loop on the early-converging solves and "
+                         "matches it numerically (<= 1e-5)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="merge metrics into a JSON report (BENCH_core.json)")
+    ap.add_argument("--repeats", type=int, default=None)
+    args = ap.parse_args()
+
+    if args.smoke:
+        shapes = [("tall", 2048, 128, 32), ("wide", 256, 512, 64),
+                  ("square", 512, 512, 64)]
+        repeats = args.repeats or 3
+    else:
+        shapes = None
+        repeats = args.repeats or 5
+    rows = bench_kernel_paths(shapes, repeats=repeats)
+    roofline = solver_roofline_rows()
+
+    if args.json:
+        try:
+            from benchmarks.serve_async import write_json
+        except ImportError:  # run as a bare script instead of -m
+            from serve_async import write_json
+        write_json(args.json, {"core_kernel_paths": rows,
+                               "core_roofline_analytic": roofline})
+
+    print("name,us_per_call,derived")
+    for r in rows:
+        tag = (f"solver[{r['shape']}:o{r['obs']}xv{r['vars']}"
+               f"b{r['block']}/{r['regime']}]")
+        print(f"{tag}/fused,{r['fused_s']*1e6:.0f},"
+              f"n_sweeps={r['n_sweeps']};gbps={r['fused_gbps']:.2f};"
+              f"speedup_vs_persweep={r['fused_speedup_vs_persweep']:.2f};"
+              f"speedup_vs_xla={r['fused_speedup_vs_xla']:.2f}")
+        print(f"{tag}/persweep,{r['persweep_s']*1e6:.0f},"
+              f"n_sweeps={r['n_sweeps_persweep']};"
+              f"gbps={r['persweep_gbps']:.2f}")
+        print(f"{tag}/xla,{r['xla_s']*1e6:.0f},")
+
+    early = [r for r in rows if r["regime"] == "early"]
+    worst_parity = max(r["parity_fused_vs_persweep"] for r in rows)
+    assert all(r["n_sweeps"] < r["max_iter"] for r in early), \
+        "early-converging cases must stop before max_iter"
+    fused_wins = all(r["fused_speedup_vs_persweep"] > 1.0 for r in early)
+    ok = fused_wins and worst_parity <= 1e-5
+    mean_speedup = float(np.mean(
+        [r["fused_speedup_vs_persweep"] for r in early]))
+    print(f"acceptance: fused beats per-sweep launch on all "
+          f"{len(early)} early-converging solves "
+          f"(mean speedup {mean_speedup:.2f}x) -> "
+          f"{'PASS' if fused_wins else 'FAIL'}; "
+          f"parity fused-vs-persweep {worst_parity:.2e} (<=1e-5) -> "
+          f"{'PASS' if worst_parity <= 1e-5 else 'FAIL'}")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

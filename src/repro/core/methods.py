@@ -6,6 +6,14 @@ Every method the public API dispatches on is declared here as a
   * "bak"        — Algorithm 1, serial cyclic CD (paper-faithful baseline).
   * "bakp"       — Algorithm 2, block-Jacobi CD (paper-faithful parallel).
   * "bakp_gram"  — beyond-paper exact block CD (DESIGN.md §3).
+  * "bakp_fused" — Algorithm 2 on the fused whole-solve Pallas megakernel
+                   (``repro.kernels.fused_solve``): one kernel launch runs
+                   every sweep with x/residual/coefficients VMEM-resident
+                   and convergence decided on-chip.  Selected for
+                   VMEM-fitting designs; larger ones fall back to the XLA
+                   "bakp" path automatically (same algorithm, same result).
+  * "bak_fused"  — the megakernel's ``variant="bak"`` body (Algorithm 1
+                   sequential order); falls back to "bak" when too large.
   * "bakf"       — Algorithm 3 run to full selection: greedy forward CD over
                    every column with per-step refit.  Single-RHS, ignores
                    warm starts (selection always restarts).
@@ -30,6 +38,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.distributed import (solvebakp_2d, solvebakp_obs_sharded,
                                     solvebakp_rhs_sharded)
@@ -131,6 +140,68 @@ def _prep_bakp_gram(p, spec: SolverSpec):
     p.chol_for(spec.thr, spec.ridge)
 
 
+# ------------------------------------------------- fused megakernel methods
+def _fused_method(variant: str):
+    """Whole-solve Pallas megakernel entry (repro.kernels.fused_solve).
+
+    Consumes the handle's cached transposed padded design (``x_t_for``) and
+    inverse column norms (``inv_cn_for``) — no per-solve norms pass, no
+    ``x_t.T`` materialisation.  Designs whose whole-solve working set
+    exceeds ``repro.kernels.cd_sweep.VMEM_BUDGET_BYTES`` (checked via
+    ``fused_fits``) fall back to the XLA path of the same algorithm, so
+    every dispatch route (``solve()``, ``PreparedDesign.solve``, the
+    serving engine) serves any size without raising.
+    """
+    def kernel(p, y, spec: SolverSpec, *, a0=None, key=None, placement=None,
+               mesh=None):
+        # Imported at call time: repro.kernels itself imports repro.core
+        # (types), so a module-level import here would make the package
+        # import order matter (kernels-first would hit a half-initialised
+        # fused_solve through this registration module).
+        from repro.kernels.fused_solve import fused_fits, fused_solve
+
+        block = spec.thr
+        obs_p, vars_p = p.x_pad.shape
+        if not hasattr(y, "ndim"):  # host buffers stay host (donation)
+            y = jnp.asarray(y)
+        nrhs = y.shape[1] if y.ndim == 2 else 1
+        vars_pb = -(-vars_p // block) * block
+        if (spec.max_iter < 1
+                or not fused_fits(vars_pb, obs_p, nrhs,
+                                  p.x_pad.dtype.itemsize,
+                                  max_iter=spec.max_iter)):
+            if variant == "bak":
+                return solvebak(p.x_pad, y, max_iter=spec.max_iter,
+                                atol=spec.atol, rtol=spec.rtol, a0=a0,
+                                cn=p.cn)
+            return solvebakp(p.x_pad, y, thr=block, max_iter=spec.max_iter,
+                             atol=spec.atol, rtol=spec.rtol,
+                             omega=spec.omega, mode="jacobi",
+                             cn=p.cn_for_thr(block), a0=a0)
+        if a0 is not None and vars_pb != vars_p:
+            # Pad with the operand's own library: a host a0 must STAY host
+            # (numpy) or the solver entry's auto-donation — the flush
+            # path's HBM saving — silently turns off (types.donate_default
+            # never donates jax.Array operands).
+            xp = jnp if isinstance(a0, jax.Array) else np
+            a0 = xp.pad(xp.asarray(a0, jnp.float32),
+                        ((0, vars_pb - vars_p),) + ((0, 0),) * (a0.ndim - 1))
+        res = fused_solve(
+            p.x_t_for(block), y, inv_cn=p.inv_cn_for(block), a0=a0,
+            block=block, max_iter=spec.max_iter, atol=spec.atol,
+            rtol=spec.rtol, omega=spec.omega if variant == "bakp" else 1.0,
+            variant=variant)
+        if vars_pb != vars_p:
+            res = res._replace(coef=res.coef[:vars_p])
+        return res
+    return kernel
+
+
+def _prep_fused(p, spec: SolverSpec):
+    p.x_t_for(spec.thr)
+    p.inv_cn_for(spec.thr)
+
+
 # ---------------------------------------------------- greedy selection (A3)
 def _bakf_solve(p, y, spec: SolverSpec, *, a0=None, key=None, placement=None,
                 mesh=None):
@@ -203,6 +274,21 @@ register_method(MethodEntry(
     blocked=True, needs_chol=True, prepare=_prep_bakp_gram,
     vmap_one=_bakp_vmap_one("gram"),
     summary="exact block CD via cached block-Gram Cholesky (beyond-paper)"))
+register_method(MethodEntry(
+    name="bakp_fused", solve=_fused_method("bakp"),
+    consumes=_ITER_FIELDS + ("thr", "omega"),
+    iterative=True, multi_rhs=True, batchable=False, shardable=False,
+    blocked=True, prepare=_prep_fused,
+    summary="Algorithm 2 on the fused whole-solve Pallas megakernel "
+            "(VMEM-resident sweeps, on-chip convergence; XLA fallback "
+            "when the design exceeds the VMEM budget)"))
+register_method(MethodEntry(
+    name="bak_fused", solve=_fused_method("bak"),
+    consumes=_ITER_FIELDS + ("thr",),
+    iterative=True, multi_rhs=True, batchable=False, shardable=False,
+    blocked=True, prepare=_prep_fused,
+    summary="Algorithm 1 on the fused megakernel (sequential column "
+            "order; XLA fallback when over the VMEM budget)"))
 register_method(MethodEntry(
     name="lstsq", solve=_lstsq_solve, consumes=(),
     iterative=False, multi_rhs=True,

@@ -18,7 +18,11 @@ here it is first-class:
   * the device-resident fp32 copy of ``x`` (``x_pad`` — callers may hand in
     an already shape-padded matrix, as the serving engine does);
   * its content ``fingerprint`` (identity for caches and request coalescing);
-  * the squared column norms, plus thr-padded layouts per block width;
+  * the squared column norms, plus thr-padded layouts per block width and
+    their inverses (``inv_cn_for`` — consumed directly by the fused
+    megakernel);
+  * the transposed padded device copy per block width (``x_t_for`` — the
+    Pallas kernels' (vars, obs) layout, relayouted once and kept resident);
   * block Gram Cholesky factors per ``(thr, ridge)``;
   * per-placement sharded device copies (a mesh backend needs ``x`` laid out
     for its in_specs; the ``device_put`` happens once per placement);
@@ -49,7 +53,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.spec import SolverSpec, solver_method
-from repro.core.types import SolveResult, column_norms_sq
+from repro.core.types import SolveResult, column_norms_sq, safe_inv
 
 
 def design_fingerprint(x, *, _prefix: str = "d") -> str:
@@ -92,6 +96,8 @@ class PreparedDesign:
     max_tenants: int = 64
     _cn: Optional[jax.Array] = field(default=None, repr=False)
     _cn_thr: Dict[int, jax.Array] = field(default_factory=dict)
+    _inv_cn: Dict[int, jax.Array] = field(default_factory=dict)
+    _x_t: Dict[int, jax.Array] = field(default_factory=dict)
     _warm: "OrderedDict[str, np.ndarray]" = field(default_factory=OrderedDict)
     _sharded: Dict[object, jax.Array] = field(default_factory=dict)
     _lock: threading.RLock = field(default_factory=threading.RLock,
@@ -162,6 +168,36 @@ class PreparedDesign:
                 self._cn_thr[thr] = jnp.concatenate(
                     [self.cn, jnp.zeros((pad,), jnp.float32)])
             return self._cn_thr[thr]
+
+    def inv_cn_for(self, thr: int) -> jax.Array:
+        """Inverse squared column norms in SolveBakP's thr-padded layout.
+
+        The fused megakernel (``repro.kernels.fused_solve``) consumes these
+        directly; padded (zero-norm) columns come back 0, which pins their
+        updates to 0 exactly like the masked XLA path.
+        """
+        with self._lock:
+            if thr not in self._inv_cn:
+                self._inv_cn[thr] = safe_inv(self.cn_for_thr(thr))
+            return self._inv_cn[thr]
+
+    def x_t_for(self, thr: int) -> jax.Array:
+        """Device-resident TRANSPOSED copy of the design, (vars_pad, obs)
+        with vars zero-padded to a multiple of ``thr`` — the layout the
+        Pallas kernels stream/hold (a paper-"column" is a contiguous row).
+        The transpose relayout happens once per (design, thr) and is
+        memoised; repeat fused solves reuse the resident copy.
+        """
+        with self._lock:
+            if thr not in self._x_t:
+                obs_p, vars_p = self.x_pad.shape
+                nblocks = -(-vars_p // thr)
+                pad = nblocks * thr - vars_p
+                x_t = jnp.swapaxes(self.x_pad, 0, 1)
+                if pad:
+                    x_t = jnp.pad(x_t, ((0, pad), (0, 0)))
+                self._x_t[thr] = x_t
+            return self._x_t[thr]
 
     def chol_for(self, thr: int, ridge: float) -> jax.Array:
         """Block-Gram Cholesky factors for (thr, ridge), computed once."""
@@ -253,7 +289,12 @@ class PreparedDesign:
             raise ValueError(
                 "no SolverSpec bound to this PreparedDesign; pass spec=")
         mesh = mesh if mesh is not None else self.mesh
-        y = jnp.asarray(y)
+        # Normalise to an ndim-carrying array but keep HOST buffers host:
+        # the solver entry points auto-donate fresh in-jit transfers of
+        # numpy operands (types.donate_default), which is how the serving
+        # flush path sheds its steady-state HBM allocation.
+        if not hasattr(y, "ndim"):
+            y = np.asarray(y, np.float32)
         entry = solver_method(spec.method)
         if y.ndim == 2 and not entry.multi_rhs:
             raise ValueError(

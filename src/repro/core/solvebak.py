@@ -29,53 +29,23 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.core.types import (SolveResult, column_norms_sq, safe_inv,
-                              sweep_stop_flags)
+from repro.core.types import (SolveResult, column_norms_sq, donate_default,
+                              safe_inv, sweep_stop_flags)
 
 
-@functools.partial(
-    jax.jit, static_argnames=("max_iter", "order", "unroll")
-)
-def solvebak(
+def _solvebak_impl(
     x: jax.Array,
     y: jax.Array,
+    a0: Optional[jax.Array],
+    cn: Optional[jax.Array],
+    key: Optional[jax.Array],
+    atol,
+    rtol,
     *,
-    max_iter: int = 50,
-    atol: float = 0.0,
-    rtol: float = 0.0,
-    a0: Optional[jax.Array] = None,
-    order: str = "cyclic",
-    key: Optional[jax.Array] = None,
-    unroll: int = 1,
-    cn: Optional[jax.Array] = None,
+    max_iter: int,
+    order: str,
+    unroll: int,
 ) -> SolveResult:
-    """Algorithm 1 (SolveBak).
-
-    Args:
-      x: (obs, vars) input matrix (any float dtype; fp32 accumulation).
-      y: (obs,) right-hand side, or (obs, k) for k right-hand sides solved
-        in one pass (multi-RHS; see module doc).
-      max_iter: maximum number of full sweeps over all columns.
-      atol: absolute tolerance on the *RMSE*; converged when
-        ``sse <= obs * atol**2`` (multi-RHS: total SSE vs ``obs*k*atol²``).
-        ``0`` disables.
-      rtol: relative per-sweep improvement tolerance; converged when
-        ``(sse_prev - sse) <= rtol * sse_prev``.  ``0`` disables.
-      a0: optional (vars,) / (vars, k) initial guess (paper line 1: zeros);
-        a (vars,) guess with multi-RHS ``y`` broadcasts across all k.
-      order: "cyclic" (paper Algorithm 1) or "random" (paper §2, randomly
-        selected indices; requires ``key``).
-      key: PRNG key for ``order="random"``.
-      unroll: unroll factor for the inner column loop (compile-time knob).
-      cn: optional precomputed squared column norms ``⟨x_j,x_j⟩`` (vars,) —
-        lets ``repro.serve``'s design cache skip the norms pass on repeated
-        design matrices.
-
-    Returns:
-      SolveResult.  ``history[i]`` is the SSE after sweep ``i``; for
-      multi-RHS input ``coef``/``residual`` are (vars, k)/(obs, k) and
-      ``sse`` is the total over all k systems.
-    """
     if x.ndim != 2:
         raise ValueError(f"x must be 2D (obs, vars), got {x.shape}")
     if y.ndim not in (1, 2):
@@ -150,6 +120,67 @@ def solvebak(
     if not multi:
         a, e = a[:, 0], e[:, 0]
     return SolveResult(a, e, sse, n, converged, history)
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_solvebak(max_iter, order, unroll, donate):
+    return jax.jit(
+        functools.partial(_solvebak_impl, max_iter=max_iter, order=order,
+                          unroll=unroll),
+        donate_argnums=(1, 2) if donate else (),   # y, a0
+    )
+
+
+def solvebak(
+    x: jax.Array,
+    y: jax.Array,
+    *,
+    max_iter: int = 50,
+    atol: float = 0.0,
+    rtol: float = 0.0,
+    a0: Optional[jax.Array] = None,
+    order: str = "cyclic",
+    key: Optional[jax.Array] = None,
+    unroll: int = 1,
+    cn: Optional[jax.Array] = None,
+    donate: Optional[bool] = None,
+) -> SolveResult:
+    """Algorithm 1 (SolveBak).
+
+    Args:
+      x: (obs, vars) input matrix (any float dtype; fp32 accumulation).
+      y: (obs,) right-hand side, or (obs, k) for k right-hand sides solved
+        in one pass (multi-RHS; see module doc).
+      max_iter: maximum number of full sweeps over all columns.
+      atol: absolute tolerance on the *RMSE*; converged when
+        ``sse <= obs * atol**2`` (multi-RHS: total SSE vs ``obs*k*atol²``).
+        ``0`` disables.
+      rtol: relative per-sweep improvement tolerance; converged when
+        ``(sse_prev - sse) <= rtol * sse_prev``.  ``0`` disables.
+      a0: optional (vars,) / (vars, k) initial guess (paper line 1: zeros);
+        a (vars,) guess with multi-RHS ``y`` broadcasts across all k.
+      order: "cyclic" (paper Algorithm 1) or "random" (paper §2, randomly
+        selected indices; requires ``key``).
+      key: PRNG key for ``order="random"``.
+      unroll: unroll factor for the inner column loop (compile-time knob).
+      cn: optional precomputed squared column norms ``⟨x_j,x_j⟩`` (vars,) —
+        lets ``repro.serve``'s design cache skip the norms pass on repeated
+        design matrices.
+      donate: donate the ``y``/``a0`` buffers to the solve — cuts
+        steady-state HBM allocation on the serving flush path (which hands
+        in fresh host buffers every batch).  Default: on for accelerator
+        backends at top level when ``y``/``a0`` are HOST (numpy) buffers —
+        a ``jax.Array`` you pass is never auto-donated, so reuse stays
+        safe; force with ``donate=True`` for device buffers you own.
+
+    Returns:
+      SolveResult.  ``history[i]`` is the SSE after sweep ``i``; for
+      multi-RHS input ``coef``/``residual`` are (vars, k)/(obs, k) and
+      ``sse`` is the total over all k systems.
+    """
+    fn = _jitted_solvebak(int(max_iter), order, int(unroll),
+                          donate_default(donate, y, a0))
+    return fn(x, y, a0, cn, key, atol, rtol)
 
 
 def solvebak_onesweep(x: jax.Array, y: jax.Array, a: jax.Array, e: jax.Array):

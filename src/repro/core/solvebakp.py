@@ -45,8 +45,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.core.types import (SolveResult, column_norms_sq, safe_inv,
-                              sweep_stop_flags)
+from repro.core.types import (SolveResult, column_norms_sq, donate_default,
+                              safe_inv, sweep_stop_flags)
 
 
 def _pad_cols(x: jax.Array, thr: int):
@@ -77,48 +77,21 @@ def block_gram_cholesky(xb: jax.Array, ridge: float) -> jax.Array:
     return jax.vmap(lambda g: jax.scipy.linalg.cholesky(g, lower=True))(gram)
 
 
-@functools.partial(
-    jax.jit, static_argnames=("thr", "max_iter", "mode")
-)
-def solvebakp(
+def _solvebakp_impl(
     x: jax.Array,
     y: jax.Array,
+    a0: Optional[jax.Array],
+    cn: Optional[jax.Array],
+    chol: Optional[jax.Array],
+    atol,
+    rtol,
+    omega,
+    ridge,
     *,
-    thr: int = 128,
-    max_iter: int = 50,
-    atol: float = 0.0,
-    rtol: float = 0.0,
-    omega: float = 1.0,
-    mode: str = "jacobi",
-    ridge: float = 1e-6,
-    a0: Optional[jax.Array] = None,
-    cn: Optional[jax.Array] = None,
-    chol: Optional[jax.Array] = None,
+    thr: int,
+    max_iter: int,
+    mode: str,
 ) -> SolveResult:
-    """Algorithm 2 (SolveBakP), blocked over ``thr`` columns.
-
-    Args:
-      x: (obs, vars) input matrix.
-      y: (obs,) right-hand side, or (obs, k) for k right-hand sides solved
-        in one pass over ``x`` (multi-RHS; see module doc).
-      thr: block width (the paper's thread-count parameter).  Multiples of
-        128 line up with TPU lanes/MXU tiles.
-      max_iter / atol / rtol: as in ``solvebak``.
-      omega: relaxation factor applied to every block update (1.0 = paper).
-      mode: "jacobi" (paper Algorithm 2) or "gram" (exact block CD).
-      ridge: diagonal regulariser for mode="gram".
-      a0: optional initial coefficients, (vars,) or (vars, k); a (vars,)
-        guess with multi-RHS ``y`` broadcasts across all k.
-      cn: optional precomputed squared column norms of the *padded* matrix,
-        shape (nblocks*thr,) — see ``repro.serve.cache``.
-      chol: optional precomputed ``block_gram_cholesky(xb, ridge)`` factors,
-        shape (nblocks, thr, thr); only used for mode="gram".  Repeated-X
-        serving amortises this O(obs·vars·thr) factorisation across requests.
-
-    Returns:
-      SolveResult (coef truncated back to the unpadded ``vars``); multi-RHS
-      input gives (vars, k) coef, (obs, k) residual and total-SSE scalars.
-    """
     obs, nvars = x.shape
     if y.ndim not in (1, 2):
         raise ValueError(f"y must be (obs,) or (obs, k), got {y.shape}")
@@ -192,3 +165,61 @@ def solvebakp(
     if not multi:
         coef, e = coef[:, 0], e[:, 0]
     return SolveResult(coef, e, sse, n, converged, history)
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_solvebakp(thr, max_iter, mode, donate):
+    return jax.jit(
+        functools.partial(_solvebakp_impl, thr=thr, max_iter=max_iter,
+                          mode=mode),
+        donate_argnums=(1, 2) if donate else (),   # y, a0
+    )
+
+
+def solvebakp(
+    x: jax.Array,
+    y: jax.Array,
+    *,
+    thr: int = 128,
+    max_iter: int = 50,
+    atol: float = 0.0,
+    rtol: float = 0.0,
+    omega: float = 1.0,
+    mode: str = "jacobi",
+    ridge: float = 1e-6,
+    a0: Optional[jax.Array] = None,
+    cn: Optional[jax.Array] = None,
+    chol: Optional[jax.Array] = None,
+    donate: Optional[bool] = None,
+) -> SolveResult:
+    """Algorithm 2 (SolveBakP), blocked over ``thr`` columns.
+
+    Args:
+      x: (obs, vars) input matrix.
+      y: (obs,) right-hand side, or (obs, k) for k right-hand sides solved
+        in one pass over ``x`` (multi-RHS; see module doc).
+      thr: block width (the paper's thread-count parameter).  Multiples of
+        128 line up with TPU lanes/MXU tiles.
+      max_iter / atol / rtol: as in ``solvebak``.
+      omega: relaxation factor applied to every block update (1.0 = paper).
+      mode: "jacobi" (paper Algorithm 2) or "gram" (exact block CD).
+      ridge: diagonal regulariser for mode="gram".
+      a0: optional initial coefficients, (vars,) or (vars, k); a (vars,)
+        guess with multi-RHS ``y`` broadcasts across all k.
+      cn: optional precomputed squared column norms of the *padded* matrix,
+        shape (nblocks*thr,) — see ``repro.serve.cache``.
+      chol: optional precomputed ``block_gram_cholesky(xb, ridge)`` factors,
+        shape (nblocks, thr, thr); only used for mode="gram".  Repeated-X
+        serving amortises this O(obs·vars·thr) factorisation across requests.
+      donate: donate the ``y``/``a0`` buffers to the solve (cuts
+        steady-state HBM allocation on the serving flush path).  Default:
+        auto-donate only host (numpy) operands on accelerator backends at
+        top level; see ``solvebak``.
+
+    Returns:
+      SolveResult (coef truncated back to the unpadded ``vars``); multi-RHS
+      input gives (vars, k) coef, (obs, k) residual and total-SSE scalars.
+    """
+    fn = _jitted_solvebakp(int(thr), int(max_iter), mode,
+                           donate_default(donate, y, a0))
+    return fn(x, y, a0, cn, chol, atol, rtol, omega, ridge)

@@ -58,6 +58,18 @@ def column_norms_sq(x: jax.Array) -> jax.Array:
     return jnp.einsum("ij,ij->j", xf, xf)
 
 
+def column_norms_sq_t(x_t: jax.Array) -> jax.Array:
+    """``column_norms_sq`` on the TRANSPOSED (vars, obs) kernel layout.
+
+    A paper-"column" is a contiguous row of ``x_t``, so the norms reduce
+    over the trailing (obs) axis directly — no ``x_t.T`` materialisation,
+    which for the kernel wrappers used to be a full (obs, vars) relayout
+    just to throw it away after one reduction.
+    """
+    xf = x_t.astype(jnp.float32)
+    return jnp.einsum("vo,vo->v", xf, xf)
+
+
 def safe_inv(cn: jax.Array) -> jax.Array:
     """1/cn with zero (not inf) for zero-norm columns.
 
@@ -65,6 +77,32 @@ def safe_inv(cn: jax.Array) -> jax.Array:
     defined as 0 for it; this keeps the update well-posed.
     """
     return jnp.where(cn > 0.0, 1.0 / jnp.where(cn > 0.0, cn, 1.0), 0.0)
+
+
+def donate_default(donate, *operands) -> bool:
+    """Shared buffer-donation default for the jitted solver entry points.
+
+    Auto-donation must be safe for every caller, so it fires only when ALL
+    of the following hold — an explicit ``donate`` always wins:
+
+      * accelerator backend (the CPU backend cannot donate; requesting it
+        just emits warnings);
+      * top level (a re-entrant call under vmap / shard_map / an outer jit
+        cannot consume donations);
+      * every donatable ``operand`` is a HOST buffer (numpy / None), whose
+        device transfer inside the jit is fresh by construction — nobody
+        else can hold it.  A ``jax.Array`` operand is never auto-donated:
+        the caller may reuse it (benchmarks re-solving one ``y``, parity
+        loops), and a deleted-buffer crash is worse than a copy.  The
+        serving engine hands the solvers host buffers, so the flush path
+        donates; pass ``donate=True`` to force it for device operands you
+        own.
+    """
+    if donate is not None:
+        return bool(donate)
+    return (jax.default_backend() != "cpu"
+            and jax.core.trace_state_clean()
+            and not any(isinstance(op, jax.Array) for op in operands))
 
 
 def sweep_stop_flags(sse, sse_prev, sse0, atol_sse, rtol):

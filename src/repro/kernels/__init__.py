@@ -1,19 +1,32 @@
 """repro.kernels — Pallas TPU kernels for the solver's compute hot-spots.
 
-  cd_sweep.py      VMEM-resident CD sweep (Alg. 1) + block-Jacobi sweep
-                   (Alg. 2) — x streamed HBM->VMEM once per sweep, residual
-                   resident in VMEM scratch across the grid.
+  fused_solve.py   whole-solve megakernel: ONE pallas_call runs the entire
+                   SolveBak/SolveBakP iteration — x/residual/coefficients
+                   VMEM-resident across all sweeps, convergence decided
+                   on-chip, true early exit (no compute, no DMA after it).
+  cd_sweep.py      per-sweep VMEM-resident CD sweep (Alg. 1) + block-Jacobi
+                   sweep (Alg. 2) — x streamed HBM->VMEM once per sweep,
+                   residual resident in VMEM scratch across the grid.
   block_update.py  obs-streamed rank-thr residual correction + fused
                    SolveBakF feature scoring.
-  ops.py           jit'd wrappers (interpret=True off-TPU).
+  ops.py           solver entries: solvebakp_kernel (fused when the design
+                   fits VMEM, per-sweep launch loop otherwise) + wrappers
+                   (interpret=True off-TPU, y/a0 buffer donation on
+                   accelerators).
   ref.py           pure-jnp oracles, tested via shape/dtype sweeps.
 """
 from repro.kernels.block_update import block_update, score_features
 from repro.kernels.cd_sweep import bakp_sweep, cd_sweep
+from repro.kernels.fused_solve import (
+    fused_fits,
+    fused_solve,
+    fused_vmem_bytes,
+)
 from repro.kernels.ops import (
     block_update_kernel,
     score_features_kernel,
     solvebakp_kernel,
+    solvebakp_persweep_kernel,
 )
 
 __all__ = [
@@ -21,7 +34,11 @@ __all__ = [
     "block_update",
     "block_update_kernel",
     "cd_sweep",
+    "fused_fits",
+    "fused_solve",
+    "fused_vmem_bytes",
     "score_features",
     "score_features_kernel",
     "solvebakp_kernel",
+    "solvebakp_persweep_kernel",
 ]

@@ -41,6 +41,37 @@ from jax.experimental.pallas import tpu as pltpu
 VMEM_BUDGET_BYTES = 64 * 1024 * 1024
 
 
+def bak_row_update(xj, inv_j, e):
+    """One Algorithm-1 column update on loaded values (shared by the
+    per-sweep kernel below AND the fused megakernel — one definition so the
+    two execution models cannot drift numerically).
+
+    Args: xj (1, obs) column; inv_j scalar 1/⟨x_j,x_j⟩; e (k, obs).
+    Returns (da, e'): (1, k) increment and the corrected residual(s).
+    """
+    da = lax.dot_general(xj, e, (((1,), (1,)), ((), ())),
+                         preferred_element_type=jnp.float32)      # ⟨x_j, e⟩
+    da = da * inv_j
+    e = e - lax.dot_general(da, xj, (((0,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    return da, e
+
+
+def bakp_block_update(xb, inv, e, omega):
+    """One Algorithm-2 block update on loaded values (shared as above).
+
+    Args: xb (CB, obs) block; inv (CB, 1); e (k, obs); omega relaxation.
+    Returns (da, e'): (CB, k) increments and the rank-CB-corrected
+    residual(s); both matvecs hit the MXU.
+    """
+    g = lax.dot_general(xb, e, (((1,), (1,)), ((), ())),
+                        preferred_element_type=jnp.float32)       # (CB, k)
+    da = omega * g * inv
+    e = e - lax.dot_general(da, xb, (((0,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    return da, e
+
+
 def _cd_sweep_kernel(x_ref, invcn_ref, e_in_ref, da_ref, e_out_ref, e_scr):
     """Grid: (nblocks,).  Refs:
     x_ref: (CB, obs) tile of x_t        invcn_ref: (CB, 1)
@@ -60,15 +91,10 @@ def _cd_sweep_kernel(x_ref, invcn_ref, e_in_ref, da_ref, e_out_ref, e_scr):
     nrhs = da_ref.shape[1]
 
     def body(t, _):
-        e = e_scr[...]                                        # (k, obs)
         xj = lax.dynamic_slice_in_dim(xb, t, 1, axis=0)       # (1, obs)
-        da = lax.dot_general(                                 # ⟨x_j, e⟩, all k
-            xj, e, (((1,), (1,)), ((), ())),
-            preferred_element_type=jnp.float32)               # (1, k)
-        da = da * lax.dynamic_slice_in_dim(inv, t, 1, 0)[0, 0]
-        e_scr[...] = e - lax.dot_general(                     # (k, obs)
-            da, xj, (((0,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32)
+        inv_j = lax.dynamic_slice_in_dim(inv, t, 1, 0)[0, 0]
+        da, e = bak_row_update(xj, inv_j, e_scr[...])
+        e_scr[...] = e
         pl.store(da_ref, (pl.dslice(t, 1), pl.dslice(0, nrhs)), da)
         return 0
 
@@ -92,14 +118,8 @@ def _bakp_sweep_kernel(omega, x_ref, invcn_ref, e_in_ref, da_ref, e_out_ref,
 
     xb = x_ref[...].astype(jnp.float32)          # (CB, obs)
     inv = invcn_ref[...]                         # (CB, 1)
-    e = e_scr[...]                               # (k, obs)
-    g = jax.lax.dot_general(                     # ⟨x_k, e⟩ for the block: MXU
-        xb, e, (((1,), (1,)), ((), ())),
-        preferred_element_type=jnp.float32)      # (CB, k)
-    da = omega * g * inv                         # (CB, k)
-    e_scr[...] = e - jax.lax.dot_general(        # rank-CB correction: MXU
-        da, xb, (((0,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32)      # (k, obs)
+    da, e = bakp_block_update(xb, inv, e_scr[...], omega)
+    e_scr[...] = e
     da_ref[...] = da
 
     @pl.when(i == pl.num_programs(0) - 1)

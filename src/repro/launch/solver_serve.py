@@ -13,6 +13,15 @@ Async deadline-aware dispatch (Poisson arrivals through AsyncDispatcher):
         --requests 256 --rate 200 --deadline-ms 500 --max-batch 16 \
         --tenants 32
 
+Fused-megakernel serving (whole solves on one Pallas launch; oversized
+designs fall back to the XLA path automatically):
+
+    PYTHONPATH=src python -m repro.launch.solver_serve \
+        --method bakp_fused --requests 256 --designs 8
+    # or upgrade eligible 'bakp' requests in place:
+    PYTHONPATH=src python -m repro.launch.solver_serve \
+        --method bakp --prefer-fused
+
 Mesh-sharded placement (route big buckets / giant same-design groups onto
 the sharded SolveBakP backends; on CPU this forces virtual host devices
 before jax loads, so it must be a fresh process):
@@ -202,6 +211,12 @@ def main():
                     help="sync mode: requests per flush window")
     ap.add_argument("--tenants", type=int, default=0,
                     help="recurring tenant ids (0 = off; enables warm starts)")
+    ap.add_argument("--prefer-fused", action="store_true",
+                    help="upgrade 'bakp' requests to the fused whole-solve "
+                         "Pallas megakernel (method 'bakp_fused') when the "
+                         "bucket fits VMEM; request --method bakp_fused "
+                         "directly to force it for all sizes (oversized "
+                         "designs fall back to the XLA path)")
     ap.add_argument("--mesh", default=None, metavar="DxM",
                     help="route big buckets onto a device mesh, e.g. '8' or "
                          "'4x2' (data[xmodel]); on CPU forces that many "
@@ -247,8 +262,10 @@ def main():
                                  if args.shard_min_cells is not None
                                  else defaults.obs_shard_min_cells),
             rhs_shard_min_k=args.rhs_shard_min_k)
-    engine = SolverServeEngine(ServeConfig(placement_policy=policy),
-                               mesh=smesh)
+    engine = SolverServeEngine(
+        ServeConfig(placement_policy=policy,
+                    prefer_fused=args.prefer_fused),
+        mesh=smesh)
     xs = [rng.normal(size=(args.obs, args.vars)).astype(np.float32)
           for _ in range(args.designs)]
     reqs = build_requests(rng, xs, args.requests, args.method, args.max_iter,

@@ -68,8 +68,9 @@ import numpy as np
 
 from repro.core.prepare import PreparedDesign
 from repro.core.spec import SolverSpec, solver_method
+from repro.kernels.fused_solve import fused_fits
 from repro.serve.batching import (group_requests, next_pow2, pad_x, pad_y,
-                                  prepare_request)
+                                  prepare_request, request_bucket)
 from repro.serve.cache import DesignCache
 from repro.serve.placement import (Placement, PlacementPolicy, ServeMesh,
                                    placement_for_bucket, placement_for_group)
@@ -90,6 +91,12 @@ class ServeConfig:
     cache_entries: int = 64      # LRU design-cache capacity
     warm_cache: bool = True      # retain per-tenant coefs for warm starts
     warm_tenants: int = 64       # per-design LRU cap on retained tenants
+    prefer_fused: bool = False   # upgrade "bakp" requests to the fused
+    # whole-solve megakernel ("bakp_fused") when the bucket fits VMEM.
+    # Same algorithm/results; trades cross-design vmap batching for the
+    # fused kernel's one-launch solves, so it pays off on coalescing-heavy
+    # (repeated-design) traffic.  Mesh engines keep "bakp" (the fused
+    # kernel is single-device; upgrading would defeat sharded placement).
     placement_policy: Optional[PlacementPolicy] = None  # None → defaults
     omega_2d: float = 0.5        # damping for the 2-D mesh placement (its
     # cross-device Jacobi block is D·thr wide — see core.distributed)
@@ -180,6 +187,17 @@ class SolverServeEngine:
         if req.spec is None:
             spec = spec.replace(omega=self.config.omega,
                                 ridge=self.config.ridge)
+        if (self.config.prefer_fused and self.mesh is None
+                and spec.method == "bakp" and spec.max_iter >= 1):
+            # Fused eligibility mirrors the method's own dispatch check
+            # (nrhs estimated at 1 — the method kernel re-checks with the
+            # real coalesced k and falls back to XLA "bakp" when it grew
+            # past the budget, so the upgrade is always safe).
+            bucket = request_bucket(req, min_obs=self.config.min_obs,
+                                    min_vars=self.config.min_vars)
+            vars_pb = -(-bucket[1] // spec.thr) * spec.thr
+            if fused_fits(vars_pb, bucket[0], 1, 4, max_iter=spec.max_iter):
+                spec = spec.replace(method="bakp_fused")
         return spec
 
     # ------------------------------------------------------------- intake
@@ -414,12 +432,14 @@ class SolverServeEngine:
             for c, a in enumerate(a0s):
                 if a is not None:
                     a0_mat[:, c] = self._pad_a0(a, vars_p)
-            a0_mat = jnp.asarray(a0_mat)
         # Same design => same real obs for every member of the group.
         obs_real = np.asarray(req0.x).shape[0]
         atol = self._padded_atol(spec.atol, obs_real * k, obs_p * k_pad)
         t0 = time.perf_counter()
-        res = self._call_solver(spec, entry, jnp.asarray(ys), atol, a0=a0_mat,
+        # ys/a0_mat go in as HOST buffers: the solver entries donate their
+        # fresh in-jit transfers on accelerator backends (the steady-state
+        # HBM saving of the flush path — see types.donate_default).
+        res = self._call_solver(spec, entry, ys, atol, a0=a0_mat,
                                 placement=placement)
         jax.block_until_ready(res.coef)
         dt = time.perf_counter() - t0
@@ -503,18 +523,19 @@ class SolverServeEngine:
         a0 = None
         if solver_method(spec.method).iterative:
             a0 = self._resolve_a0(req, entry)
-        a0_dev = None
+        a0_pad = None
         if a0 is not None:
-            a0_dev = jnp.asarray(self._pad_a0(a0, bucket[1]))
+            a0_pad = self._pad_a0(a0, bucket[1])
         t0 = time.perf_counter()
-        res = self._call_solver(spec, entry, jnp.asarray(y_pad), atol,
-                                a0=a0_dev, placement=placement)
+        # Host buffers in — see _solve_multi_rhs on donation.
+        res = self._call_solver(spec, entry, y_pad, atol,
+                                a0=a0_pad, placement=placement)
         jax.block_until_ready(res.coef)
         dt = time.perf_counter() - t0
         results[idx] = self._strip(
             req, res.coef, res.residual, bucket=bucket, kind="single",
             group_size=1, latency=dt, hit=hit, n_sweeps=res.n_sweeps,
-            converged=res.converged, entry=entry, warm=a0_dev is not None,
+            converged=res.converged, entry=entry, warm=a0_pad is not None,
             placement=placement)
         self.stats.solver_calls += 1
         self.stats.single_solves += 1

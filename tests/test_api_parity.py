@@ -24,6 +24,10 @@ SPECS = {
     "bakp": SolverSpec(method="bakp", max_iter=60, rtol=1e-12, thr=8),
     "bakp_gram": SolverSpec(method="bakp_gram", max_iter=60, rtol=1e-12,
                             thr=8),
+    "bakp_fused": SolverSpec(method="bakp_fused", max_iter=60, rtol=1e-12,
+                             thr=8),
+    "bak_fused": SolverSpec(method="bak_fused", max_iter=60, rtol=1e-12,
+                            thr=8),
     "bakf": SolverSpec(method="bakf", max_iter=40, thr=8),
     "lstsq": SolverSpec(method="lstsq"),
     "normal": SolverSpec(method="normal"),

@@ -88,6 +88,11 @@ METHOD_CAPABILITIES = {
     "bak": (True, True, True, False),
     "bakp": (True, True, True, True),
     "bakp_gram": (True, True, True, True),
+    # The fused megakernel methods are single-device whole-solve launches:
+    # neither vmap-batchable (a batched pallas whole-solve would multiply
+    # the VMEM residency) nor mesh-shardable (route big buckets to "bakp").
+    "bakp_fused": (True, True, False, False),
+    "bak_fused": (True, True, False, False),
     "lstsq": (False, True, False, False),
     "normal": (False, True, False, False),
     "bakf": (False, False, False, False),
