@@ -158,6 +158,7 @@ def _prewarm(engine, xs, sizes, thr):
 
 def bench_async(obs, nvars, n, rate, deadline_s, max_batch, thr, seed=0,
                 designs=3, tenants=16):
+    from repro import obs as robs
     from repro.serve import (AsyncDispatcher, DispatchConfig, ServeConfig,
                              SolverServeEngine)
 
@@ -168,9 +169,20 @@ def bench_async(obs, nvars, n, rate, deadline_s, max_batch, thr, seed=0,
     prewarm_sizes = sorted({1, 2, 4, max_batch, n // designs + 1})
 
     # ---- synchronous baseline: flush every max_batch arrivals
-    sync_engine = SolverServeEngine(ServeConfig())
+    # Per-run registries: each engine records into its own, so the sync
+    # baseline's histograms never mix into the async run's and the
+    # percentiles reported below come from the SAME families the engine /
+    # dispatcher record (no hand-rolled latency lists).
+    reg_sync = robs.MetricsRegistry()
+    sync_engine = SolverServeEngine(ServeConfig(), registry=reg_sync)
     _prewarm(sync_engine, xs, prewarm_sizes, thr)
-    latencies_sync, misses_sync = [], 0
+    # Arrival->completion latency is a benchmark-level observable (the sync
+    # engine has no arrival clock), recorded into the same registry.
+    h_sync = reg_sync.histogram(
+        "bench_request_latency_seconds",
+        "arrival-to-completion latency (sync-baseline window flush)",
+        buckets=robs.LATENCY_BUCKETS)
+    misses_sync = 0
     t0 = time.perf_counter()
     pending = []
     for i in range(n):
@@ -184,13 +196,14 @@ def bench_async(obs, nvars, n, rate, deadline_s, max_batch, thr, seed=0,
             done = time.perf_counter() - t0
             for arr, _ in pending:
                 lat = done - arr
-                latencies_sync.append(lat)
+                h_sync.observe(lat)
                 misses_sync += lat > deadline_s
             pending = []
     sync_wall = time.perf_counter() - t0
 
     # ---- async dispatcher, same trace
-    async_engine = SolverServeEngine(ServeConfig())
+    reg_async = robs.MetricsRegistry()
+    async_engine = SolverServeEngine(ServeConfig(), registry=reg_async)
     _prewarm(async_engine, xs, prewarm_sizes, thr)
     # Idle timeout must exceed the mean inter-arrival gap (1/rate) or every
     # batch fires with one request and coalescing never happens; deadline
@@ -201,7 +214,6 @@ def bench_async(obs, nvars, n, rate, deadline_s, max_batch, thr, seed=0,
     tickets = []
     with AsyncDispatcher(async_engine, dcfg) as disp:
         t0 = time.perf_counter()
-        base = time.monotonic()
         for i in range(n):
             now = time.perf_counter() - t0
             if arrivals[i] > now:
@@ -212,8 +224,9 @@ def bench_async(obs, nvars, n, rate, deadline_s, max_batch, thr, seed=0,
         async_wall = time.perf_counter() - t0
         served = [t.result(timeout=60) for t in tickets]
         stats = disp.stats
-    latencies_async = [t.completed_at - base - arrivals[i]
-                       for i, t in enumerate(tickets)]
+    # submit ≈ arrival (the loop sleeps until each arrival), so the
+    # dispatcher's own submit->complete histogram IS the request latency.
+    h_async = reg_async.get("serve_request_latency_seconds")
     misses_async = sum(t.deadline_met is False for t in tickets)
 
     # accuracy vs fp64 lstsq, both paths exact-tolerance solves
@@ -226,7 +239,6 @@ def bench_async(obs, nvars, n, rate, deadline_s, max_batch, thr, seed=0,
                               rcond=None)[0]
         mapes.append(_mape(s.coef, ref))
 
-    la, ls = np.array(latencies_async), np.array(latencies_sync)
     return {
         "obs": obs, "vars": nvars, "n_requests": n, "rate_hz": rate,
         "deadline_s": deadline_s, "max_batch": max_batch,
@@ -235,10 +247,14 @@ def bench_async(obs, nvars, n, rate, deadline_s, max_batch, thr, seed=0,
         "sync_solves_per_s": n / sync_wall,
         "async_solves_per_s": n / async_wall,
         "throughput_ratio": sync_wall / async_wall,
-        "sync_p50_s": float(np.percentile(ls, 50)),
-        "sync_p95_s": float(np.percentile(ls, 95)),
-        "async_p50_s": float(np.percentile(la, 50)),
-        "async_p95_s": float(np.percentile(la, 95)),
+        "sync_p50_s": h_sync.percentile(50),
+        "sync_p95_s": h_sync.percentile(95),
+        "sync_p99_s": h_sync.percentile(99),
+        "async_p50_s": h_async.percentile(50),
+        "async_p95_s": h_async.percentile(95),
+        "async_p99_s": h_async.percentile(99),
+        "async_queue_wait_p95_s":
+            reg_async.get("serve_queue_wait_seconds").percentile(95),
         "sync_deadline_misses": int(misses_sync),
         "async_deadline_misses": int(misses_async),
         "async_miss_rate": misses_async / n,

@@ -31,6 +31,7 @@ def run(obs=2048, nvars=256, n_requests=64, method="bakp_gram", thr=128,
     import jax
     import jax.numpy as jnp
 
+    from repro import obs as robs
     from repro.core import SolverSpec, prepare, solve
     from repro.serve import ServeConfig, SolveRequest, SolverServeEngine
 
@@ -65,12 +66,16 @@ def run(obs=2048, nvars=256, n_requests=64, method="bakp_gram", thr=128,
                              request_id=f"req-{i}")
                 for i in range(n_requests)]
 
-    engine = SolverServeEngine(ServeConfig())
+    # Private registry so the timed window's histograms are not polluted by
+    # the warmup flush (reset after warming, below).
+    reg = robs.MetricsRegistry()
+    engine = SolverServeEngine(ServeConfig(), registry=reg)
 
     # Warm all paths (jit compile + design state + engine design cache).
     sequential()
     prepared_sequential()
     engine.serve(make_requests())
+    reg.reset()
 
     t0 = time.perf_counter()
     seq_coefs = sequential()
@@ -99,6 +104,12 @@ def run(obs=2048, nvars=256, n_requests=64, method="bakp_gram", thr=128,
         "engine failed to coalesce same-design requests"
     assert all(r.cache_hit for r in served), "design cache missed on warm run"
 
+    # Percentiles come from the registry the engine itself records into —
+    # the same families a production scrape would see, not a parallel
+    # hand-rolled latency list.
+    lat = reg.get("serve_solve_latency_seconds")
+    path = (served[0].telemetry.kernel_path
+            if served[0].telemetry is not None else "unknown")
     return {
         "obs": obs, "vars": nvars, "n_requests": n_requests,
         "method": method,
@@ -108,6 +119,10 @@ def run(obs=2048, nvars=256, n_requests=64, method="bakp_gram", thr=128,
         "seq_solves_per_s": n_requests / t_seq,
         "prepared_solves_per_s": n_requests / t_prep,
         "engine_solves_per_s": n_requests / t_eng,
+        "engine_solve_p50_s": lat.percentile(50),
+        "engine_solve_p95_s": lat.percentile(95),
+        "engine_solve_p99_s": lat.percentile(99),
+        "engine_kernel_path": path,
         "mape_worst": max(mape_eng),
         "mape_seq_worst": max(mape_seq),
         "mape_prepared_worst": max(mape_prep),
@@ -147,7 +162,10 @@ def main():
           f"speedup={r['prepared_speedup']:.2f}")
     print(f"{tag}/engine,{r['engine_s']/r['n_requests']*1e6:.0f},"
           f"solves_per_s={r['engine_solves_per_s']:.1f};"
-          f"mape={r['mape_worst']:.2e};speedup={r['speedup']:.2f}")
+          f"mape={r['mape_worst']:.2e};speedup={r['speedup']:.2f};"
+          f"path={r['engine_kernel_path']};"
+          f"solve_p50={r['engine_solve_p50_s']*1e3:.2f}ms;"
+          f"solve_p99={r['engine_solve_p99_s']*1e3:.2f}ms")
     if args.smoke:
         ok = r["mape_worst"] <= 1e-4
         print(f"acceptance (smoke): worst_mape={r['mape_worst']:.2e} "

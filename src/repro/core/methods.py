@@ -48,6 +48,7 @@ from repro.core.solvebakp import solvebakp
 from repro.core.spec import (_ITER_FIELDS, MethodEntry, SolverSpec,
                              register_method)
 from repro.core.types import SolveResult
+from repro.obs import record_dispatch
 
 _SHARDED_BACKENDS = {
     "obs_sharded": solvebakp_obs_sharded,
@@ -58,6 +59,11 @@ _SHARDED_BACKENDS = {
 # --------------------------------------------------------------- BAK family
 def _bak_solve(p, y, spec: SolverSpec, *, a0=None, key=None, placement=None,
                mesh=None):
+    # Kernel-path relay: these solve bodies run eagerly per call (jit lives
+    # inside the solvers), so recording here reports the route each solve
+    # actually took; the vmap_one closures are jit-traced and must NOT
+    # record (they'd only fire at compile time).
+    record_dispatch("xla", method="bak")
     return solvebak(p.x_pad, y, max_iter=spec.max_iter, atol=spec.atol,
                     rtol=spec.rtol, a0=a0, order=spec.order, key=key,
                     cn=p.cn)
@@ -80,12 +86,15 @@ def _bak_vmap_one(spec: SolverSpec):
 
 
 def _bakp_solve(mode: str):
+    method_name = "bakp" if mode == "jacobi" else "bakp_gram"
+
     def kernel(p, y, spec: SolverSpec, *, a0=None, key=None, placement=None,
                mesh=None):
         if placement is not None and placement.sharded:
             if mesh is None:
                 raise ValueError(
                     f"placement {placement.kind!r} needs a ServeMesh")
+            record_dispatch("sharded", method=method_name)
             x_dev = p.x_for_placement(placement, mesh)
             kw = dict(thr=spec.thr, max_iter=spec.max_iter, atol=spec.atol,
                       rtol=spec.rtol, omega=spec.omega, mode=mode,
@@ -100,6 +109,7 @@ def _bakp_solve(mode: str):
                     f"unknown placement kind {placement.kind!r}")
             return backend(x_dev, y, mesh.mesh, data_axes=mesh.data_axes,
                            **kw)
+        record_dispatch("xla", method=method_name)
         return solvebakp(
             p.x_pad, y, thr=spec.thr, max_iter=spec.max_iter, atol=spec.atol,
             rtol=spec.rtol, omega=spec.omega, mode=mode, ridge=spec.ridge,
@@ -170,6 +180,9 @@ def _fused_method(variant: str):
                 or not fused_fits(vars_pb, obs_p, nrhs,
                                   p.x_pad.dtype.itemsize,
                                   max_iter=spec.max_iter)):
+            record_dispatch(
+                "xla", method=f"{variant}_fused",
+                reason="max_iter" if spec.max_iter < 1 else "vmem")
             if variant == "bak":
                 return solvebak(p.x_pad, y, max_iter=spec.max_iter,
                                 atol=spec.atol, rtol=spec.rtol, a0=a0,
@@ -186,6 +199,7 @@ def _fused_method(variant: str):
             xp = jnp if isinstance(a0, jax.Array) else np
             a0 = xp.pad(xp.asarray(a0, jnp.float32),
                         ((0, vars_pb - vars_p),) + ((0, 0),) * (a0.ndim - 1))
+        record_dispatch("fused", method=f"{variant}_fused")
         res = fused_solve(
             p.x_t_for(block), y, inv_cn=p.inv_cn_for(block), a0=a0,
             block=block, max_iter=spec.max_iter, atol=spec.atol,
@@ -211,6 +225,7 @@ def _bakf_solve(p, y, spec: SolverSpec, *, a0=None, key=None, placement=None,
     "bak"/"bakp" on the same system (parity-tested); the selection order
     itself is the extra information this method pays O(vars) matvecs for.
     """
+    record_dispatch("xla", method="bakf")
     nvars = p.x_pad.shape[1]
     sel = solvebakf(p.x_pad, y, max_feat=nvars,
                     refit_sweeps=spec.max_iter,
@@ -247,11 +262,13 @@ def _normal_kernel(x, y, ridge, max_iter: int) -> SolveResult:
 
 def _lstsq_solve(p, y, spec: SolverSpec, *, a0=None, key=None, placement=None,
                  mesh=None):
+    record_dispatch("xla", method="lstsq")
     return _lstsq_kernel(p.x_pad, y, spec.max_iter)
 
 
 def _normal_solve(p, y, spec: SolverSpec, *, a0=None, key=None,
                   placement=None, mesh=None):
+    record_dispatch("xla", method="normal")
     return _normal_kernel(p.x_pad, y, jnp.float32(spec.ridge), spec.max_iter)
 
 

@@ -32,6 +32,7 @@ from jax import lax
 
 from repro.core.types import (SolveResult, column_norms_sq_t, donate_default,
                               safe_inv, sweep_stop_flags)
+from repro.obs import record_dispatch
 from repro.kernels.block_update import block_update, score_features
 from repro.kernels.cd_sweep import bakp_sweep, cd_sweep
 from repro.kernels.fused_solve import (fused_fits, fused_solve, solve_init,
@@ -159,10 +160,16 @@ def solvebakp_kernel(
     if (max_iter >= 1
             and fused_fits(nvars, obs, nrhs, x_t.dtype.itemsize,
                            max_iter=max_iter)):
+        # This dispatch decision runs eagerly on every call (jit lives
+        # inside fused_solve), so the relay reports the path each solve
+        # actually took — the engine pops it via obs.consume_dispatch().
+        record_dispatch("fused", method=variant)
         return fused_solve(x_t, y, cn=cn, inv_cn=inv_cn, a0=a0, block=block,
                            max_iter=max_iter, atol=atol, rtol=rtol,
                            omega=omega, variant=variant, interpret=interpret,
                            donate=donate)
+    reason = "max_iter" if max_iter < 1 else "vmem"
+    record_dispatch("persweep", method=variant, reason=reason)
     return solvebakp_persweep_kernel(
         x_t, y, cn=cn, inv_cn=inv_cn, a0=a0, block=block, max_iter=max_iter,
         atol=atol, rtol=rtol, omega=omega, variant=variant,

@@ -48,6 +48,8 @@ import time
 
 import numpy as np
 
+from repro import obs
+
 
 def ensure_mesh_devices(spec: str) -> None:
     """Force enough virtual CPU devices for ``spec`` BEFORE jax imports.
@@ -156,7 +158,7 @@ def run_async(args, engine, reqs):
     rejected = 0
     with AsyncDispatcher(engine, cfg) as disp:
         t0 = time.perf_counter()
-        base = time.monotonic()
+        base = obs.now()  # same clock as every SolveTicket timestamp
         for i, req in enumerate(reqs):
             now = time.perf_counter() - t0
             if arrivals[i] > now:
@@ -240,6 +242,19 @@ def main():
     ap.add_argument("--max-queue", type=int, default=1024)
     ap.add_argument("--backpressure", choices=["reject", "block"],
                     default="block")
+    # observability (repro.obs)
+    ap.add_argument("--metrics-json", default=None, metavar="PATH",
+                    help="write the final metrics-registry snapshot (solve "
+                         "counts, per-kernel-path latency histograms, cache "
+                         "hit/miss, deadline hit rate, ...) to PATH as JSON")
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    help="serve Prometheus /metrics (+ /metrics.json, "
+                         "/healthz) on this port for the run's duration "
+                         "(0 = ephemeral; the resolved port is printed)")
+    ap.add_argument("--trace-dir", default=None, metavar="DIR",
+                    help="capture a jax profiler trace of the run into DIR "
+                         "(view in TensorBoard/Perfetto; flushes and solver "
+                         "calls appear as named obs.profile_region blocks)")
     args = ap.parse_args()
 
     if args.mesh:
@@ -289,10 +304,41 @@ def main():
                 rng, xs, min(n, args.requests), args.method, args.max_iter,
                 args.rtol, args.thr, tenants=args.tenants))
 
-    if args.mode == "sync":
-        served_reqs, results = run_sync(args, engine, reqs)
-    else:
-        served_reqs, results = run_async(args, engine, reqs)
+    server = None
+    if args.metrics_port is not None:
+        server = obs.start_metrics_server(args.metrics_port,
+                                          registry=engine.registry)
+        print(f"metrics: http://localhost:{server.port}/metrics")
+    if args.trace_dir:
+        obs.start_profiling(args.trace_dir)
+
+    try:
+        if args.mode == "sync":
+            served_reqs, results = run_sync(args, engine, reqs)
+        else:
+            served_reqs, results = run_async(args, engine, reqs)
+    finally:
+        if args.trace_dir:
+            obs.stop_profiling()
+            print(f"profiler trace written to {args.trace_dir}")
+        if args.metrics_json:
+            obs.write_metrics_json(
+                args.metrics_json, registry=engine.registry,
+                extra={"mode": args.mode, "method": args.method,
+                       "requests": args.requests, "obs": args.obs,
+                       "vars": args.vars, "designs": args.designs,
+                       "mesh": args.mesh})
+            print(f"metrics snapshot written to {args.metrics_json}")
+        if server is not None:
+            server.close()
+
+    lat_h = engine.registry.get("serve_solve_latency_seconds")
+    if lat_h is not None and lat_h.count():
+        print("solver-call latency (registry): "
+              f"p50={lat_h.percentile(50)*1e3:.2f}ms "
+              f"p95={lat_h.percentile(95)*1e3:.2f}ms "
+              f"p99={lat_h.percentile(99)*1e3:.2f}ms "
+              f"over {lat_h.count()} calls")
 
     if args.check:
         mapes = []

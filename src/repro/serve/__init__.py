@@ -31,6 +31,13 @@ Layout:
                deadlines, full/deadline/idle flush policy, host-side
                bucketing overlapped with in-flight device solves.
 
+Every layer records into ``repro.obs`` (PR 6): the engine/cache/dispatcher
+dual-write their stats dataclasses and a ``MetricsRegistry`` (injectable;
+the process-global one by default), every ``ServedSolve`` carries a
+``SolveTelemetry`` record, and the exporters
+(``repro.obs.write_metrics_json`` / ``start_metrics_server``) read the
+same registry the benchmarks report from.
+
 Drivers: ``repro.launch.solver_serve`` (CLI; sync + async modes),
 ``benchmarks/serve_throughput.py`` (coalescing speedup vs sequential solve)
 and ``benchmarks/serve_async.py`` (async latency/deadline + warm-start
@@ -38,6 +45,7 @@ sweep savings).
 """
 from repro.core.prepare import PreparedDesign
 from repro.core.spec import SolverSpec
+from repro.obs import SolveTelemetry
 from repro.serve.batching import (bucket_shape, design_fingerprint,
                                   group_requests, next_pow2, pad_x, pad_y,
                                   prepare_request)
@@ -68,6 +76,7 @@ __all__ = [
     "ServeStats",
     "ServedSolve",
     "SolveRequest",
+    "SolveTelemetry",
     "SolveTicket",
     "SolverServeEngine",
     "SolverSpec",

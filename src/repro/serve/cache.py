@@ -36,6 +36,7 @@ from typing import Optional, Tuple
 
 import numpy as np
 
+from repro import obs
 from repro.core.prepare import PreparedDesign, prepare
 from repro.core.spec import SolverSpec
 
@@ -45,6 +46,10 @@ DesignEntry = PreparedDesign
 
 @dataclass
 class CacheStats:
+    """Per-cache counters (convenience mirror of the ``serve_cache_*``
+    families this cache records into its ``repro.obs`` registry — see
+    ``ServeStats`` for the pattern)."""
+
     hits: int = 0
     misses: int = 0
     evictions: int = 0
@@ -53,6 +58,10 @@ class CacheStats:
     def hit_rate(self) -> float:
         total = self.hits + self.misses
         return self.hits / total if total else 0.0
+
+    def as_dict(self) -> dict:
+        return {"hits": self.hits, "misses": self.misses,
+                "evictions": self.evictions, "hit_rate": self.hit_rate}
 
 
 class DesignCache:
@@ -66,10 +75,20 @@ class DesignCache:
     loser's entry is dropped.
     """
 
-    def __init__(self, max_entries: int = 64, max_tenants: int = 64):
+    def __init__(self, max_entries: int = 64, max_tenants: int = 64,
+                 registry: Optional[obs.MetricsRegistry] = None):
         self.max_entries = max_entries
         self.max_tenants = max_tenants
         self.stats = CacheStats()
+        reg = registry or obs.default_registry()
+        self._m_hits = reg.counter(
+            "serve_cache_hits_total", "design-cache lookups served resident")
+        self._m_misses = reg.counter(
+            "serve_cache_misses_total", "design-cache lookups that built")
+        self._m_evictions = reg.counter(
+            "serve_cache_evictions_total", "designs LRU-evicted")
+        self._m_resident = reg.gauge(
+            "serve_cache_entries", "designs currently resident")
         self._lock = threading.Lock()
         self._entries: "OrderedDict[str, PreparedDesign]" = OrderedDict()
 
@@ -87,10 +106,12 @@ class DesignCache:
             if entry is None:
                 if record_stats:
                     self.stats.misses += 1
+                    self._m_misses.inc()
                 return None
             self._entries.move_to_end(key)
             if record_stats:
                 self.stats.hits += 1
+                self._m_hits.inc()
             return entry
 
     def put(self, key: str, entry: PreparedDesign) -> PreparedDesign:
@@ -103,6 +124,8 @@ class DesignCache:
             while len(self._entries) > self.max_entries:
                 self._entries.popitem(last=False)
                 self.stats.evictions += 1
+                self._m_evictions.inc()
+            self._m_resident.set(len(self._entries))
             return entry
 
     def get_or_build(self, key: str, build_x_pad,

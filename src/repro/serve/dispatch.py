@@ -45,13 +45,13 @@ Example::
 from __future__ import annotations
 
 import threading
-import time
 from collections import deque
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro import obs
 from repro.serve.batching import config_key, pad_x, prepare_request, request_bucket
 from repro.serve.engine import ServeConfig, SolverServeEngine
 from repro.serve.types import ServedSolve, SolveRequest
@@ -82,6 +82,11 @@ class DispatchConfig:
 
 @dataclass
 class DispatchStats:
+    """Per-dispatcher counters (convenience mirror of the
+    ``serve_dispatch_*`` families this dispatcher records into its engine's
+    ``repro.obs`` registry — see ``ServeStats`` for the pattern; the
+    registry is what the exporters read)."""
+
     submitted: int = 0
     rejected: int = 0
     completed: int = 0
@@ -101,6 +106,17 @@ class DispatchStats:
             return 1.0
         return 1.0 - self.deadline_misses / total
 
+    def as_dict(self) -> dict:
+        return {"submitted": self.submitted, "rejected": self.rejected,
+                "completed": self.completed,
+                "deadline_misses": self.deadline_misses,
+                "deadline_hit_rate": self.deadline_hit_rate,
+                "fired_full": self.fired_full,
+                "fired_deadline": self.fired_deadline,
+                "fired_idle": self.fired_idle,
+                "fired_drain": self.fired_drain,
+                "max_inflight": self.max_inflight}
+
 
 class SolveTicket:
     """Future-like handle for one dispatched request.
@@ -108,13 +124,14 @@ class SolveTicket:
     ``result()`` blocks until the solve lands (or raises on timeout /
     dispatcher failure).  Timing fields are filled in as the request moves
     through the pipeline: ``submitted_at`` → ``fired_at`` → ``completed_at``
-    (``time.monotonic`` values); ``deadline`` is absolute or None.
+    (``repro.obs.now()`` values — the single serving clock, so queue wait
+    and engine solve time compose); ``deadline`` is absolute or None.
     """
 
     def __init__(self, request: SolveRequest, deadline: Optional[float]):
         self.request = request
         self.deadline = deadline
-        self.submitted_at = time.monotonic()
+        self.submitted_at = obs.now()
         self.fired_at: Optional[float] = None
         self.completed_at: Optional[float] = None
         self.deadline_met: Optional[bool] = None
@@ -140,16 +157,37 @@ class SolveTicket:
             return None
         return self.completed_at - self.submitted_at
 
+    @property
+    def queue_wait_s(self) -> Optional[float]:
+        """Submit → fire wait (None until the batch fires)."""
+        if self.fired_at is None:
+            return None
+        return self.fired_at - self.submitted_at
+
+    @property
+    def telemetry(self):
+        """The completed result's ``repro.obs.SolveTelemetry`` (None until
+        completion, on failure, or when obs is disabled)."""
+        return self._result.telemetry if self._result is not None else None
+
     # ------------------------------------------------- dispatcher-side
     def _complete(self, result: ServedSolve) -> None:
-        self.completed_at = time.monotonic()
+        self.completed_at = obs.now()
         self._result = result
         if self.deadline is not None:
             self.deadline_met = self.completed_at <= self.deadline
+        tel = result.telemetry
+        if tel is not None:
+            # Back-fill the async-path timings the engine can't see: how
+            # long the request waited in the dispatcher before its batch
+            # fired, and how much deadline headroom was left at completion.
+            tel.queue_wait_s = self.queue_wait_s
+            if self.deadline is not None:
+                tel.deadline_margin_s = self.deadline - self.completed_at
         self._event.set()
 
     def _fail(self, exc: BaseException) -> None:
-        self.completed_at = time.monotonic()
+        self.completed_at = obs.now()
         self._exception = exc
         if self.deadline is not None:
             self.deadline_met = False
@@ -181,6 +219,29 @@ class AsyncDispatcher:
                 f"backpressure must be 'reject' or 'block', "
                 f"got {self.config.backpressure!r}")
         self.stats = DispatchStats()
+        reg = self.engine.registry
+        self._m_submitted = reg.counter(
+            "serve_dispatch_submitted_total", "requests accepted by submit()")
+        self._m_rejected = reg.counter(
+            "serve_dispatch_rejected_total",
+            "requests rejected by backpressure")
+        self._m_completed = reg.counter(
+            "serve_dispatch_completed_total",
+            "tickets completed (served or failed)")
+        self._m_deadline_misses = reg.counter(
+            "serve_dispatch_deadline_misses_total",
+            "completed tickets that missed their deadline")
+        self._m_fired = reg.counter(
+            "serve_dispatch_fired_total", "batches fired, by flush reason")
+        self._m_inflight = reg.gauge(
+            "serve_dispatch_inflight",
+            "requests accepted and not yet completed")
+        self._m_queue_wait = reg.histogram(
+            "serve_queue_wait_seconds",
+            "submit-to-fire wait per request", obs.LATENCY_BUCKETS)
+        self._m_req_latency = reg.histogram(
+            "serve_request_latency_seconds",
+            "submit-to-complete latency per request", obs.LATENCY_BUCKETS)
         self._cv = threading.Condition()
         self._intake: deque = deque()
         self._inflight = 0          # accepted and not yet completed
@@ -255,7 +316,7 @@ class AsyncDispatcher:
         if rel is not None and rel <= 0:
             raise ValueError(f"deadline_s must be positive, got {rel}")
         ticket = SolveTicket(
-            request, None if rel is None else time.monotonic() + float(rel))
+            request, None if rel is None else obs.now() + float(rel))
         with self._cv:
             if self._stopping:
                 raise DispatcherStopped("dispatcher stopped")
@@ -265,6 +326,7 @@ class AsyncDispatcher:
             if self._inflight >= self.config.max_queue:
                 if self.config.backpressure == "reject":
                     self.stats.rejected += 1
+                    self._m_rejected.inc()
                     raise QueueFullError(
                         f"dispatcher at capacity ({self.config.max_queue} "
                         f"in flight)")
@@ -274,6 +336,8 @@ class AsyncDispatcher:
                     self._cv.wait(0.01)
             self._inflight += 1
             self.stats.submitted += 1
+            self._m_submitted.inc()
+            self._m_inflight.set(self._inflight)
             self.stats.max_inflight = max(self.stats.max_inflight,
                                           self._inflight)
             self._intake.append(ticket)
@@ -285,13 +349,13 @@ class AsyncDispatcher:
 
         Returns False if ``timeout`` elapsed first.
         """
-        deadline = None if timeout is None else time.monotonic() + timeout
+        deadline = None if timeout is None else obs.now() + timeout
         with self._cv:
             self._draining = True
             self._cv.notify_all()
             while self._inflight > 0:
                 remaining = (None if deadline is None
-                             else deadline - time.monotonic())
+                             else deadline - obs.now())
                 if remaining is not None and remaining <= 0:
                     self._draining = False
                     return False
@@ -336,7 +400,7 @@ class AsyncDispatcher:
                 return
             for ticket in arrivals:
                 self._admit(ticket)
-            now = time.monotonic()
+            now = obs.now()
             fired = self._fire_ready(now, drain_all=draining or stopping)
             if fired:
                 with self._solve_cv:
@@ -390,7 +454,7 @@ class AsyncDispatcher:
         batch = self._pending.setdefault(
             config_key(req, bucket, placement, spec), _PendingBatch())
         batch.tickets.append(ticket)
-        batch.last_join = time.monotonic()
+        batch.last_join = obs.now()
 
     def _fire_ready(self, now: float,
                     drain_all: bool = False) -> List[List[SolveTicket]]:
@@ -422,8 +486,10 @@ class AsyncDispatcher:
                 chunk = batch.tickets[lo:lo + cfg.max_batch]
                 setattr(self.stats, f"fired_{why}",
                         getattr(self.stats, f"fired_{why}") + 1)
+                self._m_fired.inc(1, reason=why)
                 for t in chunk:
                     t.fired_at = now
+                    self._m_queue_wait.observe(now - t.submitted_at)
                 fired.append(chunk)
         return fired
 
@@ -438,7 +504,8 @@ class AsyncDispatcher:
                 self._fail_residual()
                 return
             try:
-                served = self.engine.serve([t.request for t in batch])
+                with obs.span("dispatch.solve_batch", size=len(batch)):
+                    served = self.engine.serve([t.request for t in batch])
                 for ticket, result in zip(batch, served):
                     ticket._complete(result)
             except Exception as exc:  # engine-level failure: fail the batch
@@ -464,11 +531,18 @@ class AsyncDispatcher:
             self._on_complete(residual)
 
     def _on_complete(self, tickets: List[SolveTicket]) -> None:
+        misses = sum(1 for t in tickets if t.deadline_met is False)
         with self._cv:
             self._inflight -= len(tickets)
             self.stats.completed += len(tickets)
             # Failures count as misses too: _fail() marks deadline_met
             # False on any ticket that carried a deadline.
-            self.stats.deadline_misses += sum(
-                1 for t in tickets if t.deadline_met is False)
+            self.stats.deadline_misses += misses
+            self._m_inflight.set(self._inflight)
             self._cv.notify_all()
+        self._m_completed.inc(len(tickets))
+        if misses:
+            self._m_deadline_misses.inc(misses)
+        for t in tickets:
+            if t.latency_s is not None:
+                self._m_req_latency.observe(t.latency_s)

@@ -58,7 +58,6 @@ from __future__ import annotations
 
 import functools
 import math
-import time
 from dataclasses import dataclass
 from typing import List, Optional, Sequence
 
@@ -66,6 +65,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core.prepare import PreparedDesign
 from repro.core.spec import SolverSpec, solver_method
 from repro.kernels.fused_solve import fused_fits
@@ -104,6 +104,17 @@ class ServeConfig:
 
 @dataclass
 class ServeStats:
+    """Per-engine counters.
+
+    A convenience view: the same events stream into the engine's
+    ``repro.obs`` ``MetricsRegistry`` (``serve_*`` families, richer —
+    labelled by method/kernel path/placement and with latency and sweep
+    histograms the plain ints here cannot carry), which is what the
+    exporters read.  These fields stay per-instance ints so multiple
+    engines in one process (tests, benchmarks) keep independent tallies
+    with zero-cost reads.
+    """
+
     requests: int = 0
     solver_calls: int = 0
     multi_rhs_groups: int = 0
@@ -114,6 +125,9 @@ class ServeStats:
     warm_starts: int = 0
     failures: int = 0
     sharded_solves: int = 0      # solver calls routed to a mesh placement
+
+    def as_dict(self) -> dict:
+        return dict(self.__dict__)
 
 
 @functools.lru_cache(maxsize=32)
@@ -153,7 +167,8 @@ class SolverServeEngine:
     as before.
     """
 
-    def __init__(self, config: Optional[ServeConfig] = None, mesh=None):
+    def __init__(self, config: Optional[ServeConfig] = None, mesh=None,
+                 registry: Optional[obs.MetricsRegistry] = None):
         self.config = config or ServeConfig()
         if mesh is not None and not isinstance(mesh, ServeMesh):
             axes = tuple(mesh.axis_names)
@@ -162,9 +177,47 @@ class SolverServeEngine:
             mesh = ServeMesh(mesh=mesh, data_axes=data, model_axis=model)
         self.mesh: Optional[ServeMesh] = mesh
         self.policy = self.config.placement_policy or PlacementPolicy()
+        # One registry for the whole serving stack: the cache and (in the
+        # async path) the dispatcher record into this same instance, so one
+        # exporter snapshot covers intake → cache → solve.  Defaults to the
+        # process-global registry; pass a fresh MetricsRegistry to isolate
+        # (benchmarks comparing engine variants do).
+        self.registry = registry or obs.default_registry()
         self.cache = DesignCache(max_entries=self.config.cache_entries,
-                                 max_tenants=self.config.warm_tenants)
+                                 max_tenants=self.config.warm_tenants,
+                                 registry=self.registry)
         self.stats = ServeStats()
+        reg = self.registry
+        self._m_requests = reg.counter(
+            "serve_requests_total", "requests accepted into flush windows")
+        self._m_solves = reg.counter(
+            "serve_solves_total",
+            "solver calls by batch kind / method / kernel path / placement")
+        self._m_served = reg.counter(
+            "serve_requests_served_total",
+            "requests answered, by batch kind and warm/cold start")
+        self._m_errors = reg.counter(
+            "serve_errors_total",
+            "requests failed, by exception type / method / bucket")
+        self._m_latency = reg.histogram(
+            "serve_solve_latency_seconds",
+            "wall time of one batched solver call (kernel path labelled)",
+            buckets=obs.LATENCY_BUCKETS)
+        self._m_sweeps = reg.histogram(
+            "serve_sweeps",
+            "solver sweeps per request (warm label isolates warm-start "
+            "savings)", buckets=obs.COUNT_BUCKETS)
+        self._m_group = reg.histogram(
+            "serve_group_size", "requests per solver call, by batch kind",
+            buckets=obs.COUNT_BUCKETS)
+        # Bound-series children for the hot label combos: the per-request
+        # and per-solve record sites run on the flush path, and rebuilding
+        # a sorted label key every call is measurable there (the serve_obs
+        # overhead gate holds this under 5%).  Only a handful of combos
+        # exist, so the caches stay tiny.
+        self._c_served: dict = {}
+        self._c_sweeps: dict = {}
+        self._c_solve: dict = {}
         self._pending: List[SolveRequest] = []
         self._seq = 0
 
@@ -233,6 +286,12 @@ class SolverServeEngine:
         if not requests:
             return []
         self.stats.requests += len(requests)
+        self._m_requests.inc(len(requests))
+        with obs.span("engine.flush", requests=len(requests)), \
+                obs.profile_region("engine.flush"):
+            return self._flush(requests)
+
+    def _flush(self, requests: List[SolveRequest]) -> List[ServedSolve]:
         results: List[Optional[ServedSolve]] = [None] * len(requests)
         cfg = self.config
         groups = group_requests(requests, min_obs=cfg.min_obs,
@@ -294,11 +353,26 @@ class SolverServeEngine:
             key, lambda: pad_x(np.asarray(req.x), bucket))
 
     def _fail(self, requests, idxs, bucket, exc, results):
-        """Error results for a poisoned batch (engine keeps serving)."""
-        msg = f"{type(exc).__name__}: {exc}"
+        """Error results for a poisoned batch (engine keeps serving).
+
+        Failures are structured, not just stringly: each request bumps
+        ``serve_errors_total{exception_type,method,bucket}`` and carries a
+        telemetry record naming the failing bucket/method, so a poisoned
+        batch is diagnosable from a metrics scrape alone.
+        """
+        exc_type = type(exc).__name__
+        msg = f"{exc_type}: {exc}"
+        obs.consume_dispatch()  # drop any path a partial dispatch recorded
         for idx in idxs:
             req = requests[idx]
-            obs, nvars = np.asarray(req.x).shape
+            n_obs, nvars = np.asarray(req.x).shape
+            tel = None
+            if obs.enabled():
+                tel = obs.SolveTelemetry(
+                    request_id=req.request_id, tenant_id=req.tenant_id,
+                    bucket=bucket, method=req.method, kernel_path="none",
+                    batch_kind="error", group_size=len(idxs),
+                    batch_size=len(idxs), error_type=exc_type)
             results[idx] = ServedSolve(
                 request_id=req.request_id,
                 coef=np.zeros((nvars,), np.float32),
@@ -310,8 +384,12 @@ class SolverServeEngine:
                 batch_kind="error",
                 group_size=len(idxs),
                 error=msg,
+                telemetry=tel,
             )
             self.stats.failures += 1
+            self._m_errors.inc(1, exception_type=exc_type,
+                               method=req.method,
+                               bucket=f"{bucket[0]}x{bucket[1]}")
 
     def _resolve_a0(self, req: SolveRequest, entry: PreparedDesign):
         """Warm-start coefficients for a request: explicit ``a0`` wins,
@@ -366,33 +444,94 @@ class SolverServeEngine:
         eff = spec.replace(atol=atol)
         if placement is not None and placement.kind == "mesh_2d":
             eff = eff.replace(omega=self.config.omega_2d)
-        return entry.solve(y_dev, a0, spec=eff, placement=placement,
-                           mesh=self.mesh)
+        with obs.profile_region(f"solve/{eff.method}"):
+            return entry.solve(y_dev, a0, spec=eff, placement=placement,
+                               mesh=self.mesh)
+
+    def _record_solve(self, spec: SolverSpec, placement, kind: str,
+                      group_size: int, dt: float, path=None) -> str:
+        """Record one solver call's metrics; returns the kernel path that
+        actually executed.
+
+        The path comes off the thread-local relay the eager dispatch shims
+        filled (``obs.record_dispatch`` in ``repro.core.methods`` /
+        ``repro.kernels.ops``) — a ``bakp_fused`` request that outgrew VMEM
+        reports "xla" here, not what the spec asked for.  ``path`` forces
+        it where the engine knows better (the vmapped batch program).
+        """
+        if path is None:
+            path = obs.consume_dispatch(
+                "sharded" if placement is not None and placement.sharded
+                else "xla")
+        if obs.enabled():
+            placement_kind = (placement.kind if placement is not None
+                              else "single")
+            ck = (kind, spec.method, path, placement_kind)
+            bound = self._c_solve.get(ck)
+            if bound is None:
+                bound = self._c_solve[ck] = (
+                    self._m_solves.labels(kind=kind, method=spec.method,
+                                          path=path,
+                                          placement=placement_kind),
+                    self._m_latency.labels(kind=kind, method=spec.method,
+                                           path=path),
+                    self._m_group.labels(kind=kind))
+            bound[0].inc(1)
+            bound[1].observe(dt)
+            bound[2].observe(group_size)
+        return path
 
     def _strip(self, req: SolveRequest, coef, residual, *, bucket, kind,
                group_size, latency, hit, n_sweeps, converged, entry=None,
-               warm=False, placement=None) -> ServedSolve:
-        obs, nvars = np.asarray(req.x).shape
+               warm=False, placement=None, method="", path="xla"
+               ) -> ServedSolve:
+        n_obs, nvars = np.asarray(req.x).shape
         coef = np.asarray(coef)[:nvars]
-        residual = np.asarray(residual)[:obs]
+        residual = np.asarray(residual)[:n_obs]
         if entry is not None and self.config.warm_cache:
             entry.store_coef(req.tenant_id, coef)
         if warm:
             self.stats.warm_starts += 1
+        sse = float(np.dot(residual, residual))
+        n_sweeps = int(n_sweeps)
+        converged = bool(converged)
+        placement_kind = placement.kind if placement is not None else "single"
+        tel = None
+        if obs.enabled():
+            warm_lbl = "1" if warm else "0"
+            sk = (kind, warm_lbl)
+            served_c = self._c_served.get(sk)
+            if served_c is None:
+                served_c = self._c_served[sk] = self._m_served.labels(
+                    kind=kind, warm=warm_lbl)
+            sweeps_c = self._c_sweeps.get(warm_lbl)
+            if sweeps_c is None:
+                sweeps_c = self._c_sweeps[warm_lbl] = self._m_sweeps.labels(
+                    warm=warm_lbl)
+            served_c.inc(1)
+            sweeps_c.observe(n_sweeps)
+            tel = obs.SolveTelemetry(
+                request_id=req.request_id, tenant_id=req.tenant_id,
+                bucket=bucket, method=method or req.method,
+                kernel_path=path, placement=placement_kind, batch_kind=kind,
+                group_size=group_size, batch_size=group_size,
+                warm_start=warm, cache_hit=hit, n_sweeps=n_sweeps, sse=sse,
+                converged=converged, solve_s=latency)
         return ServedSolve(
             request_id=req.request_id,
             coef=coef,
             residual=residual,
-            sse=float(np.dot(residual, residual)),
-            n_sweeps=int(n_sweeps),
-            converged=bool(converged),
+            sse=sse,
+            n_sweeps=n_sweeps,
+            converged=converged,
             bucket=bucket,
             batch_kind=kind,
             group_size=group_size,
             latency_s=latency,
             cache_hit=hit,
             warm_start=warm,
-            placement=placement.kind if placement is not None else "single",
+            placement=placement_kind,
+            telemetry=tel,
         )
 
     def _solve_multi_rhs(self, requests, idxs, entry, hit, bucket, results,
@@ -435,14 +574,15 @@ class SolverServeEngine:
         # Same design => same real obs for every member of the group.
         obs_real = np.asarray(req0.x).shape[0]
         atol = self._padded_atol(spec.atol, obs_real * k, obs_p * k_pad)
-        t0 = time.perf_counter()
+        t0 = obs.now()
         # ys/a0_mat go in as HOST buffers: the solver entries donate their
         # fresh in-jit transfers on accelerator backends (the steady-state
         # HBM saving of the flush path — see types.donate_default).
         res = self._call_solver(spec, entry, ys, atol, a0=a0_mat,
                                 placement=placement)
         jax.block_until_ready(res.coef)
-        dt = time.perf_counter() - t0
+        dt = obs.now() - t0
+        path = self._record_solve(spec, placement, "multi_rhs", k, dt)
         coef = np.asarray(res.coef)
         resid = np.asarray(res.residual)
         for c, idx in enumerate(idxs):
@@ -450,7 +590,8 @@ class SolverServeEngine:
                 requests[idx], coef[:, c], resid[:, c], bucket=bucket,
                 kind="multi_rhs", group_size=k, latency=dt, hit=hit,
                 n_sweeps=res.n_sweeps, converged=res.converged, entry=entry,
-                warm=a0s[c] is not None, placement=placement)
+                warm=a0s[c] is not None, placement=placement,
+                method=spec.method, path=path)
         self.stats.solver_calls += 1
         self.stats.multi_rhs_groups += 1
         self.stats.multi_rhs_requests += k
@@ -497,10 +638,15 @@ class SolverServeEngine:
                 if a is not None:
                     a0_mat[row] = self._pad_a0(a, vars_p)
             args = args + (jnp.asarray(a0_mat),)
-        t0 = time.perf_counter()
-        res = solver(*args)
-        jax.block_until_ready(res.coef)
-        dt = time.perf_counter() - t0
+        t0 = obs.now()
+        with obs.profile_region(f"solve/vmap/{spec.method}"):
+            res = solver(*args)
+            jax.block_until_ready(res.coef)
+        dt = obs.now() - t0
+        # The vmapped program is one jit'd stack — the eager dispatch shims
+        # never run inside it, so the path is "vmap" by construction.
+        obs.consume_dispatch()
+        path = self._record_solve(spec, None, "vmap", b, dt, path="vmap")
         coef = np.asarray(res.coef)
         resid = np.asarray(res.residual)
         for row, (idx, entry, hit) in enumerate(singles):
@@ -508,7 +654,8 @@ class SolverServeEngine:
                 requests[idx], coef[row], resid[row], bucket=bucket,
                 kind="vmap", group_size=b, latency=dt, hit=hit,
                 n_sweeps=res.n_sweeps[row], converged=res.converged[row],
-                entry=entry, warm=a0s[row] is not None)
+                entry=entry, warm=a0s[row] is not None,
+                method=spec.method, path=path)
         self.stats.solver_calls += 1
         self.stats.vmap_batches += 1
         self.stats.vmap_requests += b
@@ -526,17 +673,18 @@ class SolverServeEngine:
         a0_pad = None
         if a0 is not None:
             a0_pad = self._pad_a0(a0, bucket[1])
-        t0 = time.perf_counter()
+        t0 = obs.now()
         # Host buffers in — see _solve_multi_rhs on donation.
         res = self._call_solver(spec, entry, y_pad, atol,
                                 a0=a0_pad, placement=placement)
         jax.block_until_ready(res.coef)
-        dt = time.perf_counter() - t0
+        dt = obs.now() - t0
+        path = self._record_solve(spec, placement, "single", 1, dt)
         results[idx] = self._strip(
             req, res.coef, res.residual, bucket=bucket, kind="single",
             group_size=1, latency=dt, hit=hit, n_sweeps=res.n_sweeps,
             converged=res.converged, entry=entry, warm=a0_pad is not None,
-            placement=placement)
+            placement=placement, method=spec.method, path=path)
         self.stats.solver_calls += 1
         self.stats.single_solves += 1
         if placement is not None and placement.sharded:

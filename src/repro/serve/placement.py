@@ -48,7 +48,15 @@ from typing import Optional, Tuple
 import numpy as np
 
 import repro.core.methods  # noqa: F401  (populates the method registry)
+from repro import obs
 from repro.core.spec import is_registered, solver_method
+
+# Module-level hooks record to the global default registry (placement is a
+# pure function, not owned by one engine; per-engine routing detail is on
+# serve_solves_total{placement=...}).
+_m_decisions = obs.default_registry().counter(
+    "serve_placement_decisions_total",
+    "placement routing decisions, by level and chosen kind")
 
 
 def _is_shardable(method: str) -> bool:
@@ -152,19 +160,21 @@ def placement_for_bucket(bucket: Tuple[int, int], method: str,
                          policy: PlacementPolicy,
                          smesh: Optional[ServeMesh]) -> Placement:
     """Bucket-level placement (known before design coalescing)."""
-    if smesh is None or not _is_shardable(method):
-        return SINGLE
-    obs_p, vars_p = bucket
-    cells = obs_p * vars_p
-    if (policy.mesh_2d_min_cells is not None
-            and cells >= policy.mesh_2d_min_cells
-            and smesh.model_size > 1
-            and obs_p % smesh.data_size == 0
-            and vars_p % smesh.model_size == 0):
-        return MESH_2D
-    if cells >= policy.obs_shard_min_cells and obs_p % smesh.data_size == 0:
-        return OBS_SHARDED
-    return SINGLE
+    chosen = SINGLE
+    if smesh is not None and _is_shardable(method):
+        obs_p, vars_p = bucket
+        cells = obs_p * vars_p
+        if (policy.mesh_2d_min_cells is not None
+                and cells >= policy.mesh_2d_min_cells
+                and smesh.model_size > 1
+                and obs_p % smesh.data_size == 0
+                and vars_p % smesh.model_size == 0):
+            chosen = MESH_2D
+        elif (cells >= policy.obs_shard_min_cells
+                and obs_p % smesh.data_size == 0):
+            chosen = OBS_SHARDED
+    _m_decisions.inc(1, level="bucket", kind=chosen.kind)
+    return chosen
 
 
 def placement_for_group(base: Placement, k_pad: int,
@@ -176,5 +186,6 @@ def placement_for_group(base: Placement, k_pad: int,
     if (smesh is not None and base.kind == "single"
             and k_pad >= policy.rhs_shard_min_k
             and k_pad % smesh.data_size == 0):
+        _m_decisions.inc(1, level="group", kind=RHS_SHARDED.kind)
         return RHS_SHARDED
     return base

@@ -13,6 +13,7 @@ from typing import Any, Optional
 import numpy as np
 
 from repro.core.spec import SolverSpec
+from repro.obs import SolveTelemetry
 
 
 @dataclass
@@ -109,6 +110,12 @@ class ServedSolve:
     the data axes), "rhs_sharded" (the coalesced group's k axis sharded,
     ``x`` replicated) or "mesh_2d" (rows × columns over a 2-D mesh).  See
     ``repro.serve.placement``.
+
+    ``telemetry`` is the request's ``repro.obs.SolveTelemetry`` record —
+    everything above plus the kernel path that actually executed (fused /
+    persweep / xla / sharded / vmap), and, on the async path, queue wait
+    and deadline margin (back-filled by the dispatcher).  None when obs is
+    disabled (``REPRO_OBS_DISABLED=1``).
     """
 
     request_id: str
@@ -126,6 +133,7 @@ class ServedSolve:
     placement: str = "single"
     error: Optional[str] = None
     extra: dict = field(default_factory=dict)
+    telemetry: Optional[SolveTelemetry] = None
 
     @property
     def ok(self) -> bool:

@@ -56,6 +56,7 @@ SERVE_EXPORTS = {
     "ServeStats",
     "ServedSolve",
     "SolveRequest",
+    "SolveTelemetry",
     "SolveTicket",
     "SolverServeEngine",
     "SolverSpec",

@@ -5,6 +5,7 @@ import numpy as np
 import pytest
 
 from conftest import make_system
+from repro import obs
 from repro.serve import (AsyncDispatcher, DispatchConfig, QueueFullError,
                          ServeConfig, SolveRequest, SolverServeEngine)
 
@@ -33,7 +34,7 @@ class TestFlushPolicy:
     def _ticket(self, disp, req, deadline_s=None):
         from repro.serve.dispatch import SolveTicket
         t = SolveTicket(req, None if deadline_s is None
-                        else time.monotonic() + deadline_s)
+                        else obs.now() + deadline_s)
         disp._admit(t)
         return t
 
@@ -42,9 +43,9 @@ class TestFlushPolicy:
         x, y, _ = make_system(rng, 40, 4)
         for _ in range(2):
             self._ticket(disp, _req(x, y, design_key="d"))
-        assert disp._fire_ready(time.monotonic()) == []
+        assert disp._fire_ready(obs.now()) == []
         self._ticket(disp, _req(x, y, design_key="d"))
-        fired = disp._fire_ready(time.monotonic())
+        fired = disp._fire_ready(obs.now())
         assert len(fired) == 1 and len(fired[0]) == 3
         assert disp.stats.fired_full == 1
         assert not disp._pending
@@ -60,7 +61,7 @@ class TestFlushPolicy:
                              deadline_s=0.2)
         tight = self._ticket(disp, _req(x2, y2, design_key="b"),
                              deadline_s=0.1)
-        fired = disp._fire_ready(time.monotonic())
+        fired = disp._fire_ready(obs.now())
         assert [b[0] for b in fired] == [tight, loose]
         assert disp.stats.fired_deadline == 2
 
@@ -71,7 +72,7 @@ class TestFlushPolicy:
         x, y, _ = make_system(rng, 40, 4)
         for _ in range(10):
             self._ticket(disp, _req(x, y, design_key="d"))
-        fired = disp._fire_ready(time.monotonic())
+        fired = disp._fire_ready(obs.now())
         assert [len(c) for c in fired] == [4, 4, 2]
         assert disp.stats.fired_full == 3
 
@@ -80,15 +81,15 @@ class TestFlushPolicy:
                                 deadline_margin_s=0.01)
         x, y, _ = make_system(rng, 40, 4)
         self._ticket(disp, _req(x, y, design_key="d"), deadline_s=60.0)
-        assert disp._fire_ready(time.monotonic()) == []
+        assert disp._fire_ready(obs.now()) == []
 
     def test_idle_timeout_fires(self, rng):
         disp = self._dispatcher(max_batch=100, idle_timeout_s=0.01)
         x, y, _ = make_system(rng, 40, 4)
         self._ticket(disp, _req(x, y, design_key="d"))
-        assert disp._fire_ready(time.monotonic()) == []
+        assert disp._fire_ready(obs.now()) == []
         time.sleep(0.02)
-        fired = disp._fire_ready(time.monotonic())
+        fired = disp._fire_ready(obs.now())
         assert len(fired) == 1
         assert disp.stats.fired_idle == 1
 
