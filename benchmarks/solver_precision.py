@@ -1,0 +1,215 @@
+"""Mixed-precision X streaming benchmark (SolverSpec.precision).
+
+The solver is memory-bound (~4 flops per x byte — see solver_roofline.py),
+so storing the streamed design in bf16 halves the dominant HBM term and
+doubles the design size that fits the fused megakernel's VMEM budget.  The
+accuracy cost is bounded by the fp32 polish: ``precision="bf16_fp32acc"``
+re-runs ``refine_sweeps`` fp32 sweeps from the bf16 solution.
+
+Two regimes per run, both solved through the public ``prepare``/``solve``
+API with the in-process ``VMEM_BUDGET_BYTES`` shrunk to force each regime
+(kernels run in interpret mode on CPU; the bytes accounting is analytic and
+charges each path the x bytes it *actually* streams, using the recorded
+dispatch path and executed sweep counts — rtol=atol=0 so the counts are
+exact, ``max_iter`` for the low-precision pass plus ``refine_sweeps`` for
+the polish):
+
+  streaming — budget below every fused footprint: fp32 falls back to the
+    XLA per-sweep stream (4 bytes/elt/sweep) while bf16 keeps the per-sweep
+    Pallas stream at 2 bytes/elt/sweep + fp32 polish sweeps;
+  vmem-expansion — budget strictly between the bf16 and fp32 fused
+    working sets: the SAME design dispatches FUSED at bf16 (x crosses HBM
+    once) and falls off the fused path at fp32.
+
+CI gates (--smoke):
+  * post-refinement error vs an fp64 lstsq reference, MAPE
+    (sum |coef - ref| / sum |ref|) <= 1e-4 on every shape;
+  * bf16_fp32acc moves < 0.6x the fp32 x bytes on every shape;
+  * at least one shape dispatches fused at bf16 while fp32 does not.
+
+    PYTHONPATH=src python -m benchmarks.solver_precision --smoke \
+        --json BENCH_precision.json
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import sys
+import time
+from typing import Dict, List
+
+import numpy as np
+
+_CD = importlib.import_module("repro.kernels.cd_sweep")
+
+
+def _make_design(rng, obs: int, nvars: int) -> np.ndarray:
+    """Well-conditioned design (singular values in [1, 2]): the fp32/bf16
+    gap is then pure representation error, not conditioning amplification,
+    and the fp32 polish contracts it geometrically."""
+    u, _ = np.linalg.qr(rng.normal(size=(obs, nvars)))
+    v, _ = np.linalg.qr(rng.normal(size=(nvars, nvars)))
+    return ((u * np.linspace(1.0, 2.0, nvars)) @ v).astype(np.float32)
+
+
+def _x_bytes_moved(obs: int, nvars: int, *, precision: str, path: str,
+                   n_lp: int, n_polish: int, polish_path: str) -> int:
+    """Analytic x-HBM-traffic for one solve, charging executed sweeps.
+
+    fused crosses x once per (sub)solve; persweep/xla stream it per sweep.
+    The polish always streams fp32.
+    """
+    x32 = obs * nvars * 4
+    x16 = obs * nvars * 2
+    lp_elt = x32 if precision == "fp32" else x16
+    total = lp_elt if path == "fused" else n_lp * lp_elt
+    if n_polish:
+        total += x32 if polish_path == "fused" else n_polish * x32
+    return total
+
+
+def bench_precision(shapes=None, *, seed=0) -> List[Dict]:
+    import jax
+
+    from repro import obs as obs_mod
+    from repro.core import SolverSpec, prepare
+    from repro.kernels.fused_solve import fused_vmem_bytes
+
+    if shapes is None:
+        shapes = [
+            # (name, regime, obs, nvars, thr, max_iter, refine)
+            ("tall", "streaming", 4096, 256, 32, 150, 8),
+            ("square", "vmem_expansion", 1024, 1024, 128, 40, 8),
+        ]
+    rng = np.random.default_rng(seed)
+    saved_budget = _CD.VMEM_BUDGET_BYTES
+    rows = []
+    try:
+        for name, regime, obs, nvars, thr, max_iter, refine in shapes:
+            x = _make_design(rng, obs, nvars)
+            a = rng.normal(size=(nvars,)).astype(np.float32)
+            y = (x @ a).astype(np.float32)
+            ref = np.linalg.lstsq(x.astype(np.float64),
+                                  y.astype(np.float64), rcond=None)[0]
+
+            need32 = fused_vmem_bytes(nvars, obs, 1, 4, max_iter=max_iter)
+            need16 = fused_vmem_bytes(nvars, obs, 1, 2, max_iter=max_iter)
+            # streaming: just below the smallest fused footprint (bf16), so
+            # nothing fuses but every per-sweep tile still fits; the
+            # vmem-expansion budget sits strictly between the bf16 and fp32
+            # fused working sets.
+            budget = (need16 - 1 if regime == "streaming"
+                      else (need16 + need32) // 2)
+            _CD.VMEM_BUDGET_BYTES = budget
+            polish_fits = fused_vmem_bytes(
+                nvars, obs, 1, 4, max_iter=refine) <= budget
+
+            # rtol=atol=0: every sweep in the budget executes, so the
+            # analytic bytes accounting below is exact, not modelled.
+            base = SolverSpec(method="bakp_fused", thr=thr,
+                              max_iter=max_iter)
+            design = prepare(x, base)
+            row = {"shape": name, "regime": regime, "obs": obs,
+                   "vars": nvars, "thr": thr, "max_iter": max_iter,
+                   "refine_sweeps": refine,
+                   "vmem_budget_bytes": budget,
+                   "fused_bytes_fp32": need32,
+                   "fused_bytes_bf16": need16}
+            for precision in ("fp32", "bf16", "bf16_fp32acc"):
+                spec = base.replace(precision=precision,
+                                    refine_sweeps=refine)
+                jax.block_until_ready(design.solve(y, spec=spec).coef)
+                obs_mod.consume_dispatch()
+                t0 = time.perf_counter()
+                res = design.solve(y, spec=spec)
+                jax.block_until_ready(res.coef)
+                wall = time.perf_counter() - t0
+                path = obs_mod.consume_dispatch()
+                n_pol = refine if precision == "bf16_fp32acc" else 0
+                bytes_moved = _x_bytes_moved(
+                    obs, nvars, precision=precision, path=path,
+                    n_lp=int(res.n_sweeps) - n_pol, n_polish=n_pol,
+                    polish_path="fused" if polish_fits else "persweep")
+                coef = np.asarray(res.coef, np.float64)
+                row[precision] = {
+                    "path": path, "n_sweeps": int(res.n_sweeps),
+                    "wall_s": wall, "x_bytes_moved": bytes_moved,
+                    "max_abs_err_vs_lstsq":
+                        float(np.max(np.abs(coef - ref))),
+                    "mape_vs_lstsq":
+                        float(np.sum(np.abs(coef - ref))
+                              / np.sum(np.abs(ref))),
+                }
+            row["bf16acc_bytes_ratio_vs_fp32"] = (
+                row["bf16_fp32acc"]["x_bytes_moved"]
+                / row["fp32"]["x_bytes_moved"])
+            rows.append(row)
+    finally:
+        _CD.VMEM_BUDGET_BYTES = saved_budget
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small shapes + CI gates: post-refinement MAPE "
+                         "<= 1e-4, bf16 x bytes < 0.6x fp32, and the "
+                         "vmem-expansion shape dispatches fused at bf16 "
+                         "only")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="merge metrics into a JSON report "
+                         "(BENCH_precision.json)")
+    args = ap.parse_args()
+
+    if args.smoke:
+        shapes = [("tall", "streaming", 2048, 128, 32, 150, 8),
+                  ("square", "vmem_expansion", 512, 64, 16, 40, 8)]
+    else:
+        shapes = None
+    rows = bench_precision(shapes)
+
+    print("name,us_per_call,derived")
+    for r in rows:
+        for prec in ("fp32", "bf16", "bf16_fp32acc"):
+            p = r[prec]
+            print(f"precision[{r['shape']}:o{r['obs']}xv{r['vars']}"
+                  f"/{r['regime']}]/{prec},{p['wall_s']*1e6:.0f},"
+                  f"path={p['path']};n_sweeps={p['n_sweeps']};"
+                  f"xbytes={p['x_bytes_moved']};"
+                  f"mape={p['mape_vs_lstsq']:.2e}")
+
+    worst_mape = max(r["bf16_fp32acc"]["mape_vs_lstsq"] for r in rows)
+    worst_ratio = max(r["bf16acc_bytes_ratio_vs_fp32"] for r in rows)
+    vmem_rows = [r for r in rows if r["regime"] == "vmem_expansion"]
+    fused_expansion = any(
+        r["bf16_fp32acc"]["path"] == "fused" and r["fp32"]["path"] != "fused"
+        for r in vmem_rows)
+    gates = {
+        "worst_post_refine_mape": worst_mape,
+        "mape_pass": worst_mape <= 1e-4,
+        "worst_bf16acc_bytes_ratio": worst_ratio,
+        "bytes_pass": worst_ratio < 0.6,
+        "bf16_only_fused_dispatch_pass": fused_expansion,
+    }
+
+    if args.json:
+        try:
+            from benchmarks.serve_async import write_json
+        except ImportError:  # run as a bare script instead of -m
+            from serve_async import write_json
+        write_json(args.json, {"precision_paths": rows,
+                               "precision_gates": gates})
+
+    ok = (gates["mape_pass"] and gates["bytes_pass"]
+          and gates["bf16_only_fused_dispatch_pass"])
+    print(f"acceptance: post-refinement MAPE {worst_mape:.2e} (<=1e-4) -> "
+          f"{'PASS' if gates['mape_pass'] else 'FAIL'}; "
+          f"bf16acc x-bytes {worst_ratio:.2f}x fp32 (<0.6) -> "
+          f"{'PASS' if gates['bytes_pass'] else 'FAIL'}; "
+          f"bf16-only fused dispatch -> "
+          f"{'PASS' if fused_expansion else 'FAIL'}")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

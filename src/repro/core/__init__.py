@@ -33,20 +33,25 @@ from repro.core.prepare import PreparedDesign, design_fingerprint, prepare
 from repro.core.solvebak import solvebak, solvebak_onesweep
 from repro.core.solvebakf import solvebakf, stepwise_regression_baseline
 from repro.core.solvebakp import block_gram_cholesky, solvebakp
-from repro.core.spec import (MethodEntry, SolverSpec, method_names,
-                             register_method, solver_method)
+from repro.core.spec import (PRECISIONS, MethodEntry, SolverSpec,
+                             UnsupportedSpecError, method_names,
+                             methods_for_precision, register_method,
+                             solver_method)
 from repro.core.types import SelectResult, SolveResult
 
 __all__ = [
     "MethodEntry",
+    "PRECISIONS",
     "PreparedDesign",
     "SelectResult",
     "SolveResult",
     "SolverSpec",
+    "UnsupportedSpecError",
     "block_gram_cholesky",
     "design_fingerprint",
     "fit_linear_probe",
     "method_names",
+    "methods_for_precision",
     "normalize_columns",
     "prepare",
     "register_method",

@@ -151,6 +151,46 @@ def _prep_bakp_gram(p, spec: SolverSpec):
 
 
 # ------------------------------------------------- fused megakernel methods
+def _refine_fp32(p, y, spec: SolverSpec, lp: SolveResult, *, variant: str,
+                 nrhs: int) -> SolveResult:
+    """fp32 polish for ``precision="bf16_fp32acc"`` (iterative refinement).
+
+    Starts from the low-precision solution: the kernel entry's shared
+    ``solve_init`` recomputes the residual in fp32 from the solved
+    coefficients against the fp32 design, then up to ``spec.refine_sweeps``
+    full-precision sweeps run against it — honouring ``atol``/``rtol``, so
+    an already-converged polish exits early.  Routed through the same
+    fused-vs-per-sweep fit check as the main solve (at fp32 itemsize); the
+    per-sweep stream covers designs where only the bf16 copy fits fused.
+
+    Deliberately does NOT record a dispatch: the solve's reported kernel
+    path stays the low-precision route the bulk of the bytes took.
+    """
+    from repro.kernels.fused_solve import fused_fits, fused_solve
+    from repro.kernels.ops import solvebakp_persweep_kernel
+
+    block = spec.thr
+    obs_p = p.x_pad.shape[0]
+    x_t = p.x_t_for(block)
+    kw = dict(inv_cn=p.inv_cn_for(block), a0=lp.coef, block=block,
+              max_iter=spec.refine_sweeps, atol=spec.atol, rtol=spec.rtol,
+              omega=spec.omega if variant == "bakp" else 1.0,
+              variant=variant)
+    if fused_fits(x_t.shape[0], obs_p, nrhs, x_t.dtype.itemsize,
+                  max_iter=spec.refine_sweeps):
+        pol = fused_solve(x_t, y, **kw)
+    else:
+        pol = solvebakp_persweep_kernel(x_t, y, **kw)
+    # Merged accounting: sweeps add, histories concatenate (length
+    # max_iter + refine_sweeps for this precision), convergence is the OR
+    # (a polish that runs its full budget after a converged lp solve is
+    # still a success).
+    return SolveResult(
+        pol.coef, pol.residual, pol.sse, lp.n_sweeps + pol.n_sweeps,
+        lp.converged | pol.converged,
+        jnp.concatenate([lp.history, pol.history]))
+
+
 def _fused_method(variant: str):
     """Whole-solve Pallas megakernel entry (repro.kernels.fused_solve).
 
@@ -161,6 +201,14 @@ def _fused_method(variant: str):
     ``fused_fits``) fall back to the XLA path of the same algorithm, so
     every dispatch route (``solve()``, ``PreparedDesign.solve``, the
     serving engine) serves any size without raising.
+
+    Precision (PR 7): under ``spec.precision != "fp32"`` the kernels
+    stream the handle's bf16 cache tier (``x_bf16_for``) instead — half
+    the HBM traffic, and the VMEM fit check runs at itemsize 2, so designs
+    twice as large stay on the fused path.  A bf16 solve too large even at
+    itemsize 2 falls back to the *per-sweep* bf16 stream (keeping the
+    halved traffic) rather than the fp32 XLA solvers.
+    ``"bf16_fp32acc"`` appends the ``_refine_fp32`` polish.
     """
     def kernel(p, y, spec: SolverSpec, *, a0=None, key=None, placement=None,
                mesh=None):
@@ -169,17 +217,21 @@ def _fused_method(variant: str):
         # import order matter (kernels-first would hit a half-initialised
         # fused_solve through this registration module).
         from repro.kernels.fused_solve import fused_fits, fused_solve
+        from repro.kernels.ops import solvebakp_persweep_kernel
 
         block = spec.thr
+        lowp = spec.precision != "fp32"
+        polish = spec.precision == "bf16_fp32acc" and spec.refine_sweeps > 0
         obs_p, vars_p = p.x_pad.shape
         if not hasattr(y, "ndim"):  # host buffers stay host (donation)
             y = jnp.asarray(y)
         nrhs = y.shape[1] if y.ndim == 2 else 1
         vars_pb = -(-vars_p // block) * block
-        if (spec.max_iter < 1
-                or not fused_fits(vars_pb, obs_p, nrhs,
-                                  p.x_pad.dtype.itemsize,
-                                  max_iter=spec.max_iter)):
+        itemsize = 2 if lowp else p.x_pad.dtype.itemsize
+        fits = (spec.max_iter >= 1
+                and fused_fits(vars_pb, obs_p, nrhs, itemsize,
+                               max_iter=spec.max_iter))
+        if spec.max_iter < 1 or (not fits and not lowp):
             record_dispatch(
                 "xla", method=f"{variant}_fused",
                 reason="max_iter" if spec.max_iter < 1 else "vmem")
@@ -199,12 +251,23 @@ def _fused_method(variant: str):
             xp = jnp if isinstance(a0, jax.Array) else np
             a0 = xp.pad(xp.asarray(a0, jnp.float32),
                         ((0, vars_pb - vars_p),) + ((0, 0),) * (a0.ndim - 1))
-        record_dispatch("fused", method=f"{variant}_fused")
-        res = fused_solve(
-            p.x_t_for(block), y, inv_cn=p.inv_cn_for(block), a0=a0,
-            block=block, max_iter=spec.max_iter, atol=spec.atol,
-            rtol=spec.rtol, omega=spec.omega if variant == "bakp" else 1.0,
-            variant=variant)
+        x_t = p.x_bf16_for(block) if lowp else p.x_t_for(block)
+        kw = dict(inv_cn=p.inv_cn_for(block), a0=a0, block=block,
+                  max_iter=spec.max_iter, atol=spec.atol, rtol=spec.rtol,
+                  omega=spec.omega if variant == "bakp" else 1.0,
+                  variant=variant)
+        if fits:
+            record_dispatch("fused", method=f"{variant}_fused")
+            res = fused_solve(x_t, y, **kw)
+        else:
+            # bf16-only fallback: stream the bf16 copy per sweep instead of
+            # re-inflating to the fp32 XLA path — large designs are exactly
+            # where the halved HBM traffic matters most.
+            record_dispatch("persweep", method=f"{variant}_fused",
+                            reason="vmem")
+            res = solvebakp_persweep_kernel(x_t, y, **kw)
+        if polish:
+            res = _refine_fp32(p, y, spec, res, variant=variant, nrhs=nrhs)
         if vars_pb != vars_p:
             res = res._replace(coef=res.coef[:vars_p])
         return res
@@ -214,6 +277,8 @@ def _fused_method(variant: str):
 def _prep_fused(p, spec: SolverSpec):
     p.x_t_for(spec.thr)
     p.inv_cn_for(spec.thr)
+    if spec.precision != "fp32":
+        p.x_bf16_for(spec.thr)  # quantized cache tier, warmed off-thread
 
 
 # ---------------------------------------------------- greedy selection (A3)
@@ -293,19 +358,23 @@ register_method(MethodEntry(
     summary="exact block CD via cached block-Gram Cholesky (beyond-paper)"))
 register_method(MethodEntry(
     name="bakp_fused", solve=_fused_method("bakp"),
-    consumes=_ITER_FIELDS + ("thr", "omega"),
+    consumes=_ITER_FIELDS + ("thr", "omega", "precision", "refine_sweeps"),
     iterative=True, multi_rhs=True, batchable=False, shardable=False,
-    blocked=True, prepare=_prep_fused,
+    blocked=True, precisions=("fp32", "bf16", "bf16_fp32acc"),
+    prepare=_prep_fused,
     summary="Algorithm 2 on the fused whole-solve Pallas megakernel "
             "(VMEM-resident sweeps, on-chip convergence; XLA fallback "
-            "when the design exceeds the VMEM budget)"))
+            "when the design exceeds the VMEM budget; bf16 X streaming "
+            "with fp32 accumulators + fp32 polish)"))
 register_method(MethodEntry(
     name="bak_fused", solve=_fused_method("bak"),
-    consumes=_ITER_FIELDS + ("thr",),
+    consumes=_ITER_FIELDS + ("thr", "precision", "refine_sweeps"),
     iterative=True, multi_rhs=True, batchable=False, shardable=False,
-    blocked=True, prepare=_prep_fused,
+    blocked=True, precisions=("fp32", "bf16", "bf16_fp32acc"),
+    prepare=_prep_fused,
     summary="Algorithm 1 on the fused megakernel (sequential column "
-            "order; XLA fallback when over the VMEM budget)"))
+            "order; XLA fallback when over the VMEM budget; bf16 X "
+            "streaming with fp32 accumulators + fp32 polish)"))
 register_method(MethodEntry(
     name="lstsq", solve=_lstsq_solve, consumes=(),
     iterative=False, multi_rhs=True,

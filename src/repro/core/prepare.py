@@ -23,6 +23,9 @@ here it is first-class:
     megakernel);
   * the transposed padded device copy per block width (``x_t_for`` — the
     Pallas kernels' (vars, obs) layout, relayouted once and kept resident);
+  * the quantized cache tier (``x_bf16_for`` — the same layout cast to
+    bf16 once, streamed by mixed-precision solves at half the HBM traffic
+    while accumulators stay fp32);
   * block Gram Cholesky factors per ``(thr, ridge)``;
   * per-placement sharded device copies (a mesh backend needs ``x`` laid out
     for its in_specs; the ``device_put`` happens once per placement);
@@ -52,7 +55,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.spec import SolverSpec, solver_method
+from repro.core.spec import (SolverSpec, ensure_precision_supported,
+                             solver_method)
 from repro.core.types import SolveResult, column_norms_sq, safe_inv
 
 
@@ -98,6 +102,7 @@ class PreparedDesign:
     _cn_thr: Dict[int, jax.Array] = field(default_factory=dict)
     _inv_cn: Dict[int, jax.Array] = field(default_factory=dict)
     _x_t: Dict[int, jax.Array] = field(default_factory=dict)
+    _x_bf16: Dict[int, jax.Array] = field(default_factory=dict)
     _warm: "OrderedDict[str, np.ndarray]" = field(default_factory=OrderedDict)
     _sharded: Dict[object, jax.Array] = field(default_factory=dict)
     _lock: threading.RLock = field(default_factory=threading.RLock,
@@ -199,6 +204,21 @@ class PreparedDesign:
                 self._x_t[thr] = x_t
             return self._x_t[thr]
 
+    def x_bf16_for(self, thr: int) -> jax.Array:
+        """Quantized cache tier: ``x_t_for(thr)`` cast to bf16, memoised.
+
+        The mixed-precision sweep kernels stream this copy instead of the
+        fp32 one — half the HBM traffic, half the VMEM footprint — while
+        every accumulator (residual, coef, SSE, norms) stays fp32.  The
+        cast happens once per (design, thr); both copies stay resident so
+        a later ``precision="fp32"`` solve (or the fp32 polish sweeps of
+        ``"bf16_fp32acc"``) reuses ``x_t_for`` untouched.
+        """
+        with self._lock:
+            if thr not in self._x_bf16:
+                self._x_bf16[thr] = self.x_t_for(thr).astype(jnp.bfloat16)
+            return self._x_bf16[thr]
+
     def chol_for(self, thr: int, ridge: float) -> jax.Array:
         """Block-Gram Cholesky factors for (thr, ridge), computed once."""
         from repro.core.solvebakp import block_gram_cholesky
@@ -295,7 +315,7 @@ class PreparedDesign:
         # flush path sheds its steady-state HBM allocation.
         if not hasattr(y, "ndim"):
             y = np.asarray(y, np.float32)
-        entry = solver_method(spec.method)
+        entry = ensure_precision_supported(spec)
         if y.ndim == 2 and not entry.multi_rhs:
             raise ValueError(
                 f"method {spec.method!r} does not support multi-RHS "
@@ -349,7 +369,9 @@ def prepare(
     if x.ndim != 2:
         raise ValueError(f"x must be 2D (obs, vars), got {x.shape}")
     if spec is not None:
-        solver_method(spec.method)  # fail fast on unknown methods
+        # Fail fast on unknown methods and unsupported precisions
+        # (UnsupportedSpecError) before paying the device transfer.
+        ensure_precision_supported(spec)
     prepared = PreparedDesign(
         x_pad=x,
         spec=spec,

@@ -36,6 +36,28 @@ registry is populated by ``repro.core.methods`` at package import.
     by it; ``canonical()`` resets them to defaults so equivalent specs
     compare/hash equal — serving uses this to coalesce requests whose knob
     differences are irrelevant to their method.
+  * ``precision`` — the X-streaming storage precision (PR 7):
+
+      - ``"fp32"``        — full-precision design everywhere (default; a
+        spec constructed without the field is bit-identical in hash and
+        equality to a pre-precision-API spec, so serving/cache keys never
+        cold-start on upgrade).
+      - ``"bf16"``        — the kernels stream a bf16 resident copy of X
+        (half the HBM traffic, double the design size that fits the fused
+        megakernel's VMEM budget) while every accumulator — residual,
+        coefficients, SSE, column norms — stays fp32.  Accuracy lands at
+        the bf16 representation floor (~1e-2 relative).
+      - ``"bf16_fp32acc"`` — the bf16 stream plus ``refine_sweeps`` fp32
+        polish sweeps (iterative refinement: the residual is recomputed in
+        fp32 from the solved coefficients, then swept against the fp32
+        design), recovering full fp32 accuracy the same way the sketching
+        literature recovers it from a cheap approximate first pass.
+
+    A method advertises what it can run via ``MethodEntry.precisions``;
+    requesting an unsupported combination raises the typed
+    ``UnsupportedSpecError`` from ``prepare``/``PreparedDesign.solve``
+    (the serving engine instead downgrades to "fp32" and counts a
+    ``solver_fallback_total{reason="precision"}``).
 """
 from __future__ import annotations
 
@@ -45,6 +67,26 @@ from typing import Callable, Dict, Optional, Tuple
 
 # Spec fields every iterative BAK-family method consumes.
 _ITER_FIELDS = ("max_iter", "atol", "rtol")
+
+# Recognised SolverSpec.precision values (storage precision of the X
+# stream; accumulators are always fp32 — see module doc).
+PRECISIONS = ("fp32", "bf16", "bf16_fp32acc")
+
+# Default fp32 polish budget for precision="bf16_fp32acc" (also what
+# canonical() resets refine_sweeps to when the precision ignores it).
+_REFINE_DEFAULT = 4
+
+
+class UnsupportedSpecError(ValueError):
+    """A structurally valid ``SolverSpec`` names a capability its method
+    does not implement (e.g. ``precision="bf16"`` on a method whose
+    ``MethodEntry.precisions`` is fp32-only).
+
+    A subclass of ``ValueError`` so pre-existing error handling keeps
+    working, but typed so callers (the serving engine's downgrade path,
+    batch validators) can catch exactly this case without string-matching
+    assorted ValueErrors.
+    """
 
 
 @dataclass(frozen=True)
@@ -62,6 +104,13 @@ class SolverSpec:
                 needs a PRNG ``key`` at solve time).
       ridge:    Tikhonov diagonal for the "normal" baseline and for
                 ``mode="gram"`` block Gram factorisations.
+      precision: storage precision of the X stream — "fp32" (default),
+                "bf16" or "bf16_fp32acc" (see module doc).  Accumulators
+                are always fp32; "bf16_fp32acc" adds the fp32 polish.
+      refine_sweeps: fp32 polish-sweep budget for "bf16_fp32acc" (the
+                polish still honours ``atol``/``rtol`` early exit, so this
+                is a cap, not a fixed cost).  Ignored by every other
+                precision — ``canonical()`` resets it there.
 
     Warm starts (``a0``) and PRNG keys are solve-time arguments — see
     ``PreparedDesign.solve``.  Direct methods ignore ``a0``.
@@ -75,6 +124,8 @@ class SolverSpec:
     omega: float = 1.0
     order: str = "cyclic"
     ridge: float = 1e-6
+    precision: str = "fp32"
+    refine_sweeps: int = _REFINE_DEFAULT
 
     def __post_init__(self):
         # Type-normalise so e.g. rtol=0 and rtol=0.0 hash identically
@@ -84,8 +135,19 @@ class SolverSpec:
         # request's batch instead of failing a whole flush at grouping.
         object.__setattr__(self, "max_iter", int(self.max_iter))
         object.__setattr__(self, "thr", int(self.thr))
+        object.__setattr__(self, "refine_sweeps", int(self.refine_sweeps))
         for f in ("atol", "rtol", "omega", "ridge"):
             object.__setattr__(self, f, float(getattr(self, f)))
+        # precision names a closed value set, so it IS range-checked here
+        # (a typo'd precision is a malformed spec, not a per-kernel knob);
+        # whether a given *method* supports it is a capability question
+        # answered later by ensure_precision_supported — the split lets the
+        # serving engine downgrade unsupported combinations instead of
+        # rejecting the request at construction.
+        if self.precision not in PRECISIONS:
+            raise ValueError(
+                f"precision must be one of {PRECISIONS}, "
+                f"got {self.precision!r}")
         # Unknown methods fail on use (registry population happens at
         # repro.core import); validate eagerly when the registry is live.
         if _REGISTRY and self.method not in _REGISTRY:
@@ -102,6 +164,14 @@ class SolverSpec:
         Two requests whose canonical specs compare equal can legally share
         one compiled solve — the serving engine groups on this (e.g. any
         mix of ``max_iter``/``thr`` still coalesces under "lstsq").
+
+        Precision normalisation: a method that never consumes ``precision``
+        has it reset to "fp32" here, so legacy-kwargs requests, pre-PR-7
+        pickled configs and new fp32 requests all land on byte-identical
+        grouping/``config_key``/warm-coef keys — no compiled-program or
+        cache cold-start on upgrade.  ``refine_sweeps`` only changes the
+        result under ``precision="bf16_fp32acc"``, so any other precision
+        resets it too (mixed refine budgets still coalesce under fp32).
         """
         entry = solver_method(self.method)
         changes = {
@@ -109,7 +179,11 @@ class SolverSpec:
             for f in dataclasses.fields(self)
             if f.name != "method" and f.name not in entry.consumes
         }
-        return self.replace(**changes) if changes else self
+        c = self.replace(**changes) if changes else self
+        if (c.precision != "bf16_fp32acc"
+                and c.refine_sweeps != _REFINE_DEFAULT):
+            c = c.replace(refine_sweeps=_REFINE_DEFAULT)
+        return c
 
 
 @dataclass(frozen=True)
@@ -134,6 +208,11 @@ class MethodEntry:
                  cached column-norm layout the kernel wants.
       needs_chol: wants precomputed block-Gram Cholesky factors
                  (``PreparedDesign.chol_for``).
+      precisions: ``SolverSpec.precision`` values this method can run —
+                 the capability the registry/engine/placement check exactly
+                 like ``shardable``.  Default fp32-only; the Pallas kernel
+                 methods additionally stream a bf16 X
+                 (``PreparedDesign.x_bf16_for``) with fp32 accumulators.
       prepare:   optional hook ``(prepared, spec) -> None`` warming the
                  per-design state this method reuses (column norms for a
                  given ``thr``, Gram factors, ...); run by ``prepare()`` and
@@ -153,6 +232,7 @@ class MethodEntry:
     shardable: bool = False
     blocked: bool = False
     needs_chol: bool = False
+    precisions: Tuple[str, ...] = ("fp32",)
     prepare: Optional[Callable] = None
     vmap_one: Optional[Callable] = None
     summary: str = ""
@@ -192,6 +272,31 @@ def is_registered(name: str) -> bool:
 def shardable_methods() -> Tuple[str, ...]:
     """Methods with a mesh-sharded backend (serving placement eligibility)."""
     return tuple(n for n, e in _REGISTRY.items() if e.shardable)
+
+
+def methods_for_precision(precision: str) -> Tuple[str, ...]:
+    """Methods whose registry entry supports ``precision`` (serving/CLI
+    eligibility listing, the precision analogue of ``shardable_methods``)."""
+    return tuple(n for n, e in _REGISTRY.items() if precision in e.precisions)
+
+
+def ensure_precision_supported(spec: SolverSpec) -> MethodEntry:
+    """Look up ``spec.method`` and verify it implements ``spec.precision``.
+
+    The single choke point for precision capability: ``prepare()`` and
+    ``PreparedDesign.solve`` both call it, so an unsupported combination
+    always surfaces as the one typed ``UnsupportedSpecError`` (never
+    assorted ValueErrors from deep inside a kernel).  Returns the entry so
+    callers don't pay a second registry lookup.
+    """
+    entry = solver_method(spec.method)
+    if spec.precision not in entry.precisions:
+        raise UnsupportedSpecError(
+            f"method {spec.method!r} does not support "
+            f"precision={spec.precision!r} (supports {entry.precisions}); "
+            f"pick one of methods {methods_for_precision(spec.precision)} "
+            f"or precision='fp32'")
+    return entry
 
 
 def batchable_methods() -> Tuple[str, ...]:

@@ -53,9 +53,14 @@ class SelectResult(NamedTuple):
 
 
 def column_norms_sq(x: jax.Array) -> jax.Array:
-    """Squared column norms ``⟨x_j, x_j⟩`` accumulated in fp32, shape (vars,)."""
-    xf = x.astype(jnp.float32)
-    return jnp.einsum("ij,ij->j", xf, xf)
+    """Squared column norms ``⟨x_j, x_j⟩`` accumulated in fp32, shape (vars,).
+
+    ``preferred_element_type`` forces the *accumulator* to fp32 even for a
+    bf16 design — an in-dtype accumulation would lose norm accuracy that
+    ``safe_inv``/``inv_cn`` then amplifies in every sweep's update.
+    """
+    return jnp.einsum("ij,ij->j", x, x,
+                      preferred_element_type=jnp.float32)
 
 
 def column_norms_sq_t(x_t: jax.Array) -> jax.Array:
@@ -64,10 +69,11 @@ def column_norms_sq_t(x_t: jax.Array) -> jax.Array:
     A paper-"column" is a contiguous row of ``x_t``, so the norms reduce
     over the trailing (obs) axis directly — no ``x_t.T`` materialisation,
     which for the kernel wrappers used to be a full (obs, vars) relayout
-    just to throw it away after one reduction.
+    just to throw it away after one reduction.  Accumulates in fp32
+    regardless of input dtype (see ``column_norms_sq``).
     """
-    xf = x_t.astype(jnp.float32)
-    return jnp.einsum("vo,vo->v", xf, xf)
+    return jnp.einsum("vo,vo->v", x_t, x_t,
+                      preferred_element_type=jnp.float32)
 
 
 def safe_inv(cn: jax.Array) -> jax.Array:

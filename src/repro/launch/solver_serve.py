@@ -71,7 +71,8 @@ def ensure_mesh_devices(spec: str) -> None:
 
 
 def build_requests(rng, xs, n, method, max_iter, rtol, thr, noise=0.0,
-                   tenants=0, deadline_s=None):
+                   tenants=0, deadline_s=None, precision="fp32",
+                   refine_sweeps=None):
     """Requests cycling over the shared design matrices ``xs``.
 
     ``design_key`` is trusted identity — it must only be reused for the SAME
@@ -80,7 +81,9 @@ def build_requests(rng, xs, n, method, max_iter, rtol, thr, noise=0.0,
     """
     from repro.serve import SolveRequest, SolverSpec
 
-    spec = SolverSpec(method=method, max_iter=max_iter, rtol=rtol, thr=thr)
+    kw = {} if refine_sweeps is None else {"refine_sweeps": refine_sweeps}
+    spec = SolverSpec(method=method, max_iter=max_iter, rtol=rtol, thr=thr,
+                      precision=precision, **kw)
     designs = len(xs)
     nvars = xs[0].shape[1]
     reqs = []
@@ -213,6 +216,17 @@ def main():
                     help="sync mode: requests per flush window")
     ap.add_argument("--tenants", type=int, default=0,
                     help="recurring tenant ids (0 = off; enables warm starts)")
+    ap.add_argument("--precision", default="fp32",
+                    choices=["fp32", "bf16", "bf16_fp32acc"],
+                    help="X-stream storage precision (SolverSpec.precision): "
+                         "bf16 halves HBM traffic with fp32 accumulators; "
+                         "bf16_fp32acc adds fp32 polish sweeps recovering "
+                         "full precision.  Methods without bf16 support are "
+                         "downgraded to fp32 by the engine (counted in "
+                         "solver_fallback_total{reason='precision'})")
+    ap.add_argument("--refine-sweeps", type=int, default=None,
+                    help="fp32 polish-sweep cap for --precision "
+                         "bf16_fp32acc (default: SolverSpec's)")
     ap.add_argument("--prefer-fused", action="store_true",
                     help="upgrade 'bakp' requests to the fused whole-solve "
                          "Pallas megakernel (method 'bakp_fused') when the "
@@ -279,14 +293,19 @@ def main():
             rhs_shard_min_k=args.rhs_shard_min_k)
     engine = SolverServeEngine(
         ServeConfig(placement_policy=policy,
-                    prefer_fused=args.prefer_fused),
+                    prefer_fused=args.prefer_fused,
+                    precision=(args.precision if args.precision != "fp32"
+                               else None)),
         mesh=smesh)
     xs = [rng.normal(size=(args.obs, args.vars)).astype(np.float32)
           for _ in range(args.designs)]
+    req_kw = dict(tenants=args.tenants, precision=args.precision,
+                  refine_sweeps=args.refine_sweeps)
     reqs = build_requests(rng, xs, args.requests, args.method, args.max_iter,
-                          args.rtol, args.thr, tenants=args.tenants,
+                          args.rtol, args.thr,
                           deadline_s=(args.deadline_ms / 1e3
-                                      if args.mode == "async" else None))
+                                      if args.mode == "async" else None),
+                          **req_kw)
 
     # Warmup: compile every (bucket, k, B) program this stream will need.
     # Async batch compositions vary with arrival timing, so warm a range of
@@ -302,7 +321,7 @@ def main():
         for _ in range(2 if args.tenants else 1):
             engine.serve(build_requests(
                 rng, xs, min(n, args.requests), args.method, args.max_iter,
-                args.rtol, args.thr, tenants=args.tenants))
+                args.rtol, args.thr, **req_kw))
 
     server = None
     if args.metrics_port is not None:

@@ -44,7 +44,7 @@ and ``benchmarks/serve_async.py`` (async latency/deadline + warm-start
 sweep savings).
 """
 from repro.core.prepare import PreparedDesign
-from repro.core.spec import SolverSpec
+from repro.core.spec import SolverSpec, UnsupportedSpecError
 from repro.obs import SolveTelemetry
 from repro.serve.batching import (bucket_shape, design_fingerprint,
                                   group_requests, next_pow2, pad_x, pad_y,
@@ -80,6 +80,7 @@ __all__ = [
     "SolveTicket",
     "SolverServeEngine",
     "SolverSpec",
+    "UnsupportedSpecError",
     "build_serve_mesh",
     "mesh_device_count",
     "placement_for_bucket",

@@ -100,6 +100,12 @@ class ServeConfig:
     placement_policy: Optional[PlacementPolicy] = None  # None → defaults
     omega_2d: float = 0.5        # damping for the 2-D mesh placement (its
     # cross-device Jacobi block is D·thr wide — see core.distributed)
+    precision: Optional[str] = None  # engine-level X-stream precision policy
+    # ("bf16"/"bf16_fp32acc"): applied to legacy per-field requests exactly
+    # like omega/ridge (an explicit SolveRequest.spec stays authoritative).
+    # Requests whose effective method lacks the precision downgrade to
+    # "fp32" with a solver_fallback_total{reason="precision"} count instead
+    # of erroring their batch (see spec_for).
 
 
 @dataclass
@@ -201,8 +207,15 @@ class SolverServeEngine:
             "requests failed, by exception type / method / bucket")
         self._m_latency = reg.histogram(
             "serve_solve_latency_seconds",
-            "wall time of one batched solver call (kernel path labelled)",
+            "wall time of one batched solver call (kernel path and X-stream "
+            "precision labelled)",
             buckets=obs.LATENCY_BUCKETS)
+        # Same family the eager dispatch shims (obs.record_dispatch) feed —
+        # the engine's precision downgrade is one more fallback cause, and
+        # sharing the family keeps one dashboard query covering both.
+        self._m_fallback = reg.counter(
+            "solver_fallback_total",
+            "solves re-routed off their requested kernel path")
         self._m_sweeps = reg.histogram(
             "serve_sweeps",
             "solver sweeps per request (warm label isolates warm-start "
@@ -228,29 +241,53 @@ class SolverServeEngine:
             return None
         return placement_for_bucket(bucket, method, self.policy, self.mesh)
 
-    def spec_for(self, req: SolveRequest) -> SolverSpec:
+    def spec_for(self, req: SolveRequest, *, record: bool = False
+                 ) -> SolverSpec:
         """The effective ``SolverSpec`` a request solves under.
 
         An explicit ``SolveRequest.spec`` is authoritative; legacy
-        per-field requests get the engine-level ``omega``/``ridge``
-        (``ServeConfig``) applied, preserving the pre-spec behaviour where
-        those two knobs were engine configuration.
+        per-field requests get the engine-level ``omega``/``ridge``/
+        ``precision`` (``ServeConfig``) applied, preserving the pre-spec
+        behaviour where those knobs were engine configuration.
+
+        A precision the effective method cannot run (``MethodEntry.
+        precisions``) downgrades to "fp32" here — the engine serves the
+        request at full precision rather than erroring its whole batch —
+        counting ``solver_fallback_total{reason="precision"}``.  The count
+        fires only under ``record=True``: ``spec_for`` runs several times
+        per request on the flush path (grouping, then each solve body), and
+        only the grouping pass (``_flush``'s ``spec_fn``) is once-per-
+        request.
         """
         spec = req.solver_spec()
         if req.spec is None:
             spec = spec.replace(omega=self.config.omega,
                                 ridge=self.config.ridge)
+            if (self.config.precision is not None
+                    and spec.precision != self.config.precision):
+                spec = spec.replace(precision=self.config.precision)
+        # The bf16 X stream halves the resident itemsize, so the fit check
+        # (and therefore the upgrade) sees twice the VMEM headroom.
+        itemsize = 2 if spec.precision != "fp32" else 4
         if (self.config.prefer_fused and self.mesh is None
                 and spec.method == "bakp" and spec.max_iter >= 1):
             # Fused eligibility mirrors the method's own dispatch check
             # (nrhs estimated at 1 — the method kernel re-checks with the
-            # real coalesced k and falls back to XLA "bakp" when it grew
-            # past the budget, so the upgrade is always safe).
+            # real coalesced k and falls back when it grew past the budget,
+            # so the upgrade is always safe).
             bucket = request_bucket(req, min_obs=self.config.min_obs,
                                     min_vars=self.config.min_vars)
             vars_pb = -(-bucket[1] // spec.thr) * spec.thr
-            if fused_fits(vars_pb, bucket[0], 1, 4, max_iter=spec.max_iter):
+            if fused_fits(vars_pb, bucket[0], 1, itemsize,
+                          max_iter=spec.max_iter):
                 spec = spec.replace(method="bakp_fused")
+        if (spec.precision != "fp32"
+                and spec.precision not in
+                solver_method(spec.method).precisions):
+            if record:
+                self._m_fallback.inc(1, method=spec.method,
+                                     reason="precision")
+            spec = spec.replace(precision="fp32")
         return spec
 
     # ------------------------------------------------------------- intake
@@ -294,10 +331,12 @@ class SolverServeEngine:
     def _flush(self, requests: List[SolveRequest]) -> List[ServedSolve]:
         results: List[Optional[ServedSolve]] = [None] * len(requests)
         cfg = self.config
-        groups = group_requests(requests, min_obs=cfg.min_obs,
-                                min_vars=cfg.min_vars,
-                                placement_fn=self.placement_for,
-                                spec_fn=self.spec_for)
+        groups = group_requests(
+            requests, min_obs=cfg.min_obs, min_vars=cfg.min_vars,
+            placement_fn=self.placement_for,
+            # The grouping pass is the once-per-request spec resolution, so
+            # it is where a precision downgrade gets counted.
+            spec_fn=lambda r: self.spec_for(r, record=True))
         for outer, designs in groups.items():
             bucket = outer[0]
             method = outer[1]
@@ -466,7 +505,7 @@ class SolverServeEngine:
         if obs.enabled():
             placement_kind = (placement.kind if placement is not None
                               else "single")
-            ck = (kind, spec.method, path, placement_kind)
+            ck = (kind, spec.method, path, placement_kind, spec.precision)
             bound = self._c_solve.get(ck)
             if bound is None:
                 bound = self._c_solve[ck] = (
@@ -474,7 +513,8 @@ class SolverServeEngine:
                                           path=path,
                                           placement=placement_kind),
                     self._m_latency.labels(kind=kind, method=spec.method,
-                                           path=path),
+                                           path=path,
+                                           precision=spec.precision),
                     self._m_group.labels(kind=kind))
             bound[0].inc(1)
             bound[1].observe(dt)

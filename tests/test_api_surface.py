@@ -14,14 +14,17 @@ from repro.core import SolverSpec, method_names, solver_method
 
 CORE_EXPORTS = {
     "MethodEntry",
+    "PRECISIONS",
     "PreparedDesign",
     "SelectResult",
     "SolveResult",
     "SolverSpec",
+    "UnsupportedSpecError",
     "block_gram_cholesky",
     "design_fingerprint",
     "fit_linear_probe",
     "method_names",
+    "methods_for_precision",
     "normalize_columns",
     "prepare",
     "register_method",
@@ -60,6 +63,7 @@ SERVE_EXPORTS = {
     "SolveTicket",
     "SolverServeEngine",
     "SolverSpec",
+    "UnsupportedSpecError",
     "build_serve_mesh",
     "mesh_device_count",
     "placement_for_bucket",
@@ -82,21 +86,27 @@ SOLVER_SPEC_FIELDS = {
     "omega": 1.0,
     "order": "cyclic",
     "ridge": 1e-6,
+    "precision": "fp32",
+    "refine_sweeps": 4,
 }
 
-# method -> (iterative, multi_rhs, batchable, shardable)
+_ALL_PRECISIONS = ("fp32", "bf16", "bf16_fp32acc")
+
+# method -> (iterative, multi_rhs, batchable, shardable, precisions)
 METHOD_CAPABILITIES = {
-    "bak": (True, True, True, False),
-    "bakp": (True, True, True, True),
-    "bakp_gram": (True, True, True, True),
+    "bak": (True, True, True, False, ("fp32",)),
+    "bakp": (True, True, True, True, ("fp32",)),
+    "bakp_gram": (True, True, True, True, ("fp32",)),
     # The fused megakernel methods are single-device whole-solve launches:
     # neither vmap-batchable (a batched pallas whole-solve would multiply
     # the VMEM residency) nor mesh-shardable (route big buckets to "bakp").
-    "bakp_fused": (True, True, False, False),
-    "bak_fused": (True, True, False, False),
-    "lstsq": (False, True, False, False),
-    "normal": (False, True, False, False),
-    "bakf": (False, False, False, False),
+    # They are the only methods streaming the bf16 X cache tier (fp32
+    # accumulators; "bf16_fp32acc" adds the fp32 polish sweeps).
+    "bakp_fused": (True, True, False, False, _ALL_PRECISIONS),
+    "bak_fused": (True, True, False, False, _ALL_PRECISIONS),
+    "lstsq": (False, True, False, False, ("fp32",)),
+    "normal": (False, True, False, False, ("fp32",)),
+    "bakf": (False, False, False, False, ("fp32",)),
 }
 
 
@@ -127,13 +137,33 @@ def test_solver_spec_fields():
 
 def test_method_registry_snapshot():
     assert set(method_names()) == set(METHOD_CAPABILITIES)
-    for name, (it, mrhs, batch, shard) in METHOD_CAPABILITIES.items():
+    for name, (it, mrhs, batch, shard, precs) in METHOD_CAPABILITIES.items():
         e = solver_method(name)
-        assert (e.iterative, e.multi_rhs, e.batchable, e.shardable) == \
-            (it, mrhs, batch, shard), name
+        assert (e.iterative, e.multi_rhs, e.batchable, e.shardable,
+                e.precisions) == (it, mrhs, batch, shard, precs), name
         # Every method consumes a subset of real SolverSpec fields.
         field_names = {f.name for f in dataclasses.fields(SolverSpec)}
         assert set(e.consumes) <= field_names, name
+
+
+def test_canonical_precision_key_compat():
+    """precision="fp32" specs hash/compare identically to pre-precision
+    specs, so serving config_keys, warm-coef LRU keys and compiled-program
+    caches never cold-start on upgrade."""
+    legacy_like = SolverSpec(method="bakp", max_iter=30, rtol=1e-8)
+    explicit = SolverSpec(method="bakp", max_iter=30, rtol=1e-8,
+                          precision="fp32", refine_sweeps=9)
+    assert legacy_like.canonical() == explicit.canonical()
+    assert hash(legacy_like.canonical()) == hash(explicit.canonical())
+    # refine_sweeps only differentiates under bf16_fp32acc.
+    a = SolverSpec(method="bakp_fused", precision="bf16_fp32acc",
+                   refine_sweeps=2)
+    b = SolverSpec(method="bakp_fused", precision="bf16_fp32acc",
+                   refine_sweeps=8)
+    assert a.canonical() != b.canonical()
+    c = SolverSpec(method="bakp_fused", precision="bf16", refine_sweeps=2)
+    d = SolverSpec(method="bakp_fused", precision="bf16", refine_sweeps=8)
+    assert c.canonical() == d.canonical()
 
 
 def test_design_entry_is_prepared_design():
