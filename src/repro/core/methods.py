@@ -361,7 +361,7 @@ register_method(MethodEntry(
     consumes=_ITER_FIELDS + ("thr", "omega", "precision", "refine_sweeps"),
     iterative=True, multi_rhs=True, batchable=False, shardable=False,
     blocked=True, precisions=("fp32", "bf16", "bf16_fp32acc"),
-    prepare=_prep_fused,
+    lane="fused", prepare=_prep_fused,
     summary="Algorithm 2 on the fused whole-solve Pallas megakernel "
             "(VMEM-resident sweeps, on-chip convergence; XLA fallback "
             "when the design exceeds the VMEM budget; bf16 X streaming "
@@ -371,7 +371,7 @@ register_method(MethodEntry(
     consumes=_ITER_FIELDS + ("thr", "precision", "refine_sweeps"),
     iterative=True, multi_rhs=True, batchable=False, shardable=False,
     blocked=True, precisions=("fp32", "bf16", "bf16_fp32acc"),
-    prepare=_prep_fused,
+    lane="fused", prepare=_prep_fused,
     summary="Algorithm 1 on the fused megakernel (sequential column "
             "order; XLA fallback when over the VMEM budget; bf16 X "
             "streaming with fp32 accumulators + fp32 polish)"))

@@ -30,7 +30,12 @@ here it is first-class:
   * per-placement sharded device copies (a mesh backend needs ``x`` laid out
     for its in_specs; the ``device_put`` happens once per placement);
   * an LRU of per-tenant warm-start coefficients (serving re-solves with
-    drifting ``y`` start from the tenant's last solution).
+    drifting ``y`` start from the tenant's last solution);
+  * device ownership for the serving lanes: a ``home`` placement kind
+    (``bind_home`` — first-wins) plus the ``resident_lanes()`` summary of
+    which per-lane tiers (fused transposed/bf16 copies, sharded mesh
+    copies) are currently built; ``warm_lane_state`` warms all of them for
+    one (spec, placement) off the lane threads.
 
 All of that state is mutated lazily from multiple threads in the serving
 path (the async dispatcher pre-warms entries while the solver thread reads
@@ -96,6 +101,10 @@ class PreparedDesign:
     spec: Optional[SolverSpec] = None     # default spec bound by prepare()
     fingerprint: Optional[str] = None
     mesh: Optional[object] = None         # serve.placement.ServeMesh-like
+    home: Optional[str] = None            # home placement kind (lane home);
+    # bound first-wins by bind_home() — the serving cache stamps it on the
+    # first (pre)warm, so a design's primary residency is queryable even
+    # after later solves add other lane tiers (see resident_lanes()).
     chol: Dict[Tuple[int, float], jax.Array] = field(default_factory=dict)
     max_tenants: int = 64
     _cn: Optional[jax.Array] = field(default=None, repr=False)
@@ -269,6 +278,51 @@ class PreparedDesign:
         entry = solver_method(spec.method)
         if entry.prepare is not None:
             entry.prepare(self, spec)
+
+    # ------------------------------------------------- lane residency
+    def bind_home(self, placement=None) -> str:
+        """Bind (first-wins) and return this design's home placement kind.
+
+        The home is where the design primarily serves — ``"single"`` or a
+        sharded placement kind.  First-wins: a design warmed for an
+        obs-sharded bucket keeps that home even when later single-device
+        leftovers also solve against it, so eviction/streaming policies
+        can ask "whose device memory does this design own?" with one read.
+        """
+        kind = placement.kind if placement is not None else "single"
+        with self._lock:
+            if self.home is None:
+                self.home = kind
+            return self.home
+
+    def warm_lane_state(self, spec: SolverSpec, placement=None,
+                        mesh=None) -> None:
+        """Warm every lane-resident tier a (spec, placement) solve needs:
+        the method's prepare hook (thr-padded norms, Gram factors, the
+        fused kernel's transposed/bf16 copies) plus the placement's
+        sharded device copy — and bind the design's home.  Idempotent;
+        the serving cache / dispatcher pre-warm call this off the lane
+        threads so first solves find their residents built.
+        ``mesh`` defaults to the one bound at ``prepare`` time."""
+        self.bind_home(placement)
+        self.warm_method_state(spec)
+        mesh = mesh if mesh is not None else self.mesh
+        if placement is not None and placement.sharded and mesh is not None:
+            self.x_for_placement(placement, mesh)
+
+    def resident_lanes(self) -> Tuple[str, ...]:
+        """Which per-lane resident tiers this design currently holds:
+        always ``"single"`` (``x_pad``), plus ``"fused"`` (transposed
+        Pallas layout), ``"fused_bf16"`` (quantized tier) and each sharded
+        placement kind with a resident mesh copy."""
+        with self._lock:
+            out = ["single"]
+            if self._x_t:
+                out.append("fused")
+            if self._x_bf16:
+                out.append("fused_bf16")
+            out.extend(sorted({p.kind for p in self._sharded}))
+            return tuple(out)
 
     # ---------------------------------------------------------------- solve
     def solve(

@@ -213,6 +213,13 @@ class MethodEntry:
                  like ``shardable``.  Default fp32-only; the Pallas kernel
                  methods additionally stream a bf16 X
                  (``PreparedDesign.x_bf16_for``) with fp32 accumulators.
+      lane:      single-device execution-lane kind for the serving stack
+                 ("xla" for the jit'd XLA family, "fused" for the Pallas
+                 whole-solve megakernels).  Together with ``shardable`` and
+                 ``precisions`` this makes spec→lane routing one registry
+                 lookup (``repro.serve.lanes.lane_for``): sharded
+                 placements run on their mesh lane, everything else on the
+                 method's declared single-device lane.
       prepare:   optional hook ``(prepared, spec) -> None`` warming the
                  per-design state this method reuses (column norms for a
                  given ``thr``, Gram factors, ...); run by ``prepare()`` and
@@ -233,6 +240,7 @@ class MethodEntry:
     blocked: bool = False
     needs_chol: bool = False
     precisions: Tuple[str, ...] = ("fp32",)
+    lane: str = "xla"
     prepare: Optional[Callable] = None
     vmap_one: Optional[Callable] = None
     summary: str = ""

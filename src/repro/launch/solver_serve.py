@@ -112,6 +112,13 @@ def report_engine(engine):
     c = engine.cache.stats
     print(f"design cache: {c.hits} hits / {c.misses} misses "
           f"(hit rate {c.hit_rate:.1%}), {len(engine.cache)} resident")
+    lanes = engine.lanes.stats()
+    if lanes:
+        mix = "; ".join(
+            f"{label}: {ls['batches']} batches/{ls['requests']} reqs "
+            f"busy {ls['busy_s']*1e3:.0f}ms"
+            for label, ls in sorted(lanes.items()))
+        print(f"execution lanes: {mix}")
     if engine.mesh is not None:
         print(f"mesh: {engine.mesh.describe()}")
 
@@ -243,6 +250,10 @@ def main():
     ap.add_argument("--rhs-shard-min-k", type=int, default=32,
                     help="same-design group size at which the k axis shards "
                          "across data devices")
+    ap.add_argument("--no-lanes", action="store_true",
+                    help="disable per-placement execution lanes: run every "
+                         "batch on one serial executor thread (the pre-lane "
+                         "architecture; results are bit-identical)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--check", action="store_true",
                     help="verify every request vs numpy lstsq (slow)")
@@ -294,6 +305,7 @@ def main():
     engine = SolverServeEngine(
         ServeConfig(placement_policy=policy,
                     prefer_fused=args.prefer_fused,
+                    lane_execution=not args.no_lanes,
                     precision=(args.precision if args.precision != "fp32"
                                else None)),
         mesh=smesh)

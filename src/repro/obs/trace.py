@@ -219,6 +219,9 @@ class SolveTelemetry:
     method: str = ""
     kernel_path: str = "unknown"
     placement: str = "single"
+    lane: str = ""                    # execution-lane label ("single:xla",
+    # "mesh:obs_sharded", "serial", ...; "inline" = solved on the caller's
+    # thread, e.g. a flush nested inside a lane work)
     batch_kind: str = "single"
     group_size: int = 1
     batch_size: int = 1

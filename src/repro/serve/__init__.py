@@ -26,10 +26,15 @@ Layout:
   placement.py Placement/PlacementPolicy/ServeMesh — routing buckets onto
                the mesh-sharded solvers (obs-sharded, k-sharded multi-RHS,
                2-D) by padded size.
-  engine.py    SolverServeEngine — submit/flush front-end.
+  lanes.py     execution lanes — one executor thread per (device set,
+               kernel path) with a most-urgent-first queue; LanePool
+               routes batches by registry/placement lookup.
+  engine.py    SolverServeEngine — submit/flush front-end; flush() builds
+               batches and submits them to its lanes.
   dispatch.py  AsyncDispatcher — bounded intake queue, per-request
                deadlines, full/deadline/idle flush policy, host-side
-               bucketing overlapped with in-flight device solves.
+               bucketing overlapped with in-flight device solves; fired
+               batches fan out across the engine's lanes.
 
 Every layer records into ``repro.obs`` (PR 6): the engine/cache/dispatcher
 dual-write their stats dataclasses and a ``MetricsRegistry`` (injectable;
@@ -54,6 +59,8 @@ from repro.serve.dispatch import (AsyncDispatcher, DispatchConfig,
                                   DispatcherStopped, DispatchStats,
                                   QueueFullError, SolveTicket)
 from repro.serve.engine import ServeConfig, ServeStats, SolverServeEngine
+from repro.serve.lanes import (LaneExecutor, LaneKey, LanePool, LaneShutdown,
+                               LaneStats, LaneWork, current_lane, lane_for)
 from repro.serve.placement import (Placement, PlacementPolicy, ServeMesh,
                                    build_serve_mesh, mesh_device_count,
                                    placement_for_bucket, placement_for_group)
@@ -67,6 +74,12 @@ __all__ = [
     "DispatchConfig",
     "DispatchStats",
     "DispatcherStopped",
+    "LaneExecutor",
+    "LaneKey",
+    "LanePool",
+    "LaneShutdown",
+    "LaneStats",
+    "LaneWork",
     "Placement",
     "PlacementPolicy",
     "PreparedDesign",
@@ -86,7 +99,9 @@ __all__ = [
     "placement_for_bucket",
     "placement_for_group",
     "bucket_shape",
+    "current_lane",
     "design_fingerprint",
+    "lane_for",
     "group_requests",
     "next_pow2",
     "pad_x",

@@ -130,7 +130,8 @@ class DesignCache:
 
     def get_or_build(self, key: str, build_x_pad,
                      spec: Optional[SolverSpec] = None,
-                     record_stats: bool = True
+                     record_stats: bool = True,
+                     placement=None, mesh=None
                      ) -> Tuple[PreparedDesign, bool]:
         """Fetch the ``PreparedDesign`` for ``key``, preparing it on miss.
 
@@ -138,9 +139,12 @@ class DesignCache:
         design matrix — only invoked on a miss, so hits skip the host-side
         padding entirely.  ``spec`` (optional) additionally warms the
         method's derived state (thr-padded column norms, block-Gram
-        Cholesky) on hit AND miss — the dispatcher's pre-warm passes it so
-        those builds run off the solver thread; idempotent + per-entry
-        locked, so racing with the solver thread is safe.  Returns
+        Cholesky, the fused kernel's resident tiers) on hit AND miss — the
+        dispatcher's pre-warm passes it so those builds run off the lane
+        threads; idempotent + per-entry locked, so racing with a lane
+        thread is safe.  ``placement``/``mesh`` extend the warm to the
+        lane-resident sharded copy and bind the entry's home placement
+        (``PreparedDesign.bind_home`` — first-wins).  Returns
         (entry, cache_hit).
         """
         entry = self.get(key, record_stats)
@@ -150,5 +154,9 @@ class DesignCache:
                             fingerprint=key, max_tenants=self.max_tenants)
             entry = self.put(key, built)
         if spec is not None:
-            entry.warm_method_state(spec)
+            entry.warm_lane_state(spec, placement=placement, mesh=mesh)
+        else:
+            entry.bind_home(placement)
+            if placement is not None and placement.sharded and mesh is not None:
+                entry.x_for_placement(placement, mesh)
         return entry, hit

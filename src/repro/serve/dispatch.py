@@ -3,19 +3,23 @@
 ``SolverServeEngine`` is a synchronous submit/flush window: callers decide
 when to flush, and while a flush runs on the device nothing else happens —
 request validation, design hashing and padding all serialize behind it.
-``AsyncDispatcher`` layers a two-thread pipeline on top:
+``AsyncDispatcher`` layers an async pipeline on top:
 
   * the **dispatch thread** drains a bounded intake queue, normalises each
     request (``prepare_request``: numpy views, shape/knob validation, design
     fingerprint), pre-warms the engine's design cache (bucket padding +
-    host→device transfer + column norms), and groups requests into
-    per-(bucket, solver-config) pending batches;
-  * the **solver thread** pops fired batches and runs the engine's batched
-    flush (multi-RHS coalescing / vmap / warm starts, unchanged).
+    host→device transfer + column norms + lane-resident copies), and groups
+    requests into per-(bucket, solver-config, placement) pending batches;
+  * fired batches are submitted to the engine's **execution lanes**
+    (``repro.serve.lanes``): one executor thread per (device set, kernel
+    path), so a slow mesh-sharded solve no longer blocks cheap
+    single-device traffic — each lane drains its own most-urgent-first
+    queue concurrently.
 
-Because these run concurrently, host-side bucketing of *incoming* requests
-overlaps the device solve *in flight* — the dispatch thread is hashing and
-padding batch N+1 while the solver thread blocks on batch N.
+Host-side bucketing of *incoming* requests still overlaps the solves *in
+flight* — the dispatch thread is hashing and padding batch N+1 while the
+lanes run batch N — and additionally batches bound for different lanes
+overlap each other.
 
 **Flush policy** — a pending batch fires when the first of these holds:
 
@@ -25,10 +29,18 @@ padding batch N+1 while the solver thread blocks on batch N.
   * no request has joined it for ``idle_timeout_s`` (idle — bounds the
     latency of deadline-less traffic).
 
+The dispatch thread sleeps on a condition variable whose timeout is
+computed from the most urgent pending deadline/idle expiry (no fixed-rate
+polling): it wakes exactly when the next batch could fire, or immediately
+on submit()/drain()/stop().
+
 **Backpressure** — at most ``max_queue`` requests may be incomplete
 (queued + pending + solving) at once.  ``backpressure="reject"`` makes
 ``submit`` raise ``QueueFullError`` immediately; ``"block"`` makes it wait
 for capacity, propagating the slowdown to the caller.
+``max_lane_inflight`` additionally bounds each execution lane separately
+(same reject/block policy), so a backed-up mesh lane exerts backpressure on
+its own traffic while cheap single-device requests keep flowing.
 
 **Deadlines** — a request may carry ``deadline_s`` (relative to submit).
 The dispatcher flushes so the solve *starts* with at least the margin left
@@ -52,8 +64,10 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from repro import obs
-from repro.serve.batching import config_key, pad_x, prepare_request, request_bucket
+from repro.serve.batching import (bucket_shape, config_key, pad_x,
+                                  prepare_request, request_bucket)
 from repro.serve.engine import ServeConfig, SolverServeEngine
+from repro.serve.lanes import LaneKey, LaneWork
 from repro.serve.types import ServedSolve, SolveRequest
 
 
@@ -75,7 +89,14 @@ class DispatchConfig:
     max_batch: int = 32            # fire a batch at this occupancy
     deadline_margin_s: float = 0.05  # fire when an oldest deadline is this close
     idle_timeout_s: float = 0.02   # fire a batch this long after its last join
-    poll_interval_s: float = 0.002  # dispatch-thread wakeup bound
+    poll_interval_s: float = 0.002  # DEPRECATED, ignored: the dispatch
+    # thread now sleeps until the most urgent pending deadline/idle expiry
+    # (condition-variable wakeup), so there is no poll rate to tune.  Kept
+    # so existing DispatchConfig(**kwargs) call sites keep constructing.
+    max_lane_inflight: Optional[int] = None  # per-execution-lane cap on
+    # incomplete requests (None = only the global max_queue applies).
+    # Applied under the same reject/block policy; requests whose lane can't
+    # be determined cheaply at submit (non-array x) only count globally.
     default_deadline_s: Optional[float] = None  # applied when request has none
     prewarm_cache: bool = True     # build design entries on the dispatch thread
 
@@ -96,6 +117,9 @@ class DispatchStats:
     fired_idle: int = 0
     fired_drain: int = 0
     max_inflight: int = 0
+    # Batches fired per execution lane, by lane label (dispatch-thread
+    # owned; the engine's LanePool.stats() carries the execution side).
+    lane_batches: Dict[str, int] = field(default_factory=dict)
 
     @property
     def deadline_hit_rate(self) -> float:
@@ -115,7 +139,8 @@ class DispatchStats:
                 "fired_deadline": self.fired_deadline,
                 "fired_idle": self.fired_idle,
                 "fired_drain": self.fired_drain,
-                "max_inflight": self.max_inflight}
+                "max_inflight": self.max_inflight,
+                "lane_batches": dict(self.lane_batches)}
 
 
 class SolveTicket:
@@ -138,6 +163,8 @@ class SolveTicket:
         self._event = threading.Event()
         self._result: Optional[ServedSolve] = None
         self._exception: Optional[BaseException] = None
+        self._bp_lane: Optional[str] = None  # lane label counted for
+        # per-lane backpressure at submit (None = not lane-counted)
 
     def done(self) -> bool:
         return self._event.is_set()
@@ -196,8 +223,14 @@ class SolveTicket:
 
 @dataclass
 class _PendingBatch:
-    """One per-(bucket, solver-config) accumulation of tickets."""
+    """One per-(bucket, solver-config, placement) accumulation of tickets.
 
+    ``lane`` is the execution lane the batch will fire onto — fixed at
+    creation, since every member shares the config key the lane derives
+    from, so a compiled program never migrates across lanes.
+    """
+
+    lane: Optional[LaneKey] = None
     tickets: List[SolveTicket] = field(default_factory=list)
     last_join: float = 0.0
 
@@ -245,6 +278,7 @@ class AsyncDispatcher:
         self._cv = threading.Condition()
         self._intake: deque = deque()
         self._inflight = 0          # accepted and not yet completed
+        self._lane_inflight: Dict[str, int] = {}  # per-lane, submit-counted
         self._draining = False
         self._stopping = False
         self._abandon = False       # stop(drain=False): fail, don't serve
@@ -252,11 +286,13 @@ class AsyncDispatcher:
         self._seq = 0
         # Dispatch-thread-only state.
         self._pending: "Dict[Tuple, _PendingBatch]" = {}
-        # Solver handoff: fired batches, most-urgent-first within a scan.
-        self._solve_q: deque = deque()
-        self._solve_cv = threading.Condition()
+        # Fired batches live on the engine's execution lanes; this maps each
+        # outstanding LaneWork -> (claim fn, tickets) so stop(drain=False)
+        # can claim and fail queued-but-unstarted batches with no orphaned
+        # tickets.
+        self._works: Dict[LaneWork, Tuple] = {}
+        self._works_lock = threading.Lock()
         self._dispatch_thread: Optional[threading.Thread] = None
-        self._solver_thread: Optional[threading.Thread] = None
 
     # ------------------------------------------------------------ lifecycle
     def start(self) -> "AsyncDispatcher":
@@ -267,15 +303,19 @@ class AsyncDispatcher:
         self._abandon = False
         self._dispatch_thread = threading.Thread(
             target=self._dispatch_loop, name="serve-dispatch", daemon=True)
-        self._solver_thread = threading.Thread(
-            target=self._solve_loop, name="serve-solver", daemon=True)
         self._dispatch_thread.start()
-        self._solver_thread.start()
         return self
 
     def stop(self, drain: bool = True) -> None:
-        """Stop both threads; with ``drain`` (default) serve what's queued
-        first, otherwise fail unserved tickets with ``DispatcherStopped``."""
+        """Stop the dispatcher; with ``drain`` (default) serve what's queued
+        first, otherwise fail unserved tickets with ``DispatcherStopped``.
+
+        Either way every ticket is complete (served or failed) when this
+        returns — fired batches still queued on a lane are claimed and
+        failed, in-flight ones are waited for.  The engine's lane threads
+        themselves are engine-owned and stay up (``engine.shutdown()``
+        stops them).
+        """
         if not self._started:
             return
         if drain:
@@ -284,10 +324,9 @@ class AsyncDispatcher:
             self._abandon = not drain
             self._stopping = True
             self._cv.notify_all()
-        with self._solve_cv:
-            self._solve_cv.notify_all()
         self._dispatch_thread.join()
-        self._solver_thread.join()
+        if not drain:
+            self._finalize_abandoned()
         self._started = False
 
     def __enter__(self) -> "AsyncDispatcher":
@@ -317,24 +356,42 @@ class AsyncDispatcher:
             raise ValueError(f"deadline_s must be positive, got {rel}")
         ticket = SolveTicket(
             request, None if rel is None else obs.now() + float(rel))
+        cfg = self.config
+        lane_lbl = (self._lane_label_of(request)
+                    if cfg.max_lane_inflight is not None else None)
         with self._cv:
             if self._stopping:
                 raise DispatcherStopped("dispatcher stopped")
             if request.request_id is None:
                 request.request_id = f"areq-{self._seq}"
             self._seq += 1
-            if self._inflight >= self.config.max_queue:
-                if self.config.backpressure == "reject":
+
+            def _over() -> Optional[str]:
+                if self._inflight >= cfg.max_queue:
+                    return (f"dispatcher at capacity ({cfg.max_queue} "
+                            f"in flight)")
+                if (lane_lbl is not None
+                        and self._lane_inflight.get(lane_lbl, 0)
+                        >= cfg.max_lane_inflight):
+                    return (f"lane {lane_lbl} at capacity "
+                            f"({cfg.max_lane_inflight} in flight)")
+                return None
+
+            over = _over()
+            if over is not None:
+                if cfg.backpressure == "reject":
                     self.stats.rejected += 1
                     self._m_rejected.inc()
-                    raise QueueFullError(
-                        f"dispatcher at capacity ({self.config.max_queue} "
-                        f"in flight)")
-                while self._inflight >= self.config.max_queue:
+                    raise QueueFullError(over)
+                while _over() is not None:
                     if self._stopping:
                         raise DispatcherStopped("dispatcher stopped")
                     self._cv.wait(0.01)
             self._inflight += 1
+            if lane_lbl is not None:
+                ticket._bp_lane = lane_lbl
+                self._lane_inflight[lane_lbl] = (
+                    self._lane_inflight.get(lane_lbl, 0) + 1)
             self.stats.submitted += 1
             self._m_submitted.inc()
             self._m_inflight.set(self._inflight)
@@ -343,6 +400,30 @@ class AsyncDispatcher:
             self._intake.append(ticket)
             self._cv.notify_all()
         return ticket
+
+    def _lane_label_of(self, req: SolveRequest) -> Optional[str]:
+        """Cheap submit-time lane estimate for per-lane backpressure.
+
+        Uses only the request's array shape + spec + the engine's routing
+        tables (no padding, hashing or device work).  Returns None when the
+        lane can't be determined without normalising (e.g. ``x`` is a
+        list) — those requests only count against the global queue; the
+        authoritative lane is still assigned at admit time.
+        """
+        try:
+            shape = getattr(req.x, "shape", None)
+            if shape is None or len(shape) != 2:
+                return None
+            eng = self.engine
+            bucket = bucket_shape(int(shape[0]), int(shape[1]),
+                                  min_obs=eng.config.min_obs,
+                                  min_vars=eng.config.min_vars)
+            spec = eng.spec_for(req)
+            placement = eng.placement_for(bucket, spec.method)
+            return eng.lanes.lane_for(spec.method, placement,
+                                      eng.mesh).label
+        except Exception:
+            return None
 
     def drain(self, timeout: Optional[float] = None) -> bool:
         """Fire everything pending and wait for the pipeline to empty.
@@ -370,16 +451,28 @@ class AsyncDispatcher:
             return self._inflight
 
     # ------------------------------------------------------ dispatch thread
-    def _dispatch_loop(self) -> None:
+    def _next_wake_delay(self) -> Optional[float]:
+        """Seconds until the most urgent pending batch could fire (its
+        deadline-margin or idle expiry, whichever is sooner), or None when
+        nothing is pending — sleep until a notify.  Dispatch-thread only."""
+        if not self._pending:
+            return None
         cfg = self.config
+        t = float("inf")
+        for batch in self._pending.values():
+            t = min(t,
+                    batch.last_join + cfg.idle_timeout_s,
+                    batch.min_deadline - cfg.deadline_margin_s)
+        return max(0.0, t - obs.now())
+
+    def _dispatch_loop(self) -> None:
         while True:
             with self._cv:
                 if not self._intake and not self._stopping:
-                    # With pending batches a timed wake drives the
-                    # deadline/idle flush checks; fully idle we sleep until
-                    # submit()/drain()/stop() notifies (no busy-poll).
-                    self._cv.wait(cfg.poll_interval_s if self._pending
-                                  else None)
+                    # Sleep exactly until the most urgent pending batch's
+                    # deadline-margin/idle expiry; fully idle we sleep
+                    # until submit()/drain()/stop() notifies (no polling).
+                    self._cv.wait(self._next_wake_delay())
                 arrivals = []
                 while self._intake:
                     arrivals.append(self._intake.popleft())
@@ -394,22 +487,15 @@ class AsyncDispatcher:
                     t._fail(DispatcherStopped("dispatcher stopped"))
                 if residual:
                     self._on_complete(residual)
-                with self._solve_cv:
-                    self._solve_q.append(None)  # solver-thread sentinel
-                    self._solve_cv.notify_all()
-                return
+                return  # stop() finalizes fired-but-unserved lane works
             for ticket in arrivals:
                 self._admit(ticket)
             now = obs.now()
-            fired = self._fire_ready(now, drain_all=draining or stopping)
-            if fired:
-                with self._solve_cv:
-                    self._solve_q.extend(fired)
-                    self._solve_cv.notify_all()
+            for lane, urgency, chunk in self._fire_ready(
+                    now, drain_all=draining or stopping):
+                self._submit_batch(lane, urgency, chunk)
             if stopping and not self._pending:
-                with self._solve_cv:
-                    self._solve_q.append(None)  # solver-thread sentinel
-                    self._solve_cv.notify_all()
+                self._drain_works()
                 return
 
     def _admit(self, ticket: SolveTicket) -> None:
@@ -431,6 +517,10 @@ class AsyncDispatcher:
         bucket = request_bucket(req, min_obs=ecfg.min_obs,
                                 min_vars=ecfg.min_vars)
         spec = self.engine.spec_for(req)
+        # Placement- and spec-aware key: batches the dispatcher accumulates
+        # line up with the engine's flush grouping, so a sharded bucket's
+        # requests never share a pending batch with single-device ones.
+        placement = self.engine.placement_for(bucket, spec.method)
         if self.config.prewarm_cache:
             try:
                 # record_stats=False: the flush-time lookup is the one cache
@@ -438,27 +528,34 @@ class AsyncDispatcher:
                 # synchronous path ("hit" = design state resident at flush).
                 # Passing the effective spec also warms the method's derived
                 # design state (thr-padded column norms, block-Gram Cholesky
-                # factors) here on the dispatch thread, overlapping those
-                # builds with whatever solve is in flight on the device.
+                # factors) here on the dispatch thread, and the placement
+                # additionally binds the entry's home lane and builds the
+                # lane-resident sharded copy — all overlapping whatever
+                # solves are in flight on the lanes.
                 self.engine.cache.get_or_build(
                     req.design_key,
                     lambda: pad_x(np.asarray(req.x), bucket),
                     spec=spec,
-                    record_stats=False)
+                    record_stats=False,
+                    placement=placement,
+                    mesh=self.engine.mesh)
             except Exception:
                 pass  # engine flush will surface the failure per-request
-        # Placement- and spec-aware key: batches the dispatcher accumulates
-        # line up with the engine's flush grouping, so a sharded bucket's
-        # requests never share a pending batch with single-device ones.
-        placement = self.engine.placement_for(bucket, spec.method)
         batch = self._pending.setdefault(
-            config_key(req, bucket, placement, spec), _PendingBatch())
+            config_key(req, bucket, placement, spec),
+            _PendingBatch(lane=self.engine.lanes.lane_for(
+                spec.method, placement, self.engine.mesh)))
         batch.tickets.append(ticket)
         batch.last_join = obs.now()
 
-    def _fire_ready(self, now: float,
-                    drain_all: bool = False) -> List[List[SolveTicket]]:
-        """Pop every batch whose flush condition holds, most urgent first."""
+    def _fire_ready(self, now: float, drain_all: bool = False
+                    ) -> List[Tuple[LaneKey, float, List[SolveTicket]]]:
+        """Pop every batch whose flush condition holds, most urgent first.
+
+        Returns (lane, urgency, tickets) triples: the batch's execution
+        lane and its most urgent member's absolute deadline (``inf`` for
+        deadline-less batches), which orders each lane's queue.
+        """
         cfg = self.config
         ready: List[Tuple[float, Tuple, str]] = []
         for key, batch in self._pending.items():
@@ -473,10 +570,11 @@ class AsyncDispatcher:
                 ready.append((min_dl, key, "deadline"))
             elif now - batch.last_join >= cfg.idle_timeout_s:
                 ready.append((min_dl, key, "idle"))
-        # Deadline-ordered flushing: the batch with the most urgent member
-        # reaches the (FIFO) solver queue first.
+        # Deadline-ordered firing: the batch with the most urgent member
+        # submits to its lane first (and carries its deadline as the lane
+        # queue's urgency, so lanes also drain most-urgent-first).
         ready.sort(key=lambda r: r[0])
-        fired = []
+        fired: List[Tuple[LaneKey, float, List[SolveTicket]]] = []
         for min_dl, key, why in ready:
             batch = self._pending.pop(key)
             # max_batch is an upper bound too: a burst admitted in one
@@ -487,53 +585,106 @@ class AsyncDispatcher:
                 setattr(self.stats, f"fired_{why}",
                         getattr(self.stats, f"fired_{why}") + 1)
                 self._m_fired.inc(1, reason=why)
+                lbl = batch.lane.label if batch.lane is not None else "?"
+                self.stats.lane_batches[lbl] = (
+                    self.stats.lane_batches.get(lbl, 0) + 1)
                 for t in chunk:
                     t.fired_at = now
                     self._m_queue_wait.observe(now - t.submitted_at)
-                fired.append(chunk)
+                fired.append((batch.lane, min_dl, chunk))
         return fired
 
-    # ------------------------------------------------------- solver thread
-    def _solve_loop(self) -> None:
-        while True:
-            with self._solve_cv:
-                while not self._solve_q:
-                    self._solve_cv.wait()  # every producer notifies
-                batch = self._solve_q.popleft()
-            if batch is None:
-                self._fail_residual()
-                return
-            try:
-                with obs.span("dispatch.solve_batch", size=len(batch)):
-                    served = self.engine.serve([t.request for t in batch])
-                for ticket, result in zip(batch, served):
-                    ticket._complete(result)
-            except Exception as exc:  # engine-level failure: fail the batch
-                for ticket in batch:
-                    ticket._fail(exc)
-            self._on_complete(batch)
+    # ------------------------------------------------------ lane execution
+    def _submit_batch(self, lane: Optional[LaneKey], urgency: float,
+                      tickets: List[SolveTicket]) -> None:
+        """Hand one fired batch to its execution lane.
 
-    def _fail_residual(self) -> None:
-        """After a no-drain stop: fail anything still in the pipeline."""
-        residual: List[SolveTicket] = []
-        with self._solve_cv:
-            while self._solve_q:
-                batch = self._solve_q.popleft()
-                if batch:
-                    residual.extend(batch)
-        with self._cv:
-            while self._intake:
-                residual.append(self._intake.popleft())
-        for ticket in residual:
-            if not ticket.done():
-                ticket._fail(DispatcherStopped("dispatcher stopped"))
-        if residual:
-            self._on_complete(residual)
+        The work closure carries a claim flag: exactly one of the lane
+        thread and ``_finalize_abandoned`` (after ``stop(drain=False)``)
+        gets to settle the tickets, so none are served twice and none are
+        orphaned.
+        """
+        claim_lock = threading.Lock()
+        claimed = [False]
+
+        def try_claim() -> bool:
+            with claim_lock:
+                if claimed[0]:
+                    return False
+                claimed[0] = True
+                return True
+
+        def run() -> None:
+            if not try_claim():
+                return
+            if self._abandon:
+                for t in tickets:
+                    t._fail(DispatcherStopped("dispatcher stopped"))
+            else:
+                try:
+                    with obs.span("dispatch.solve_batch", size=len(tickets),
+                                  lane=lane.label if lane else "?"):
+                        served = self.engine.serve(
+                            [t.request for t in tickets])
+                    for ticket, result in zip(tickets, served):
+                        ticket._complete(result)
+                except Exception as exc:  # engine failure: fail the batch
+                    for ticket in tickets:
+                        ticket._fail(exc)
+            self._on_complete(tickets)
+            with self._works_lock:
+                self._works.pop(work, None)
+
+        work = LaneWork(run, urgency=urgency, size=len(tickets),
+                        tag=lane.label if lane is not None else "?")
+        with self._works_lock:
+            self._works[work] = (try_claim, tickets)
+        key = lane if lane is not None else self.engine.lanes.lane_for("bakp")
+        try:
+            self.engine.lanes.submit(key, work)
+        except Exception as exc:  # lane shut down under us
+            if try_claim():
+                for t in tickets:
+                    t._fail(exc)
+                self._on_complete(tickets)
+            with self._works_lock:
+                self._works.pop(work, None)
+
+    def _drain_works(self) -> None:
+        """Wait for every outstanding lane work (dispatch-thread, on a
+        draining stop) so ``stop()`` returns with all tickets complete."""
+        with self._works_lock:
+            works = list(self._works)
+        for w in works:
+            w.wait()
+
+    def _finalize_abandoned(self) -> None:
+        """After ``stop(drain=False)``: claim queued-but-unstarted lane
+        works and fail their tickets; wait out the ones already running."""
+        with self._works_lock:
+            works = list(self._works.items())
+        for w, (claim, tickets) in works:
+            if claim():
+                for t in tickets:
+                    t._fail(DispatcherStopped("dispatcher stopped"))
+                self._on_complete(tickets)
+                with self._works_lock:
+                    self._works.pop(w, None)
+            else:
+                w.wait()
 
     def _on_complete(self, tickets: List[SolveTicket]) -> None:
         misses = sum(1 for t in tickets if t.deadline_met is False)
         with self._cv:
             self._inflight -= len(tickets)
+            for t in tickets:
+                if t._bp_lane is not None:
+                    left = self._lane_inflight.get(t._bp_lane, 0) - 1
+                    if left > 0:
+                        self._lane_inflight[t._bp_lane] = left
+                    else:
+                        self._lane_inflight.pop(t._bp_lane, None)
+                    t._bp_lane = None
             self.stats.completed += len(tickets)
             # Failures count as misses too: _fail() marks deadline_met
             # False on any ticket that carried a deadline.

@@ -38,6 +38,16 @@ small number of compiled batch solves:
      (vmapping over shard_map is not a thing), so sharded buckets solve
      their leftover singles individually.
 
+  7. **Execution lanes** — ``flush()`` is a pure batch-builder: it groups,
+     resolves design entries and routes each batch to its execution lane
+     (``repro.serve.lanes`` — a (device set, kernel path) executor thread
+     per placement/kernel family), then waits for all units.  Batches on
+     different lanes (single-device xla, fused Pallas, each mesh
+     placement) overlap; batches on one lane keep their submission order,
+     so results are bit-identical to the sequential engine
+     (``ServeConfig.lane_execution=False`` collapses everything onto one
+     serial lane — the pre-lane architecture).
+
 Results come back as per-request ``ServedSolve``s, in submission order, with
 padding stripped and per-request SSE recomputed from the stripped residual.
 
@@ -57,9 +67,11 @@ Example::
 from __future__ import annotations
 
 import functools
+import logging
 import math
+import threading
 from dataclasses import dataclass
-from typing import List, Optional, Sequence
+from typing import List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -72,9 +84,12 @@ from repro.kernels.fused_solve import fused_fits
 from repro.serve.batching import (group_requests, next_pow2, pad_x, pad_y,
                                   prepare_request, request_bucket)
 from repro.serve.cache import DesignCache
+from repro.serve.lanes import LaneKey, LanePool, LaneWork, current_lane
 from repro.serve.placement import (Placement, PlacementPolicy, ServeMesh,
                                    placement_for_bucket, placement_for_group)
 from repro.serve.types import ServedSolve, SolveRequest
+
+_log = logging.getLogger(__name__)
 
 
 @dataclass
@@ -106,6 +121,13 @@ class ServeConfig:
     # Requests whose effective method lacks the precision downgrade to
     # "fp32" with a solver_fallback_total{reason="precision"} count instead
     # of erroring their batch (see spec_for).
+    lane_execution: bool = True  # run flush batches on per-placement
+    # execution lanes (repro.serve.lanes) so single-device xla/fused and
+    # mesh-sharded solves overlap.  False collapses every lane onto ONE
+    # serial executor thread — the pre-lane architecture, kept as the
+    # benchmark baseline and a conservative fallback.  Results are
+    # bit-identical either way (batch composition and per-batch execution
+    # are unchanged; only cross-batch overlap differs).
 
 
 @dataclass
@@ -192,6 +214,14 @@ class SolverServeEngine:
         self.cache = DesignCache(max_entries=self.config.cache_entries,
                                  max_tenants=self.config.warm_tenants,
                                  registry=self.registry)
+        # The engine owns its lane pool: the synchronous flush and the
+        # async dispatcher submit into the same executors, so per-lane
+        # program affinity (and the per-lane gauges) cover both paths.
+        self.lanes = LanePool(registry=self.registry,
+                              serial=not self.config.lane_execution)
+        # Work units on different lanes mutate ServeStats concurrently.
+        self._stats_lock = threading.Lock()
+        self._warned_unshardable_fused = False
         self.stats = ServeStats()
         reg = self.registry
         self._m_requests = reg.counter(
@@ -207,8 +237,8 @@ class SolverServeEngine:
             "requests failed, by exception type / method / bucket")
         self._m_latency = reg.histogram(
             "serve_solve_latency_seconds",
-            "wall time of one batched solver call (kernel path and X-stream "
-            "precision labelled)",
+            "wall time of one batched solver call (kernel path, X-stream "
+            "precision and execution lane labelled)",
             buckets=obs.LATENCY_BUCKETS)
         # Same family the eager dispatch shims (obs.record_dispatch) feed —
         # the engine's precision downgrade is one more fallback cause, and
@@ -269,18 +299,36 @@ class SolverServeEngine:
         # The bf16 X stream halves the resident itemsize, so the fit check
         # (and therefore the upgrade) sees twice the VMEM headroom.
         itemsize = 2 if spec.precision != "fp32" else 4
-        if (self.config.prefer_fused and self.mesh is None
-                and spec.method == "bakp" and spec.max_iter >= 1):
-            # Fused eligibility mirrors the method's own dispatch check
-            # (nrhs estimated at 1 — the method kernel re-checks with the
-            # real coalesced k and falls back when it grew past the budget,
-            # so the upgrade is always safe).
-            bucket = request_bucket(req, min_obs=self.config.min_obs,
-                                    min_vars=self.config.min_vars)
-            vars_pb = -(-bucket[1] // spec.thr) * spec.thr
-            if fused_fits(vars_pb, bucket[0], 1, itemsize,
-                          max_iter=spec.max_iter):
-                spec = spec.replace(method="bakp_fused")
+        if (self.config.prefer_fused and spec.method == "bakp"
+                and spec.max_iter >= 1):
+            if self.mesh is not None:
+                # The fused megakernel is single-device; upgrading on a
+                # mesh engine would defeat sharded placement, so "bakp"
+                # stays — but audibly: the skip counts as a fallback and
+                # logs once, instead of the prefer_fused knob silently
+                # doing nothing.
+                if record:
+                    self._m_fallback.inc(1, method="bakp_fused",
+                                         reason="unshardable_fused")
+                    if not self._warned_unshardable_fused:
+                        self._warned_unshardable_fused = True
+                        _log.warning(
+                            "prefer_fused is a no-op on this mesh engine: "
+                            "the fused megakernel is single-device, so "
+                            "'bakp' requests keep their sharded-eligible "
+                            "method (counted as solver_fallback_total"
+                            "{reason=\"unshardable_fused\"})")
+            else:
+                # Fused eligibility mirrors the method's own dispatch check
+                # (nrhs estimated at 1 — the method kernel re-checks with
+                # the real coalesced k and falls back when it grew past the
+                # budget, so the upgrade is always safe).
+                bucket = request_bucket(req, min_obs=self.config.min_obs,
+                                        min_vars=self.config.min_vars)
+                vars_pb = -(-bucket[1] // spec.thr) * spec.thr
+                if fused_fits(vars_pb, bucket[0], 1, itemsize,
+                              max_iter=spec.max_iter):
+                    spec = spec.replace(method="bakp_fused")
         if (spec.precision != "fp32"
                 and spec.precision not in
                 solver_method(spec.method).precisions):
@@ -329,8 +377,25 @@ class SolverServeEngine:
             return self._flush(requests)
 
     def _flush(self, requests: List[SolveRequest]) -> List[ServedSolve]:
+        """Pure batch-builder: grouping, design-cache lookups and lane
+        routing happen here on the calling thread; the actual solves are
+        work units submitted to the engine's lane pool (``_run_units``), so
+        batches bound for different lanes (single-device xla/fused vs each
+        mesh placement) overlap instead of serialising."""
         results: List[Optional[ServedSolve]] = [None] * len(requests)
+        units: List[Tuple[LaneKey, int, object]] = []  # (lane, size, fn)
         cfg = self.config
+
+        def unit(lane, fail_idxs, bucket, size, fn):
+            # Exception isolation rides inside the unit: a solver failure
+            # poisons only its own batch, exactly as the inline path did.
+            def run(fn=fn, fail_idxs=fail_idxs, bucket=bucket):
+                try:
+                    fn()
+                except Exception as exc:
+                    self._fail(requests, fail_idxs, bucket, exc, results)
+            units.append((lane, size, run))
+
         groups = group_requests(
             requests, min_obs=cfg.min_obs, min_vars=cfg.min_vars,
             placement_fn=self.placement_for,
@@ -346,16 +411,24 @@ class SolverServeEngine:
             for key, idxs in designs.items():
                 try:
                     entry, hit = self._design_entry(key, requests[idxs[0]],
-                                                    bucket)
+                                                    bucket, placement)
                 except Exception as exc:  # bad design: fail just this group
                     self._fail(requests, idxs, bucket, exc, results)
                     continue
                 if cfg.coalesce and len(idxs) > 1 and mentry.multi_rhs:
-                    try:
-                        self._solve_multi_rhs(requests, idxs, entry, hit,
-                                              bucket, results, placement)
-                    except Exception as exc:
-                        self._fail(requests, idxs, bucket, exc, results)
+                    # The k-sharded group upgrade is decided here (k is
+                    # known after coalescing) so the unit routes to its
+                    # real lane, not the bucket's.
+                    gplacement = placement
+                    if self.mesh is not None and mentry.shardable:
+                        gplacement = placement_for_group(
+                            placement or Placement(), next_pow2(len(idxs)),
+                            self.policy, self.mesh)
+                    unit(self.lanes.lane_for(method, gplacement, self.mesh),
+                         idxs, bucket, len(idxs),
+                         functools.partial(self._solve_multi_rhs, requests,
+                                           idxs, entry, hit, bucket,
+                                           results, gplacement))
                 else:
                     singles.extend((i, entry, hit) for i in idxs)
             # vmap batching is single-device only (a vmapped shard_map would
@@ -366,30 +439,69 @@ class SolverServeEngine:
             if use_vmap:
                 for lo in range(0, len(singles), cfg.max_vmap_batch):
                     chunk = singles[lo:lo + cfg.max_vmap_batch]
-                    try:
-                        if len(chunk) > 1:
-                            self._solve_vmapped(requests, chunk, bucket,
-                                                results)
-                        else:
-                            self._solve_one(requests, *chunk[0], bucket,
-                                            results, placement)
-                    except Exception as exc:
-                        self._fail(requests, [i for i, _, _ in chunk], bucket,
-                                   exc, results)
+                    if len(chunk) > 1:
+                        # The vmapped program is a single-device stack —
+                        # it rides the method's single-device lane.
+                        unit(self.lanes.lane_for(method),
+                             [i for i, _, _ in chunk], bucket, len(chunk),
+                             functools.partial(self._solve_vmapped,
+                                               requests, chunk, bucket,
+                                               results))
+                    else:
+                        idx, entry, hit = chunk[0]
+                        unit(self.lanes.lane_for(method, placement,
+                                                 self.mesh),
+                             [idx], bucket, 1,
+                             functools.partial(self._solve_one, requests,
+                                               idx, entry, hit, bucket,
+                                               results, placement))
             else:
                 for idx, entry, hit in singles:
-                    try:
-                        self._solve_one(requests, idx, entry, hit, bucket,
-                                        results, placement)
-                    except Exception as exc:
-                        self._fail(requests, [idx], bucket, exc, results)
+                    unit(self.lanes.lane_for(method, placement, self.mesh),
+                         [idx], bucket, 1,
+                         functools.partial(self._solve_one, requests, idx,
+                                           entry, hit, bucket, results,
+                                           placement))
+        self._run_units(units)
         assert all(r is not None for r in results)
         return results
 
+    def _run_units(self, units) -> None:
+        """Execute flush work units on their lanes and wait for all.
+
+        Nested flushes (``serve``/``flush`` called from a lane work — the
+        dispatcher's per-batch submission path) run inline on the current
+        lane thread: the batch was already routed to its lane, and
+        re-submitting from inside a lane could deadlock a lane on itself.
+        """
+        if not units:
+            return
+        if current_lane() is not None:
+            for _, _, fn in units:
+                fn()
+            return
+        works = [self.lanes.submit(lane, LaneWork(fn, size=size,
+                                                  tag=lane.label))
+                 for lane, size, fn in units]
+        for w in works:
+            w.wait()
+        for w in works:
+            if w.error is not None:
+                # Units swallow solver errors via _fail; anything here is
+                # an engine bug (or a lane shutdown) — surface it.
+                raise w.error
+
+    def shutdown(self, drain: bool = True) -> None:
+        """Stop the engine's lane executor threads (idempotent; the engine
+        keeps working afterwards only via fresh lane threads on the next
+        flush, so call this at teardown)."""
+        self.lanes.shutdown(drain=drain)
+
     # ---------------------------------------------------------- internals
-    def _design_entry(self, key, req, bucket):
+    def _design_entry(self, key, req, bucket, placement=None):
         return self.cache.get_or_build(
-            key, lambda: pad_x(np.asarray(req.x), bucket))
+            key, lambda: pad_x(np.asarray(req.x), bucket),
+            placement=placement, mesh=self.mesh)
 
     def _fail(self, requests, idxs, bucket, exc, results):
         """Error results for a poisoned batch (engine keeps serving).
@@ -425,7 +537,8 @@ class SolverServeEngine:
                 error=msg,
                 telemetry=tel,
             )
-            self.stats.failures += 1
+            with self._stats_lock:
+                self.stats.failures += 1
             self._m_errors.inc(1, exception_type=exc_type,
                                method=req.method,
                                bucket=f"{bucket[0]}x{bucket[1]}")
@@ -505,7 +618,10 @@ class SolverServeEngine:
         if obs.enabled():
             placement_kind = (placement.kind if placement is not None
                               else "single")
-            ck = (kind, spec.method, path, placement_kind, spec.precision)
+            lk = current_lane()
+            lane = lk.label if lk is not None else "inline"
+            ck = (kind, spec.method, path, placement_kind, spec.precision,
+                  lane)
             bound = self._c_solve.get(ck)
             if bound is None:
                 bound = self._c_solve[ck] = (
@@ -514,7 +630,8 @@ class SolverServeEngine:
                                           placement=placement_kind),
                     self._m_latency.labels(kind=kind, method=spec.method,
                                            path=path,
-                                           precision=spec.precision),
+                                           precision=spec.precision,
+                                           lane=lane),
                     self._m_group.labels(kind=kind))
             bound[0].inc(1)
             bound[1].observe(dt)
@@ -531,11 +648,14 @@ class SolverServeEngine:
         if entry is not None and self.config.warm_cache:
             entry.store_coef(req.tenant_id, coef)
         if warm:
-            self.stats.warm_starts += 1
+            with self._stats_lock:
+                self.stats.warm_starts += 1
         sse = float(np.dot(residual, residual))
         n_sweeps = int(n_sweeps)
         converged = bool(converged)
         placement_kind = placement.kind if placement is not None else "single"
+        lk = current_lane()
+        lane = lk.label if lk is not None else "inline"
         tel = None
         if obs.enabled():
             warm_lbl = "1" if warm else "0"
@@ -553,7 +673,8 @@ class SolverServeEngine:
             tel = obs.SolveTelemetry(
                 request_id=req.request_id, tenant_id=req.tenant_id,
                 bucket=bucket, method=method or req.method,
-                kernel_path=path, placement=placement_kind, batch_kind=kind,
+                kernel_path=path, placement=placement_kind, lane=lane,
+                batch_kind=kind,
                 group_size=group_size, batch_size=group_size,
                 warm_start=warm, cache_hit=hit, n_sweeps=n_sweeps, sse=sse,
                 converged=converged, solve_s=latency)
@@ -582,11 +703,10 @@ class SolverServeEngine:
         group solve gets a stacked ``a0`` whose cold columns are zero
         (identical to those members' cold path).
 
-        A large group in a single-device bucket upgrades to the k-sharded
-        mesh backend here (k is only known after coalescing): one stream of
-        ``x`` per device then serves k/D tenants, with the group-global SSE
-        stopping keeping results identical to the single-device coalesced
-        solve.
+        ``placement`` is final here — the k-sharded group upgrade (one
+        stream of ``x`` per device serves k/D tenants, group-global SSE
+        stopping) is decided by ``_flush`` at unit-build time, where the
+        lane is chosen.
         """
         obs_p, vars_p = bucket
         k = len(idxs)
@@ -594,9 +714,6 @@ class SolverServeEngine:
         req0 = requests[idxs[0]]
         spec = self.spec_for(req0)
         mentry = solver_method(spec.method)
-        if self.mesh is not None and mentry.shardable:
-            placement = placement_for_group(
-                placement or Placement(), k_pad, self.policy, self.mesh)
         ys = np.zeros((obs_p, k_pad), np.float32)
         for c, idx in enumerate(idxs):
             y = np.asarray(requests[idx].y, np.float32)
@@ -632,11 +749,12 @@ class SolverServeEngine:
                 n_sweeps=res.n_sweeps, converged=res.converged, entry=entry,
                 warm=a0s[c] is not None, placement=placement,
                 method=spec.method, path=path)
-        self.stats.solver_calls += 1
-        self.stats.multi_rhs_groups += 1
-        self.stats.multi_rhs_requests += k
-        if placement is not None and placement.sharded:
-            self.stats.sharded_solves += 1
+        with self._stats_lock:
+            self.stats.solver_calls += 1
+            self.stats.multi_rhs_groups += 1
+            self.stats.multi_rhs_requests += k
+            if placement is not None and placement.sharded:
+                self.stats.sharded_solves += 1
 
     def _solve_vmapped(self, requests, singles, bucket, results):
         """Stack same-bucket single-design requests into one vmapped solve."""
@@ -696,9 +814,10 @@ class SolverServeEngine:
                 n_sweeps=res.n_sweeps[row], converged=res.converged[row],
                 entry=entry, warm=a0s[row] is not None,
                 method=spec.method, path=path)
-        self.stats.solver_calls += 1
-        self.stats.vmap_batches += 1
-        self.stats.vmap_requests += b
+        with self._stats_lock:
+            self.stats.solver_calls += 1
+            self.stats.vmap_batches += 1
+            self.stats.vmap_requests += b
 
     def _solve_one(self, requests, idx, entry, hit, bucket, results,
                    placement=None):
@@ -725,7 +844,8 @@ class SolverServeEngine:
             group_size=1, latency=dt, hit=hit, n_sweeps=res.n_sweeps,
             converged=res.converged, entry=entry, warm=a0_pad is not None,
             placement=placement, method=spec.method, path=path)
-        self.stats.solver_calls += 1
-        self.stats.single_solves += 1
-        if placement is not None and placement.sharded:
-            self.stats.sharded_solves += 1
+        with self._stats_lock:
+            self.stats.solver_calls += 1
+            self.stats.single_solves += 1
+            if placement is not None and placement.sharded:
+                self.stats.sharded_solves += 1

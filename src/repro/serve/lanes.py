@@ -1,0 +1,335 @@
+"""Execution lanes — per-placement executor threads for the serving stack.
+
+A **lane** is a (device set, kernel path) pair with its own executor
+thread, its own most-urgent-first queue of fired batches, and its own
+compiled-program affinity.  The async dispatcher used to flush every batch
+through ONE solver thread, so single-device fused solves, vmapped
+micro-batches and mesh-sharded solves serialised behind each other even
+when they targeted disjoint devices/program families.  Lanes let them
+overlap: the engine's ``flush()`` builds batches and *submits* work units
+here, the dispatcher routes each fired batch to its lane, and each lane
+drains independently.
+
+Routing is one table lookup (``lane_for``): a sharded ``Placement`` maps to
+its mesh lane (kind + the mesh's device ids), everything else to the
+method's registry-declared single-device lane (``MethodEntry.lane`` —
+"xla" for the jit'd family, "fused" for the Pallas megakernels) on the
+default device.  ``Placement.lane_key`` supplies the kind half of the
+identity; ``LaneKey.devices`` the device-set half, so two engines on
+disjoint meshes get disjoint lanes while one engine's repeat buckets share
+theirs.
+
+Concurrency contract:
+
+  * one thread per lane, started lazily on first submit — an engine that
+    only ever solves single-device xla traffic runs exactly one lane
+    thread, same threading footprint as the old architecture;
+  * per-lane FIFO broken by urgency: works submit with an ``urgency``
+    (the dispatcher passes the batch's most urgent absolute deadline;
+    ``inf`` = plain FIFO by submission order);
+  * ``LanePool(serial=True)`` maps every key to ONE ``"serial"`` lane —
+    the old single-solver-thread architecture, kept as the benchmark
+    baseline and reachable via ``ServeConfig(lane_execution=False)``;
+  * ``current_lane()`` marks lane threads (thread-local): engine flushes
+    nested inside a lane work run their units inline instead of
+    re-submitting, so a lane can never deadlock waiting on itself;
+  * per-lane gauges (``serve_lane_queue_depth`` / ``serve_lane_inflight``)
+    and a ``LaneStats`` counter mirror record into the engine's registry.
+
+Shutdown: ``shutdown(drain=True)`` finishes queued work then parks the
+thread; ``drain=False`` abandons queued works (their ``error`` is set and
+their events fire, so no waiter hangs) and stops after the in-flight work
+completes.
+"""
+from __future__ import annotations
+
+import heapq
+import threading
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Tuple
+
+from repro import obs
+from repro.serve.placement import Placement, ServeMesh
+
+_SINGLE = Placement()
+
+
+def _device_ids(smesh: Optional[ServeMesh] = None) -> Tuple[int, ...]:
+    """Device-set identity for a lane (mesh devices, or the default
+    device).  Imported lazily so this module stays importable before jax
+    backend selection."""
+    import jax
+
+    if smesh is not None:
+        return tuple(int(d.id) for d in smesh.mesh.devices.flat)
+    return (int(jax.devices()[0].id),)
+
+
+@dataclass(frozen=True)
+class LaneKey:
+    """Identity of one execution lane: the placement/kernel-path kind
+    (``Placement.lane_key`` string, e.g. ``"single:xla"``, ``"single:fused"``,
+    ``"mesh:obs_sharded"``) plus the device ids it owns.  Frozen/hashable:
+    keys the pool's executor map and the per-lane metric labels."""
+
+    label: str
+    devices: Tuple[int, ...] = ()
+
+
+#: The one lane of a ``LanePool(serial=True)`` — the legacy architecture.
+SERIAL_LANE = LaneKey("serial", ())
+
+
+def lane_for(method: str, placement: Optional[Placement] = None,
+             smesh: Optional[ServeMesh] = None) -> LaneKey:
+    """spec→lane routing: one registry/placement table lookup.
+
+    Sharded placements (with a live mesh) own the mesh's whole device set;
+    single-device methods land on the default device under their registry
+    ``MethodEntry.lane`` kind.
+    """
+    if placement is not None and placement.sharded and smesh is not None:
+        return LaneKey(placement.lane_key(method), _device_ids(smesh))
+    return LaneKey((placement or _SINGLE).lane_key(method), _device_ids())
+
+
+class LaneWork:
+    """One unit of lane work: a zero-arg callable plus completion event.
+
+    ``urgency`` orders the lane's queue (lower = sooner; ties resolve
+    FIFO by submission sequence).  ``error`` carries an exception the
+    callable raised (or the shutdown abandonment), for the waiter to
+    re-raise or translate; the event always fires, so waiters never hang.
+    """
+
+    __slots__ = ("fn", "urgency", "size", "tag", "enqueued_at",
+                 "started_at", "error", "_event")
+
+    def __init__(self, fn: Callable[[], None], urgency: float = float("inf"),
+                 size: int = 1, tag: str = ""):
+        self.fn = fn
+        self.urgency = float(urgency)
+        self.size = int(size)
+        self.tag = tag
+        self.enqueued_at = obs.now()
+        self.started_at: Optional[float] = None
+        self.error: Optional[BaseException] = None
+        self._event = threading.Event()
+
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def wait(self, timeout: Optional[float] = None) -> bool:
+        return self._event.wait(timeout)
+
+
+@dataclass
+class LaneStats:
+    """Per-lane counters (convenience mirror of the ``serve_lane_*``
+    gauges; see ``ServeStats`` for the pattern)."""
+
+    batches: int = 0
+    requests: int = 0
+    failures: int = 0
+    busy_s: float = 0.0
+    max_queue_depth: int = 0
+
+    def as_dict(self) -> dict:
+        return dict(self.__dict__)
+
+
+class LaneShutdown(RuntimeError):
+    """The lane was shut down before (or while) the work could run."""
+
+
+# Thread-local lane marker: set once per executor thread, read by the
+# engine to run nested flushes inline (a lane must never block on itself).
+_lane_local = threading.local()
+
+
+def current_lane() -> Optional[LaneKey]:
+    """The ``LaneKey`` of the lane thread we are on (None elsewhere)."""
+    return getattr(_lane_local, "current", None)
+
+
+class LaneExecutor:
+    """One lane: a daemon thread draining a most-urgent-first work heap."""
+
+    def __init__(self, key: LaneKey,
+                 registry: Optional[obs.MetricsRegistry] = None):
+        self.key = key
+        self.stats = LaneStats()
+        reg = registry or obs.default_registry()
+        self._g_depth = reg.gauge(
+            "serve_lane_queue_depth",
+            "fired batches waiting per execution lane").labels(
+                lane=key.label)
+        self._g_inflight = reg.gauge(
+            "serve_lane_inflight",
+            "batches submitted and not yet finished per execution "
+            "lane").labels(lane=key.label)
+        self._cv = threading.Condition()
+        self._heap: List[Tuple[float, int, LaneWork]] = []
+        self._seq = 0
+        self._inflight = 0      # submitted, not yet finished
+        self._stopping = False
+        self._thread: Optional[threading.Thread] = None
+
+    # ------------------------------------------------------------ submit
+    def submit(self, work: LaneWork) -> LaneWork:
+        with self._cv:
+            if self._stopping:
+                raise LaneShutdown(f"lane {self.key.label} is shut down")
+            heapq.heappush(self._heap, (work.urgency, self._seq, work))
+            self._seq += 1
+            self._inflight += 1
+            depth = len(self._heap)
+            self.stats.max_queue_depth = max(self.stats.max_queue_depth,
+                                             depth)
+            self._g_depth.set(depth)
+            self._g_inflight.set(self._inflight)
+            if self._thread is None:
+                self._thread = threading.Thread(
+                    target=self._loop,
+                    name=f"serve-lane-{self.key.label}", daemon=True)
+                self._thread.start()
+            self._cv.notify_all()
+        return work
+
+    # -------------------------------------------------------------- loop
+    def _loop(self) -> None:
+        _lane_local.current = self.key
+        while True:
+            with self._cv:
+                while not self._heap and not self._stopping:
+                    self._cv.wait()
+                if not self._heap:  # stopping and drained
+                    return
+                _, _, work = heapq.heappop(self._heap)
+                self._g_depth.set(len(self._heap))
+            t0 = obs.now()
+            work.started_at = t0
+            try:
+                work.fn()
+            except BaseException as exc:  # surfaced via work.error
+                work.error = exc
+                self.stats.failures += 1
+            dt = obs.now() - t0
+            with self._cv:
+                self.stats.batches += 1
+                self.stats.requests += work.size
+                self.stats.busy_s += dt
+                self._inflight -= 1
+                self._g_inflight.set(self._inflight)
+                self._cv.notify_all()
+            work._event.set()
+
+    # --------------------------------------------------------- lifecycle
+    def drain(self, timeout: Optional[float] = None) -> bool:
+        """Wait until every submitted work has finished."""
+        deadline = None if timeout is None else obs.now() + timeout
+        with self._cv:
+            while self._inflight > 0:
+                remaining = (None if deadline is None
+                             else deadline - obs.now())
+                if remaining is not None and remaining <= 0:
+                    return False
+                self._cv.wait(remaining)
+        return True
+
+    def shutdown(self, drain: bool = True,
+                 timeout: Optional[float] = None) -> None:
+        """Stop the lane.  ``drain`` (default) runs queued work first;
+        otherwise queued works are abandoned (``error`` set, events fired)
+        and only the in-flight work completes."""
+        abandoned: List[LaneWork] = []
+        with self._cv:
+            self._stopping = True
+            if not drain and self._heap:
+                abandoned = [w for _, _, w in self._heap]
+                self._heap.clear()
+                self._inflight -= len(abandoned)
+                self._g_depth.set(0)
+                self._g_inflight.set(self._inflight)
+            self._cv.notify_all()
+            thread = self._thread
+        for w in abandoned:
+            w.error = LaneShutdown(f"lane {self.key.label} shut down")
+            w._event.set()
+        if thread is not None:
+            thread.join(timeout)
+
+    @property
+    def inflight(self) -> int:
+        with self._cv:
+            return self._inflight
+
+
+class LanePool:
+    """Lazily-created ``LaneExecutor`` map, keyed by ``LaneKey``.
+
+    ``serial=True`` collapses every key to ``SERIAL_LANE`` — one executor
+    thread for everything, i.e. exactly the pre-lane single-solver-thread
+    architecture (``ServeConfig.lane_execution=False`` and the benchmark
+    baseline use this).
+    """
+
+    def __init__(self, registry: Optional[obs.MetricsRegistry] = None,
+                 serial: bool = False):
+        self.registry = registry or obs.default_registry()
+        self.serial = serial
+        self._lock = threading.Lock()
+        self._lanes: Dict[LaneKey, LaneExecutor] = {}
+
+    # ----------------------------------------------------------- routing
+    def lane_for(self, method: str, placement: Optional[Placement] = None,
+                 smesh: Optional[ServeMesh] = None) -> LaneKey:
+        if self.serial:
+            return SERIAL_LANE
+        return lane_for(method, placement, smesh)
+
+    def executor(self, key: LaneKey) -> LaneExecutor:
+        with self._lock:
+            ex = self._lanes.get(key)
+            if ex is None:
+                ex = self._lanes[key] = LaneExecutor(key, self.registry)
+            return ex
+
+    def submit(self, key: LaneKey, work: LaneWork) -> LaneWork:
+        return self.executor(key).submit(work)
+
+    # ------------------------------------------------------------- reads
+    def lane_keys(self) -> List[LaneKey]:
+        with self._lock:
+            return list(self._lanes)
+
+    def stats(self) -> Dict[str, dict]:
+        """Per-lane counters keyed by lane label (live lanes only)."""
+        with self._lock:
+            lanes = dict(self._lanes)
+        return {k.label: ex.stats.as_dict() for k, ex in lanes.items()}
+
+    @property
+    def inflight(self) -> int:
+        with self._lock:
+            lanes = list(self._lanes.values())
+        return sum(ex.inflight for ex in lanes)
+
+    # --------------------------------------------------------- lifecycle
+    def drain(self, timeout: Optional[float] = None) -> bool:
+        deadline = None if timeout is None else obs.now() + timeout
+        ok = True
+        for ex in list(self._lanes.values()):
+            remaining = None if deadline is None else deadline - obs.now()
+            ok = ex.drain(remaining) and ok
+        return ok
+
+    def shutdown(self, drain: bool = True,
+                 timeout: Optional[float] = None) -> None:
+        """Stop every lane thread.  The pool stays usable: stopped lanes
+        are dropped from the map, so a later submit lazily starts a fresh
+        executor for its key (their ``LaneStats`` start over)."""
+        with self._lock:
+            lanes, self._lanes = list(self._lanes.values()), {}
+        for ex in lanes:
+            ex.shutdown(drain=drain, timeout=timeout)

@@ -77,6 +77,24 @@ class Placement:
     def sharded(self) -> bool:
         return self.kind != "single"
 
+    def lane_key(self, method: str) -> str:
+        """Stable execution-lane identity for this placement + method.
+
+        Sharded placements each get their own lane (one compiled mesh
+        layout per lane, so programs never migrate); single-device solves
+        split by the method's registry ``lane`` capability ("xla" vs the
+        Pallas "fused" path — distinct compiled-program families that
+        would otherwise serialise behind each other).  The device-set half
+        of the identity lives on ``repro.serve.lanes.LaneKey``; this
+        string is the kind half, shared by the grouping/config key and the
+        per-lane metrics labels.
+        """
+        if self.sharded:
+            return f"mesh:{self.kind}"
+        lane = (solver_method(method).lane if is_registered(method)
+                else "xla")
+        return f"single:{lane}"
+
 
 SINGLE = Placement("single")
 OBS_SHARDED = Placement("obs_sharded")

@@ -50,6 +50,12 @@ SERVE_EXPORTS = {
     "DispatchConfig",
     "DispatchStats",
     "DispatcherStopped",
+    "LaneExecutor",
+    "LaneKey",
+    "LanePool",
+    "LaneShutdown",
+    "LaneStats",
+    "LaneWork",
     "Placement",
     "PlacementPolicy",
     "PreparedDesign",
@@ -69,8 +75,10 @@ SERVE_EXPORTS = {
     "placement_for_bucket",
     "placement_for_group",
     "bucket_shape",
+    "current_lane",
     "design_fingerprint",
     "group_requests",
+    "lane_for",
     "next_pow2",
     "pad_x",
     "pad_y",

@@ -46,7 +46,8 @@ class TestFlushPolicy:
         assert disp._fire_ready(obs.now()) == []
         self._ticket(disp, _req(x, y, design_key="d"))
         fired = disp._fire_ready(obs.now())
-        assert len(fired) == 1 and len(fired[0]) == 3
+        assert len(fired) == 1 and len(fired[0][2]) == 3
+        assert fired[0][0].label == "single:xla"
         assert disp.stats.fired_full == 1
         assert not disp._pending
 
@@ -62,7 +63,8 @@ class TestFlushPolicy:
         tight = self._ticket(disp, _req(x2, y2, design_key="b"),
                              deadline_s=0.1)
         fired = disp._fire_ready(obs.now())
-        assert [b[0] for b in fired] == [tight, loose]
+        assert [b[2][0] for b in fired] == [tight, loose]
+        assert [b[1] for b in fired] == sorted(b[1] for b in fired)
         assert disp.stats.fired_deadline == 2
 
     def test_burst_fires_in_max_batch_chunks(self, rng):
@@ -73,7 +75,7 @@ class TestFlushPolicy:
         for _ in range(10):
             self._ticket(disp, _req(x, y, design_key="d"))
         fired = disp._fire_ready(obs.now())
-        assert [len(c) for c in fired] == [4, 4, 2]
+        assert [len(c) for _, _, c in fired] == [4, 4, 2]
         assert disp.stats.fired_full == 3
 
     def test_deadline_not_fired_outside_margin(self, rng):

@@ -1,0 +1,381 @@
+"""Execution lanes: routing, executor semantics, engine/dispatcher parity.
+
+Covers the lane layer end to end:
+
+  * pure routing units — ``Placement.lane_key`` / ``lane_for`` /
+    ``MethodEntry.lane`` registry capability, no threads or devices;
+  * ``LaneExecutor``/``LanePool`` concurrency semantics — most-urgent-first
+    ordering, error propagation, drain vs abandon shutdown;
+  * engine parity — a mixed xla + fused workload through the lane engine is
+    bitwise-identical to ``lane_execution=False`` (the serial baseline),
+    including a 1-device in-process mesh so the ``mesh:obs_sharded`` lane
+    runs without virtual-device forcing;
+  * the dispatcher hammer — concurrent submitters racing mixed placements
+    through ``AsyncDispatcher``, per-lane stats, clean ``stop(drain=...)``
+    with no orphaned tickets;
+  * the ``prefer_fused``-on-mesh fallback metric and the dispatch thread's
+    deadline/idle firing without a poll interval.
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from conftest import make_system
+from repro import obs
+from repro.core.spec import solver_method
+from repro.serve import (AsyncDispatcher, DispatchConfig, DispatcherStopped,
+                         LaneKey, LanePool, LaneShutdown, LaneWork, Placement,
+                         PlacementPolicy, ServeConfig, SolveRequest,
+                         SolverServeEngine, build_serve_mesh, current_lane,
+                         lane_for)
+from repro.serve.lanes import SERIAL_LANE
+
+
+def _req(x, y, **kw):
+    kw.setdefault("max_iter", 40)
+    kw.setdefault("rtol", 1e-12)
+    return SolveRequest(x=x, y=y, **kw)
+
+
+# ------------------------------------------------------------ routing (pure)
+class TestLaneRouting:
+    def test_registry_lane_capability(self):
+        assert solver_method("bakp").lane == "xla"
+        assert solver_method("bakp_gram").lane == "xla"
+        assert solver_method("bakp_fused").lane == "fused"
+        assert solver_method("bak_fused").lane == "fused"
+
+    def test_placement_lane_key(self):
+        assert Placement().lane_key("bakp_gram") == "single:xla"
+        assert Placement().lane_key("bakp_fused") == "single:fused"
+        assert Placement().lane_key("not_registered") == "single:xla"
+        assert (Placement("obs_sharded").lane_key("bakp")
+                == "mesh:obs_sharded")
+        assert (Placement("rhs_sharded").lane_key("bakp_gram")
+                == "mesh:rhs_sharded")
+
+    def test_lane_for_labels_and_devices(self):
+        xla = lane_for("bakp_gram")
+        fused = lane_for("bakp_fused")
+        assert xla.label == "single:xla" and fused.label == "single:fused"
+        assert xla != fused
+        assert len(xla.devices) == 1  # the default device
+        # same method + placement -> the same (hashable) key
+        assert lane_for("bakp_gram") == xla
+
+    def test_serial_pool_collapses_everything(self):
+        pool = LanePool(serial=True)
+        assert pool.lane_for("bakp_gram") == SERIAL_LANE
+        assert pool.lane_for("bakp_fused",
+                             Placement("obs_sharded")) == SERIAL_LANE
+
+
+# ----------------------------------------------------- executor (no devices)
+class TestLaneExecutor:
+    def test_urgency_orders_queue(self):
+        pool = LanePool(registry=obs.MetricsRegistry())
+        key = LaneKey("single:test")
+        order = []
+        gate = threading.Event()
+        first = pool.submit(key, LaneWork(gate.wait, size=0))
+        # Queue three more while the lane is blocked; they must drain
+        # most-urgent-first regardless of submission order.
+        works = [pool.submit(key, LaneWork(lambda u=u: order.append(u),
+                                           urgency=u))
+                 for u in (30.0, 10.0, 20.0)]
+        gate.set()
+        for w in works:
+            assert w.wait(10.0)
+        assert order == [10.0, 20.0, 30.0]
+        assert first.done() and first.error is None
+        stats = pool.stats()["single:test"]
+        assert stats["batches"] == 4
+        assert stats["max_queue_depth"] >= 3
+        pool.shutdown()
+
+    def test_error_lands_on_work_not_thread(self):
+        pool = LanePool(registry=obs.MetricsRegistry())
+        key = LaneKey("single:test")
+
+        def boom():
+            raise ValueError("boom")
+
+        bad = pool.submit(key, LaneWork(boom))
+        good = pool.submit(key, LaneWork(lambda: None))
+        assert bad.wait(10.0) and good.wait(10.0)
+        assert isinstance(bad.error, ValueError)
+        assert good.error is None
+        assert pool.stats()["single:test"]["failures"] == 1
+        pool.shutdown()
+
+    def test_current_lane_marks_executor_thread(self):
+        pool = LanePool(registry=obs.MetricsRegistry())
+        key = LaneKey("single:test")
+        seen = []
+        w = pool.submit(key, LaneWork(lambda: seen.append(current_lane())))
+        assert w.wait(10.0)
+        assert seen == [key]
+        assert current_lane() is None  # not on a lane thread here
+        pool.shutdown()
+
+    def test_shutdown_abandons_queued_work(self):
+        pool = LanePool(registry=obs.MetricsRegistry())
+        key = LaneKey("single:test")
+        gate = threading.Event()
+        running = pool.submit(key, LaneWork(gate.wait, size=0))
+        queued = [pool.submit(key, LaneWork(lambda: None)) for _ in range(3)]
+        gate.set()
+        pool.shutdown(drain=False)
+        assert running.wait(10.0)
+        for w in queued:
+            assert w.wait(10.0)  # events fire even though abandoned
+            assert (w.error is None  # may have started before the stop
+                    or isinstance(w.error, LaneShutdown))
+        # The pool stays usable: a fresh executor spins up for the key.
+        again = pool.submit(key, LaneWork(lambda: None))
+        assert again.wait(10.0) and again.error is None
+        pool.shutdown()
+
+
+# ------------------------------------------------------- engine parity (jax)
+class TestEngineLaneParity:
+    def _workload(self, rng, n=6):
+        reqs = []
+        for i in range(n):
+            x, y, _ = make_system(rng, 96, 12)
+            method = "bakp_fused" if i % 3 == 0 else "bakp_gram"
+            reqs.append(_req(x, y, method=method, thr=8,
+                             design_key=f"lane-{i}", request_id=f"r-{i}"))
+        return reqs
+
+    def test_mixed_lanes_bitwise_match_serial(self, rng):
+        lane_eng = SolverServeEngine(ServeConfig())
+        serial_eng = SolverServeEngine(ServeConfig(lane_execution=False))
+        r_lane = lane_eng.serve(self._workload(np.random.default_rng(3)))
+        r_serial = serial_eng.serve(self._workload(np.random.default_rng(3)))
+        assert not [r.error for r in r_lane + r_serial if r.error]
+        for a, b in zip(r_lane, r_serial):
+            assert np.array_equal(a.coef, b.coef), a.request_id
+        labels = set(lane_eng.lanes.stats())
+        assert labels == {"single:xla", "single:fused"}
+        assert set(serial_eng.lanes.stats()) == {"serial"}
+        # telemetry + per-lane gauges carry the lane identity
+        lanes_seen = {r.telemetry.lane for r in r_lane
+                      if r.telemetry is not None}
+        assert lanes_seen == {"single:xla", "single:fused"}
+        lat = lane_eng.registry.get("serve_solve_latency_seconds")
+        assert lat.count(lane="single:fused") >= 1
+        assert lat.count(lane="single:xla") >= 1
+        g = lane_eng.registry.get("serve_lane_inflight")
+        assert g.value(lane="single:xla") == 0  # drained
+        lane_eng.shutdown()
+        serial_eng.shutdown()
+
+    def test_one_device_mesh_lane(self, rng):
+        """A 1-device in-process mesh exercises the mesh lane (and its
+        resident PreparedDesign copies) without virtual-device forcing."""
+        policy = PlacementPolicy(obs_shard_min_cells=128 * 16)
+        mesh_eng = SolverServeEngine(
+            ServeConfig(placement_policy=policy),
+            mesh=build_serve_mesh("1"))
+        serial_eng = SolverServeEngine(ServeConfig())
+
+        def work(seed):
+            r = np.random.default_rng(seed)
+            reqs = []
+            for i in range(2):  # big bucket -> obs_sharded on the mesh
+                x, y, _ = make_system(r, 200, 16)
+                reqs.append(_req(x, y, method="bakp_gram", thr=16,
+                                 design_key=f"big-{i}",
+                                 request_id=f"big-{i}"))
+            for i in range(2):  # small bucket -> single lane
+                x, y, _ = make_system(r, 40, 8)
+                reqs.append(_req(x, y, method="bakp_gram", thr=8,
+                                 design_key=f"small-{i}",
+                                 request_id=f"small-{i}"))
+            return reqs
+
+        r_mesh = mesh_eng.serve(work(11))
+        r_single = serial_eng.serve(work(11))
+        assert not [r.error for r in r_mesh + r_single if r.error]
+        assert {r.placement for r in r_mesh} == {"obs_sharded", "single"}
+        for m, s in zip(r_mesh, r_single):
+            denom = np.maximum(np.abs(s.coef), 1e-12)
+            assert float(np.mean(np.abs(m.coef - s.coef) / denom)) <= 1e-5
+        assert "mesh:obs_sharded" in mesh_eng.lanes.stats()
+        # the design entries remember their home + resident lanes
+        entry = mesh_eng.cache.get("big-0", record_stats=False)
+        assert entry.home == "obs_sharded"
+        assert "obs_sharded" in entry.resident_lanes()
+        mesh_eng.shutdown()
+        serial_eng.shutdown()
+
+
+# -------------------------------------------------------- dispatcher hammer
+class TestDispatcherLanes:
+    @pytest.mark.slow
+    def test_concurrent_submitters_mixed_lanes(self, rng):
+        """Racing submitters over single:xla, single:fused and vmap traffic:
+        every ticket lands, per-lane stats populate, answers stay correct."""
+        eng = SolverServeEngine(ServeConfig())
+        cfg = DispatchConfig(max_batch=8, idle_timeout_s=0.005,
+                             prewarm_cache=True)
+        n_sub, per = 4, 12
+        systems = {}
+        r = np.random.default_rng(21)
+        for s in range(n_sub):
+            for i in range(per):
+                method = "bakp_fused" if (s + i) % 3 == 0 else "bakp_gram"
+                x = r.normal(size=(80, 10)).astype(np.float32)
+                a = r.normal(size=(10,)).astype(np.float32)
+                systems[(s, i)] = (x, x @ a, a, method)
+        tickets = {}
+        tlock = threading.Lock()
+        errs = []
+
+        def submitter(s, disp):
+            try:
+                for i in range(per):
+                    x, y, _, method = systems[(s, i)]
+                    t = disp.submit(_req(
+                        x, y, method=method, thr=8,
+                        design_key=f"d-{s}-{i}", request_id=f"q-{s}-{i}"))
+                    with tlock:
+                        tickets[(s, i)] = t
+            except Exception as exc:  # pragma: no cover - surfaced below
+                errs.append(exc)
+
+        with AsyncDispatcher(eng, cfg) as disp:
+            threads = [threading.Thread(target=submitter, args=(s, disp))
+                       for s in range(n_sub)]
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join()
+            assert not errs
+            results = {k: t.result(timeout=120.0)
+                       for k, t in tickets.items()}
+        assert len(results) == n_sub * per
+        for (s, i), res in results.items():
+            _, _, a, _ = systems[(s, i)]
+            denom = np.maximum(np.abs(a), 1e-12)
+            assert float(np.mean(np.abs(res.coef - a) / denom)) <= 1e-4
+        assert disp.inflight == 0
+        # both single-device lanes fired, and the dispatcher + engine agree
+        assert {"single:xla", "single:fused"} <= set(disp.stats.lane_batches)
+        lanes = eng.lanes.stats()
+        assert {"single:xla", "single:fused"} <= set(lanes)
+        assert (sum(ls["requests"] for ls in lanes.values())
+                >= n_sub * per)
+        eng.shutdown()
+
+    def test_stop_no_drain_orphans_nothing(self, rng):
+        eng = SolverServeEngine(ServeConfig())
+        # Huge idle timeout: batches only fire on the drain/stop path, so
+        # tickets are still pending when stop(drain=False) lands.
+        cfg = DispatchConfig(idle_timeout_s=1e9, max_batch=1000,
+                             prewarm_cache=False)
+        disp = AsyncDispatcher(eng, cfg).start()
+        x, y, _ = make_system(rng, 40, 8)
+        tickets = [disp.submit(_req(x, y, thr=8, design_key="d",
+                                    request_id=f"s-{i}"))
+                   for i in range(8)]
+        disp.stop(drain=False)
+        for t in tickets:
+            assert t.done(), "orphaned ticket after stop(drain=False)"
+            with pytest.raises(DispatcherStopped):
+                t.result(timeout=0)
+        assert disp.inflight == 0
+        eng.shutdown()
+
+    def test_stop_drain_serves_everything(self, rng):
+        eng = SolverServeEngine(ServeConfig())
+        cfg = DispatchConfig(idle_timeout_s=1e9, max_batch=1000,
+                             prewarm_cache=False)
+        disp = AsyncDispatcher(eng, cfg).start()
+        x, y, a = make_system(rng, 40, 8)
+        tickets = [disp.submit(_req(x, y, thr=8, design_key="d",
+                                    request_id=f"t-{i}"))
+                   for i in range(4)]
+        disp.stop(drain=True)
+        for t in tickets:
+            assert t.done()
+            t.result(timeout=0)  # served, not failed
+        eng.shutdown()
+
+    def test_fires_without_polling(self, rng):
+        """Idle and deadline firing rely on the computed CV wakeup now:
+        with the deprecated poll interval set absurdly high, batches must
+        still fire on time."""
+        eng = SolverServeEngine(ServeConfig())
+        x, y, _ = make_system(rng, 40, 8)
+        eng.serve([_req(x, y, thr=8, design_key="w")])  # precompile
+        cfg = DispatchConfig(idle_timeout_s=0.01, max_batch=1000,
+                             poll_interval_s=1e6, prewarm_cache=False)
+        with AsyncDispatcher(eng, cfg) as disp:
+            t0 = time.perf_counter()
+            t = disp.submit(_req(x, y, thr=8, design_key="w"))
+            t.result(timeout=30.0)
+            assert time.perf_counter() - t0 < 5.0
+        cfg = DispatchConfig(idle_timeout_s=1e9, max_batch=1000,
+                             deadline_margin_s=0.25,
+                             poll_interval_s=1e6, prewarm_cache=False)
+        with AsyncDispatcher(eng, cfg) as disp:
+            t0 = time.perf_counter()
+            t = disp.submit(_req(x, y, thr=8, design_key="w"),
+                            deadline_s=0.3)
+            t.result(timeout=30.0)
+            assert time.perf_counter() - t0 < 5.0
+        eng.shutdown()
+
+    def test_per_lane_backpressure_rejects(self, rng):
+        eng = SolverServeEngine(ServeConfig())
+        cfg = DispatchConfig(idle_timeout_s=1e9, max_batch=1000,
+                             max_lane_inflight=2, backpressure="reject",
+                             prewarm_cache=False)
+        from repro.serve import QueueFullError
+        disp = AsyncDispatcher(eng, cfg).start()
+        x, y, _ = make_system(rng, 40, 8)
+        for i in range(2):
+            disp.submit(_req(x, y, thr=8, design_key="bp",
+                             request_id=f"bp-{i}"))
+        with pytest.raises(QueueFullError, match="lane single:xla"):
+            disp.submit(_req(x, y, thr=8, design_key="bp",
+                             request_id="bp-over"))
+        disp.stop(drain=True)
+        # completions released the lane budget
+        t = disp = None
+        eng.shutdown()
+
+
+# ----------------------------------------------- prefer_fused mesh fallback
+class TestUnshardableFusedFallback:
+    def test_mesh_engine_counts_and_logs_once(self, rng, caplog):
+        eng = SolverServeEngine(ServeConfig(prefer_fused=True),
+                                mesh=build_serve_mesh("1"),
+                                registry=obs.MetricsRegistry())
+        x, y, _ = make_system(rng, 40, 8)
+        req = _req(x, y, method="bakp", thr=8, max_iter=4)
+        with caplog.at_level("WARNING", logger="repro.serve.engine"):
+            s1 = eng.spec_for(req, record=True)
+            s2 = eng.spec_for(req, record=True)
+        assert s1.method == "bakp" and s2.method == "bakp"  # no upgrade
+        ctr = eng.registry.get("solver_fallback_total")
+        assert ctr.value(reason="unshardable_fused") == 2
+        warnings = [r for r in caplog.records
+                    if "prefer_fused" in r.getMessage()]
+        assert len(warnings) == 1  # one-time log
+        eng.shutdown()
+
+    def test_single_engine_still_upgrades(self, rng):
+        eng = SolverServeEngine(ServeConfig(prefer_fused=True),
+                                registry=obs.MetricsRegistry())
+        x, y, _ = make_system(rng, 40, 8)
+        spec = eng.spec_for(_req(x, y, method="bakp", thr=8, max_iter=4),
+                            record=True)
+        assert spec.method == "bakp_fused"
+        assert eng.registry.get(
+            "solver_fallback_total").value(reason="unshardable_fused") == 0
+        eng.shutdown()
