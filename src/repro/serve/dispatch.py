@@ -230,7 +230,7 @@ class _PendingBatch:
     from, so a compiled program never migrates across lanes.
     """
 
-    lane: Optional[LaneKey] = None
+    lane: LaneKey
     tickets: List[SolveTicket] = field(default_factory=list)
     last_join: float = 0.0
 
@@ -585,7 +585,7 @@ class AsyncDispatcher:
                 setattr(self.stats, f"fired_{why}",
                         getattr(self.stats, f"fired_{why}") + 1)
                 self._m_fired.inc(1, reason=why)
-                lbl = batch.lane.label if batch.lane is not None else "?"
+                lbl = batch.lane.label
                 self.stats.lane_batches[lbl] = (
                     self.stats.lane_batches.get(lbl, 0) + 1)
                 for t in chunk:
@@ -595,7 +595,7 @@ class AsyncDispatcher:
         return fired
 
     # ------------------------------------------------------ lane execution
-    def _submit_batch(self, lane: Optional[LaneKey], urgency: float,
+    def _submit_batch(self, lane: LaneKey, urgency: float,
                       tickets: List[SolveTicket]) -> None:
         """Hand one fired batch to its execution lane.
 
@@ -623,7 +623,7 @@ class AsyncDispatcher:
             else:
                 try:
                     with obs.span("dispatch.solve_batch", size=len(tickets),
-                                  lane=lane.label if lane else "?"):
+                                  lane=lane.label):
                         served = self.engine.serve(
                             [t.request for t in tickets])
                     for ticket, result in zip(tickets, served):
@@ -636,12 +636,11 @@ class AsyncDispatcher:
                 self._works.pop(work, None)
 
         work = LaneWork(run, urgency=urgency, size=len(tickets),
-                        tag=lane.label if lane is not None else "?")
+                        tag=lane.label)
         with self._works_lock:
             self._works[work] = (try_claim, tickets)
-        key = lane if lane is not None else self.engine.lanes.lane_for("bakp")
         try:
-            self.engine.lanes.submit(key, work)
+            self.engine.lanes.submit(lane, work)
         except Exception as exc:  # lane shut down under us
             if try_claim():
                 for t in tickets:

@@ -67,6 +67,7 @@ Example::
 from __future__ import annotations
 
 import functools
+import itertools
 import logging
 import math
 import threading
@@ -262,7 +263,10 @@ class SolverServeEngine:
         self._c_sweeps: dict = {}
         self._c_solve: dict = {}
         self._pending: List[SolveRequest] = []
-        self._seq = 0
+        # Atomic id source: serve() runs concurrently on lane threads (the
+        # async dispatcher), and ``itertools.count`` advances under the GIL
+        # so ids never duplicate.
+        self._seq = itertools.count()
 
     def placement_for(self, bucket, method: str) -> Optional[Placement]:
         """Bucket-level placement (None when the engine has no mesh, so
@@ -339,8 +343,8 @@ class SolverServeEngine:
         return spec
 
     # ------------------------------------------------------------- intake
-    def submit(self, request: SolveRequest) -> str:
-        """Queue a request; returns its (possibly auto-assigned) id.
+    def _intake(self, request: SolveRequest) -> str:
+        """Normalise one request and assign its id (if absent).
 
         ``x``/``y``/``a0`` are normalised to host numpy here, once — every
         later ``np.asarray`` in the flush path is then a free view, even
@@ -348,16 +352,32 @@ class SolverServeEngine:
         """
         prepare_request(request)
         if request.request_id is None:
-            request.request_id = f"req-{self._seq}"
-        self._seq += 1
-        self._pending.append(request)
+            request.request_id = f"req-{next(self._seq)}"
         return request.request_id
 
+    def submit(self, request: SolveRequest) -> str:
+        """Queue a request for the next flush(); returns its id.
+
+        submit()/flush() are a single-caller API: the shared pending list
+        is deliberately unlocked.  Concurrent callers (the dispatcher's
+        lane threads) must use serve(), which never touches it.
+        """
+        rid = self._intake(request)
+        self._pending.append(request)
+        return rid
+
     def serve(self, requests: Sequence[SolveRequest]) -> List[ServedSolve]:
-        """submit() every request, then flush()."""
-        for r in requests:
-            self.submit(r)
-        return self.flush()
+        """Solve ``requests`` in one flush window; results in order.
+
+        Thread-safe: the batch stays local to this call — it never passes
+        through the shared submit()/flush() intake — so overlapping
+        serve() calls from different lane threads cannot steal each
+        other's requests.
+        """
+        batch = list(requests)
+        for r in batch:
+            self._intake(r)
+        return self._serve(batch)
 
     # -------------------------------------------------------------- flush
     def flush(self) -> List[ServedSolve]:
@@ -368,9 +388,13 @@ class SolverServeEngine:
         runs, so the returned list always covers all pending requests.
         """
         requests, self._pending = self._pending, []
+        return self._serve(requests)
+
+    def _serve(self, requests: List[SolveRequest]) -> List[ServedSolve]:
         if not requests:
             return []
-        self.stats.requests += len(requests)
+        with self._stats_lock:
+            self.stats.requests += len(requests)
         self._m_requests.inc(len(requests))
         with obs.span("engine.flush", requests=len(requests)), \
                 obs.profile_region("engine.flush"):

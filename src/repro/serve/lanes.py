@@ -318,8 +318,10 @@ class LanePool:
     # --------------------------------------------------------- lifecycle
     def drain(self, timeout: Optional[float] = None) -> bool:
         deadline = None if timeout is None else obs.now() + timeout
+        with self._lock:
+            lanes = list(self._lanes.values())
         ok = True
-        for ex in list(self._lanes.values()):
+        for ex in lanes:
             remaining = None if deadline is None else deadline - obs.now()
             ok = ex.drain(remaining) and ok
         return ok
