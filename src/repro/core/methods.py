@@ -281,6 +281,72 @@ def _prep_fused(p, spec: SolverSpec):
         p.x_bf16_for(spec.thr)  # quantized cache tier, warmed off-thread
 
 
+# ------------------------------------------------- streaming out-of-core
+def _stream_solve_method(p, y, spec: SolverSpec, *, a0=None, key=None,
+                         placement=None, mesh=None):
+    """Algorithm 2 with X streamed rather than VMEM-resident.
+
+    Resident designs run the double-buffered Pallas kernel
+    (``repro.kernels.stream_solve``): x tiles live in ``pltpu.ANY`` (HBM)
+    and DMA through a two-slot VMEM scratch while residual/coefficients
+    stay on-chip, so the VMEM working set is two (block, obs) tiles
+    regardless of vars.  Non-resident designs — store-backed handles whose
+    X never fits the device budget — take the host block loop
+    (``stream_solve_blocks``), fetching tiles through the design store's
+    host/disk tiers per block.  Same block-Jacobi math and stopping rule
+    as "bakp"/"bakp_fused" either way.
+    """
+    from repro.kernels.ops import solvebakp_persweep_kernel
+    from repro.kernels.stream_solve import (stream_fits, stream_solve,
+                                            stream_solve_blocks)
+
+    block = spec.thr
+    lowp = spec.precision != "fp32"
+    obs_p, vars_p = p.shape
+    if not hasattr(y, "ndim"):  # host buffers stay host (donation)
+        y = jnp.asarray(y)
+    nrhs = y.shape[1] if y.ndim == 2 else 1
+    vars_pb = -(-vars_p // block) * block
+    if spec.max_iter < 1 and p.x_pad is not None:
+        record_dispatch("xla", method="bakp_stream", reason="max_iter")
+        return solvebakp(p.x_pad, y, thr=block, max_iter=spec.max_iter,
+                         atol=spec.atol, rtol=spec.rtol, omega=spec.omega,
+                         mode="jacobi", cn=p.cn_for_thr(block), a0=a0)
+    if a0 is not None and vars_pb != vars_p:
+        xp = jnp if isinstance(a0, jax.Array) else np
+        a0 = xp.pad(xp.asarray(a0, jnp.float32),
+                    ((0, vars_pb - vars_p),) + ((0, 0),) * (a0.ndim - 1))
+    kw = dict(inv_cn=p.inv_cn_for(block), a0=a0, block=block,
+              max_iter=spec.max_iter, atol=spec.atol, rtol=spec.rtol,
+              omega=spec.omega)
+    if p.x_pad is None:
+        record_dispatch("stream_host", method="bakp_stream")
+        res = stream_solve_blocks(p.blocks, y, **kw)
+    else:
+        itemsize = 2 if lowp else 4
+        x_t = p.x_bf16_for(block) if lowp else p.x_t_for(block)
+        if stream_fits(vars_pb, obs_p, nrhs, itemsize, block=block,
+                       max_iter=spec.max_iter):
+            record_dispatch("stream", method="bakp_stream")
+            res = stream_solve(x_t, y, **kw)
+        else:
+            # Even the two-tile scratch is over budget (huge obs): the
+            # per-sweep stream shares the bounded-VMEM property.
+            record_dispatch("persweep", method="bakp_stream", reason="vmem")
+            res = solvebakp_persweep_kernel(x_t, y, variant="bakp", **kw)
+    if vars_pb != vars_p:
+        res = res._replace(coef=res.coef[:vars_p])
+    return res
+
+
+def _prep_stream(p, spec: SolverSpec):
+    p.inv_cn_for(spec.thr)
+    if p.x_pad is not None:
+        p.x_t_for(spec.thr)
+        if spec.precision != "fp32":
+            p.x_bf16_for(spec.thr)
+
+
 # ---------------------------------------------------- greedy selection (A3)
 def _bakf_solve(p, y, spec: SolverSpec, *, a0=None, key=None, placement=None,
                 mesh=None):
@@ -375,6 +441,16 @@ register_method(MethodEntry(
     summary="Algorithm 1 on the fused megakernel (sequential column "
             "order; XLA fallback when over the VMEM budget; bf16 X "
             "streaming with fp32 accumulators + fp32 polish)"))
+register_method(MethodEntry(
+    name="bakp_stream", solve=_stream_solve_method,
+    consumes=_ITER_FIELDS + ("thr", "omega", "precision"),
+    iterative=True, multi_rhs=True, batchable=False, shardable=False,
+    blocked=True, streams=True, precisions=("fp32", "bf16"),
+    lane="stream", prepare=_prep_stream,
+    summary="Algorithm 2 streaming out-of-core: x tiles double-buffered "
+            "from HBM (pltpu.ANY) through VMEM scratch, or fetched "
+            "per-block through the design store's host/disk tiers for "
+            "non-resident designs"))
 register_method(MethodEntry(
     name="lstsq", solve=_lstsq_solve, consumes=(),
     iterative=False, multi_rhs=True,

@@ -60,8 +60,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.spec import (SolverSpec, ensure_precision_supported,
-                             solver_method)
+from repro.core.spec import (SolverSpec, UnsupportedSpecError,
+                             ensure_precision_supported, solver_method,
+                             streaming_methods)
 from repro.core.types import SolveResult, column_norms_sq, safe_inv
 
 
@@ -97,7 +98,11 @@ class PreparedDesign:
     ``overwrite=True`` takes effect immediately).
     """
 
-    x_pad: jax.Array                      # (obs, vars) fp32, device-resident
+    x_pad: Optional[jax.Array]            # (obs, vars) fp32, device-resident;
+    # None for a NON-RESIDENT handle (repro.store): the design's X bytes
+    # live on the store's host/disk tiers and are fetched per column block
+    # through ``blocks`` — only methods registered ``streams=True``
+    # ("bakp_stream") can solve it; everything x-resident raises.
     spec: Optional[SolverSpec] = None     # default spec bound by prepare()
     fingerprint: Optional[str] = None
     mesh: Optional[object] = None         # serve.placement.ServeMesh-like
@@ -107,6 +112,8 @@ class PreparedDesign:
     # after later solves add other lane tiers (see resident_lanes()).
     chol: Dict[Tuple[int, float], jax.Array] = field(default_factory=dict)
     max_tenants: int = 64
+    blocks: Optional[object] = None       # StoreBlockSource of a
+    # non-resident handle (shape / num_blocks(thr) / block_t(thr, j))
     _cn: Optional[jax.Array] = field(default=None, repr=False)
     _cn_thr: Dict[int, jax.Array] = field(default_factory=dict)
     _inv_cn: Dict[int, jax.Array] = field(default_factory=dict)
@@ -120,7 +127,25 @@ class PreparedDesign:
     # ------------------------------------------------------------ identity
     @property
     def shape(self) -> Tuple[int, int]:
-        return tuple(self.x_pad.shape)
+        if self.x_pad is not None:
+            return tuple(self.x_pad.shape)
+        return tuple(self.blocks.shape)
+
+    @property
+    def resident(self) -> bool:
+        """Whether the design is device-resident (vs a store-backed
+        streaming handle)."""
+        return self.x_pad is not None
+
+    def _require_x(self, what: str) -> jax.Array:
+        """The resident design, or a clear error on a streaming handle."""
+        if self.x_pad is None:
+            raise UnsupportedSpecError(
+                f"{what} needs the device-resident design, but this "
+                f"PreparedDesign is non-resident (X blocks stream through "
+                f"the design store); solve with a streaming method "
+                f"{streaming_methods()}")
+        return self.x_pad
 
     def design_key(self) -> str:
         """This design's identity: the fingerprint handed to ``prepare``
@@ -129,7 +154,8 @@ class PreparedDesign:
         host pass the plain ``solve()`` shim should never pay."""
         with self._lock:
             if self.fingerprint is None:
-                self.fingerprint = design_fingerprint(np.asarray(self.x_pad))
+                self.fingerprint = design_fingerprint(
+                    np.asarray(self._require_x("design_key")))
             return self.fingerprint
 
     # --------------------------------------------- per-tenant warm starts
@@ -167,12 +193,12 @@ class PreparedDesign:
         nothing extra."""
         with self._lock:
             if self._cn is None:
-                self._cn = column_norms_sq(self.x_pad)
+                self._cn = column_norms_sq(self._require_x("column norms"))
             return self._cn
 
     def cn_for_thr(self, thr: int) -> jax.Array:
         """Column norms extended to SolveBakP's thr-multiple padding."""
-        vars_p = self.x_pad.shape[1]
+        vars_p = self.shape[1]
         nblocks = -(-vars_p // thr)
         pad = nblocks * thr - vars_p
         if pad == 0:
@@ -204,7 +230,7 @@ class PreparedDesign:
         """
         with self._lock:
             if thr not in self._x_t:
-                obs_p, vars_p = self.x_pad.shape
+                obs_p, vars_p = self._require_x("x_t_for").shape
                 nblocks = -(-vars_p // thr)
                 pad = nblocks * thr - vars_p
                 x_t = jnp.swapaxes(self.x_pad, 0, 1)
@@ -235,7 +261,7 @@ class PreparedDesign:
         key = (int(thr), float(ridge))
         with self._lock:
             if key not in self.chol:
-                obs_p, vars_p = self.x_pad.shape
+                obs_p, vars_p = self._require_x("chol_for").shape
                 nblocks = -(-vars_p // thr)
                 pad = nblocks * thr - vars_p
                 x = self.x_pad
@@ -267,7 +293,8 @@ class PreparedDesign:
                     raise ValueError(
                         f"unknown placement kind {placement.kind!r}")
                 self._sharded[placement] = jax.device_put(
-                    self.x_pad, NamedSharding(smesh.mesh, spec))
+                    self._require_x("x_for_placement"),
+                    NamedSharding(smesh.mesh, spec))
             return self._sharded[placement]
 
     def warm_method_state(self, spec: SolverSpec) -> None:
@@ -307,7 +334,8 @@ class PreparedDesign:
         self.bind_home(placement)
         self.warm_method_state(spec)
         mesh = mesh if mesh is not None else self.mesh
-        if placement is not None and placement.sharded and mesh is not None:
+        if (placement is not None and placement.sharded and mesh is not None
+                and self.x_pad is not None):
             self.x_for_placement(placement, mesh)
 
     def resident_lanes(self) -> Tuple[str, ...]:
@@ -370,6 +398,11 @@ class PreparedDesign:
         if not hasattr(y, "ndim"):
             y = np.asarray(y, np.float32)
         entry = ensure_precision_supported(spec)
+        if self.x_pad is None and not entry.streams:
+            raise UnsupportedSpecError(
+                f"method {spec.method!r} cannot solve a non-resident design "
+                f"(X blocks live in the design store, not on device); use a "
+                f"streaming method {streaming_methods()}")
         if y.ndim == 2 and not entry.multi_rhs:
             raise ValueError(
                 f"method {spec.method!r} does not support multi-RHS "
@@ -383,7 +416,7 @@ class PreparedDesign:
             # (vars, k).  A tenant alternating RHS counts (say a (vars, 4)
             # multi-RHS fit followed by a single-RHS solve) falls back to a
             # cold start instead of crashing the kernel's a0 check.
-            nvars = self.x_pad.shape[1]
+            nvars = self.shape[1]
             nrhs = y.shape[1] if y.ndim == 2 else 1
             if warm is not None and warm.shape in ((nvars,), (nvars, nrhs)):
                 a0 = jnp.asarray(warm)

@@ -208,6 +208,12 @@ class MethodEntry:
                  cached column-norm layout the kernel wants.
       needs_chol: wants precomputed block-Gram Cholesky factors
                  (``PreparedDesign.chol_for``).
+      streams:   can solve a *non-resident* ``PreparedDesign`` (one with
+                 ``x_pad=None`` whose X blocks are fetched through a
+                 ``blocks`` source — the ``repro.store`` tiers).  Methods
+                 without it raise ``UnsupportedSpecError`` on such handles;
+                 the serving engine reroutes over-budget designs to a
+                 streaming method instead (``"bakp_stream"``).
       precisions: ``SolverSpec.precision`` values this method can run —
                  the capability the registry/engine/placement check exactly
                  like ``shardable``.  Default fp32-only; the Pallas kernel
@@ -239,6 +245,7 @@ class MethodEntry:
     shardable: bool = False
     blocked: bool = False
     needs_chol: bool = False
+    streams: bool = False
     precisions: Tuple[str, ...] = ("fp32",)
     lane: str = "xla"
     prepare: Optional[Callable] = None
@@ -280,6 +287,11 @@ def is_registered(name: str) -> bool:
 def shardable_methods() -> Tuple[str, ...]:
     """Methods with a mesh-sharded backend (serving placement eligibility)."""
     return tuple(n for n, e in _REGISTRY.items() if e.shardable)
+
+
+def streaming_methods() -> Tuple[str, ...]:
+    """Methods that can solve non-resident (store-backed) designs."""
+    return tuple(n for n, e in _REGISTRY.items() if e.streams)
 
 
 def methods_for_precision(precision: str) -> Tuple[str, ...]:

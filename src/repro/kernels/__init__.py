@@ -9,10 +9,18 @@
                    residual resident in VMEM scratch across the grid.
   block_update.py  obs-streamed rank-thr residual correction + fused
                    SolveBakF feature scoring.
+  stream_solve.py  streaming out-of-core megakernel: x tiles stay in HBM
+                   (pltpu.ANY) and double-buffer through a two-slot VMEM
+                   scratch per block — the VMEM working set is independent
+                   of vars, so over-budget designs keep the single-launch
+                   early-exit execution model.  Plus a host block loop
+                   (stream_solve_blocks) for store-backed non-resident
+                   designs whose tiles fetch from host RAM or disk.
   ops.py           solver entries: solvebakp_kernel (fused when the design
-                   fits VMEM, per-sweep launch loop otherwise) + wrappers
-                   (interpret=True off-TPU, y/a0 buffer donation on
-                   accelerators).
+                   fits VMEM, per-sweep launch loop otherwise),
+                   solvebakp_stream_kernel (HBM-resident x, streamed) +
+                   wrappers (interpret=True off-TPU, y/a0 buffer donation
+                   on accelerators).
   ref.py           pure-jnp oracles, tested via shape/dtype sweeps.
 """
 from repro.kernels.block_update import block_update, score_features
@@ -27,6 +35,14 @@ from repro.kernels.ops import (
     score_features_kernel,
     solvebakp_kernel,
     solvebakp_persweep_kernel,
+    solvebakp_stream_kernel,
+)
+from repro.kernels.stream_solve import (
+    stream_fits,
+    stream_solve,
+    stream_solve_blocks,
+    stream_vmem_bytes,
+    stream_x_resident_bytes,
 )
 
 __all__ = [
@@ -41,4 +57,10 @@ __all__ = [
     "score_features_kernel",
     "solvebakp_kernel",
     "solvebakp_persweep_kernel",
+    "solvebakp_stream_kernel",
+    "stream_fits",
+    "stream_solve",
+    "stream_solve_blocks",
+    "stream_vmem_bytes",
+    "stream_x_resident_bytes",
 ]

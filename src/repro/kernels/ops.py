@@ -37,6 +37,7 @@ from repro.kernels.block_update import block_update, score_features
 from repro.kernels.cd_sweep import bakp_sweep, cd_sweep
 from repro.kernels.fused_solve import (fused_fits, fused_solve, solve_init,
                                        validate_solver_args)
+from repro.kernels.stream_solve import stream_fits, stream_solve
 
 
 def _persweep_impl(x_t, y, inv_cn, a0, atol, rtol, *, block, max_iter,
@@ -173,6 +174,48 @@ def solvebakp_kernel(
     return solvebakp_persweep_kernel(
         x_t, y, cn=cn, inv_cn=inv_cn, a0=a0, block=block, max_iter=max_iter,
         atol=atol, rtol=rtol, omega=omega, variant=variant,
+        interpret=interpret, donate=donate)
+
+
+def solvebakp_stream_kernel(
+    x_t: jax.Array,
+    y: jax.Array,
+    *,
+    cn: Optional[jax.Array] = None,
+    inv_cn: Optional[jax.Array] = None,
+    a0: Optional[jax.Array] = None,
+    block: int = 256,
+    max_iter: int = 50,
+    atol: float = 0.0,
+    rtol: float = 0.0,
+    omega: float = 1.0,
+    interpret: Optional[bool] = None,
+    donate: Optional[bool] = None,
+) -> SolveResult:
+    """Streaming out-of-core SolveBakP: x stays in HBM (``pltpu.ANY``) and
+    tiles double-buffer through a two-slot VMEM scratch while the residual,
+    coefficients and convergence state stay on-chip for every sweep
+    (``repro.kernels.stream_solve``).  The VMEM working set is two
+    (block, obs) x tiles plus the accumulators — independent of vars — so
+    designs far over the whole-solve budget keep the fused kernel's
+    single-launch, early-exit execution model.  Arguments as
+    ``solvebakp_kernel``; falls back to the per-sweep launch loop when even
+    the two-tile scratch exceeds the VMEM budget or ``max_iter < 1``.
+    """
+    nvars, obs = x_t.shape
+    _, nrhs, inv_cn = validate_solver_args(x_t, y, cn, inv_cn, a0)
+    if (max_iter >= 1
+            and stream_fits(nvars, obs, nrhs, x_t.dtype.itemsize,
+                            block=block, max_iter=max_iter)):
+        record_dispatch("stream", method="bakp")
+        return stream_solve(x_t, y, inv_cn=inv_cn, a0=a0, block=block,
+                            max_iter=max_iter, atol=atol, rtol=rtol,
+                            omega=omega, interpret=interpret, donate=donate)
+    reason = "max_iter" if max_iter < 1 else "vmem"
+    record_dispatch("persweep", method="bakp", reason=reason)
+    return solvebakp_persweep_kernel(
+        x_t, y, inv_cn=inv_cn, a0=a0, block=block, max_iter=max_iter,
+        atol=atol, rtol=rtol, omega=omega, variant="bakp",
         interpret=interpret, donate=donate)
 
 

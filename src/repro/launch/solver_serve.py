@@ -254,6 +254,21 @@ def main():
                     help="disable per-placement execution lanes: run every "
                          "batch on one serial executor thread (the pre-lane "
                          "architecture; results are bit-identical)")
+    ap.add_argument("--store-device-bytes", type=int, default=None,
+                    help="device-tier byte budget for the tiered design "
+                         "store (repro.store): eviction demotes designs to "
+                         "host RAM/disk instead of deleting them, and "
+                         "over-budget designs serve via the streaming "
+                         "'bakp_stream' method.  Unset (with the other "
+                         "--store-* flags) = plain LRU cache, bit-identical "
+                         "behaviour")
+    ap.add_argument("--store-host-bytes", type=int, default=None,
+                    help="host-tier byte budget; overflow spills LRU host "
+                         "snapshots to --store-dir (or drops X bytes, "
+                         "keeping warm/Cholesky state, when unset)")
+    ap.add_argument("--store-dir", default=None, metavar="DIR",
+                    help="disk-tier directory for memmapped design tile "
+                         "files (unset = no disk tier)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--check", action="store_true",
                     help="verify every request vs numpy lstsq (slow)")
@@ -307,7 +322,10 @@ def main():
                     prefer_fused=args.prefer_fused,
                     lane_execution=not args.no_lanes,
                     precision=(args.precision if args.precision != "fp32"
-                               else None)),
+                               else None),
+                    store_device_bytes=args.store_device_bytes,
+                    store_host_bytes=args.store_host_bytes,
+                    store_dir=args.store_dir),
         mesh=smesh)
     xs = [rng.normal(size=(args.obs, args.vars)).astype(np.float32)
           for _ in range(args.designs)]

@@ -22,7 +22,10 @@ Layout:
                deterministic request grouping (canonical-spec keyed),
                request validation.
   cache.py     LRU DesignCache of PreparedDesign handles (per-design solver
-               state + warm coefs).
+               state + warm coefs); with a ``repro.store.DesignStore``
+               attached it becomes a view over the store's device tier —
+               eviction demotes to host/disk instead of deleting, and
+               over-budget designs serve as non-resident streaming handles.
   placement.py Placement/PlacementPolicy/ServeMesh — routing buckets onto
                the mesh-sharded solvers (obs-sharded, k-sharded multi-RHS,
                2-D) by padded size.
@@ -65,12 +68,14 @@ from repro.serve.placement import (Placement, PlacementPolicy, ServeMesh,
                                    build_serve_mesh, mesh_device_count,
                                    placement_for_bucket, placement_for_group)
 from repro.serve.types import ServedSolve, SolveRequest
+from repro.store import DesignStore, StoreStats
 
 __all__ = [
     "AsyncDispatcher",
     "CacheStats",
     "DesignCache",
     "DesignEntry",
+    "DesignStore",
     "DispatchConfig",
     "DispatchStats",
     "DispatcherStopped",
@@ -93,6 +98,7 @@ __all__ = [
     "SolveTicket",
     "SolverServeEngine",
     "SolverSpec",
+    "StoreStats",
     "UnsupportedSpecError",
     "build_serve_mesh",
     "mesh_device_count",

@@ -26,6 +26,14 @@ blocks another design's lookups) moved with the state and are unchanged.
 Entries are LRU-evicted so memory is bounded by ``max_entries`` designs;
 per-entry warm coefficients are themselves LRU-bounded by ``max_tenants``.
 The cache-level lock only covers the LRU map itself.
+
+PR 9: with a ``repro.store.DesignStore`` attached (``store=``), the cache
+becomes a *view over the store's device tier* — eviction turns into
+demotion (device → host → disk, warm-start state preserved), lookups that
+miss the device tier try a promotion before rebuilding from source, and
+designs too large for the device byte budget come back as non-resident
+streaming handles served by the ``"bakp_stream"`` method.  Without a store
+the behaviour is bit-identical to before.
 """
 from __future__ import annotations
 
@@ -76,9 +84,11 @@ class DesignCache:
     """
 
     def __init__(self, max_entries: int = 64, max_tenants: int = 64,
-                 registry: Optional[obs.MetricsRegistry] = None):
+                 registry: Optional[obs.MetricsRegistry] = None,
+                 store=None):
         self.max_entries = max_entries
         self.max_tenants = max_tenants
+        self.store = store  # Optional[repro.store.DesignStore]
         self.stats = CacheStats()
         reg = registry or obs.default_registry()
         self._m_hits = reg.counter(
@@ -93,14 +103,44 @@ class DesignCache:
         self._entries: "OrderedDict[str, PreparedDesign]" = OrderedDict()
 
     def __len__(self) -> int:
+        if self.store is not None:
+            return len(self.store)  # device-tier resident count
         return len(self._entries)
+
+    def _record_lookup(self, hit: bool, record_stats: bool) -> None:
+        if not record_stats:
+            return
+        with self._lock:
+            if hit:
+                self.stats.hits += 1
+                self._m_hits.inc()
+            else:
+                self.stats.misses += 1
+                self._m_misses.inc()
+
+    def _sync_evictions(self, demotions_before: int) -> None:
+        """Mirror store demotions into the historical eviction counters —
+        dashboards keyed on ``serve_cache_evictions_total`` keep reading
+        the device tier's turnover."""
+        delta = self.store.stats.demotions_device - demotions_before
+        if delta > 0:
+            with self._lock:
+                self.stats.evictions += delta
+                self._m_evictions.inc(delta)
+        self._m_resident.set(len(self.store))
 
     def get(self, key: str,
             record_stats: bool = True) -> Optional[PreparedDesign]:
         """Fetch (and LRU-touch) an entry.  ``record_stats=False`` makes the
         lookup invisible to hit/miss accounting — used by the dispatcher's
         pre-warm so each request still logs exactly one cache event, at
-        flush time."""
+        flush time.  Store-backed: returns the device-resident entry or the
+        non-resident streaming handle; never promotes (that is
+        ``get_or_build``'s job, so plain lookups stay O(1))."""
+        if self.store is not None:
+            entry = self.store.get(key)
+            self._record_lookup(entry is not None, record_stats)
+            return entry
         with self._lock:
             entry = self._entries.get(key)
             if entry is None:
@@ -115,6 +155,11 @@ class DesignCache:
             return entry
 
     def put(self, key: str, entry: PreparedDesign) -> PreparedDesign:
+        if self.store is not None:
+            before = self.store.stats.demotions_device
+            out = self.store.admit(key, entry)
+            self._sync_evictions(before)
+            return out
         with self._lock:
             existing = self._entries.get(key)
             if existing is not None:  # build race: first writer wins
@@ -146,17 +191,42 @@ class DesignCache:
         lane-resident sharded copy and bind the entry's home placement
         (``PreparedDesign.bind_home`` — first-wins).  Returns
         (entry, cache_hit).
+
+        Store-backed: a device-tier miss first tries ``store.promote`` —
+        climbing the design back from its host/disk snapshot (with warm
+        coefficients and Cholesky state restored) counts as a *hit*, since
+        ``build_x_pad`` never runs.  The dispatcher's pre-warm routes
+        through here, so promotion overlaps queue wait by construction.
+        Only a design unknown to every tier rebuilds from source.
         """
-        entry = self.get(key, record_stats)
-        hit = entry is not None
-        if not hit:
-            built = prepare(np.asarray(build_x_pad(), np.float32),
-                            fingerprint=key, max_tenants=self.max_tenants)
-            entry = self.put(key, built)
+        if self.store is not None:
+            entry = self.store.get(key)
+            hit = entry is not None
+            if not hit:
+                before = self.store.stats.demotions_device
+                promoted = self.store.promote(key)
+                if promoted is not None:
+                    entry, hit = promoted, True
+                self._sync_evictions(before)
+            self._record_lookup(hit, record_stats)
+            if not hit:
+                before = self.store.stats.demotions_device
+                entry = self.store.build(
+                    key, np.asarray(build_x_pad(), np.float32),
+                    max_tenants=self.max_tenants)
+                self._sync_evictions(before)
+        else:
+            entry = self.get(key, record_stats)
+            hit = entry is not None
+            if not hit:
+                built = prepare(np.asarray(build_x_pad(), np.float32),
+                                fingerprint=key, max_tenants=self.max_tenants)
+                entry = self.put(key, built)
         if spec is not None:
             entry.warm_lane_state(spec, placement=placement, mesh=mesh)
         else:
             entry.bind_home(placement)
-            if placement is not None and placement.sharded and mesh is not None:
+            if (placement is not None and placement.sharded
+                    and mesh is not None and entry.x_pad is not None):
                 entry.x_for_placement(placement, mesh)
         return entry, hit

@@ -531,7 +531,10 @@ class AsyncDispatcher:
                 # factors) here on the dispatch thread, and the placement
                 # additionally binds the entry's home lane and builds the
                 # lane-resident sharded copy — all overlapping whatever
-                # solves are in flight on the lanes.
+                # solves are in flight on the lanes.  On a store-backed
+                # engine this is also the async tier *promotion*: a design
+                # demoted to host/disk climbs back to device here, while
+                # its request still waits in the intake queue.
                 self.engine.cache.get_or_build(
                     req.design_key,
                     lambda: pad_x(np.asarray(req.x), bucket),

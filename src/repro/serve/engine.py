@@ -92,6 +92,13 @@ from repro.serve.types import ServedSolve, SolveRequest
 
 _log = logging.getLogger(__name__)
 
+# BAK-family methods a store-backed engine rewrites to "bakp_stream" when a
+# request's bucket exceeds the device byte budget (spec_for): same
+# block-Jacobi mathematics, served through the store's streaming path
+# instead of a resident X copy that could never be admitted.
+_STREAM_REROUTE = frozenset(
+    {"bak", "bakp", "bakp_gram", "bakp_fused", "bak_fused"})
+
 
 @dataclass
 class ServeConfig:
@@ -129,6 +136,20 @@ class ServeConfig:
     # benchmark baseline and a conservative fallback.  Results are
     # bit-identical either way (batch composition and per-batch execution
     # are unchanged; only cross-batch overlap differs).
+    store_device_bytes: Optional[int] = None  # device-tier byte budget for
+    # the design store (repro.store).  With any store_* knob set, the
+    # design cache becomes a view over a tiered DesignStore: eviction
+    # demotes (device → host RAM → disk) instead of deleting, demoted
+    # designs promote back with warm-start/Cholesky state intact, and
+    # requests whose bucket exceeds this budget are rewritten to the
+    # streaming "bakp_stream" method (counted as solver_fallback_total
+    # {reason="over_hbm"}).  All three None (default) = no store; behaviour
+    # and results are bit-identical to the plain LRU cache.
+    store_host_bytes: Optional[int] = None    # host-tier budget; overflow
+    # spills LRU host snapshots to disk (or drops X bytes, state kept,
+    # when store_dir is unset)
+    store_dir: Optional[str] = None           # disk-tier directory for the
+    # memmapped design tile files; None disables the disk tier
 
 
 @dataclass
@@ -212,9 +233,22 @@ class SolverServeEngine:
         # process-global registry; pass a fresh MetricsRegistry to isolate
         # (benchmarks comparing engine variants do).
         self.registry = registry or obs.default_registry()
+        cfg = self.config
+        if (cfg.store_device_bytes is not None
+                or cfg.store_host_bytes is not None
+                or cfg.store_dir is not None):
+            from repro.store import DesignStore
+            self.store = DesignStore(device_bytes=cfg.store_device_bytes,
+                                     host_bytes=cfg.store_host_bytes,
+                                     disk_dir=cfg.store_dir,
+                                     max_entries=cfg.cache_entries,
+                                     registry=self.registry)
+        else:
+            self.store = None
         self.cache = DesignCache(max_entries=self.config.cache_entries,
                                  max_tenants=self.config.warm_tenants,
-                                 registry=self.registry)
+                                 registry=self.registry,
+                                 store=self.store)
         # The engine owns its lane pool: the synchronous flush and the
         # async dispatcher submit into the same executors, so per-lane
         # program affinity (and the per-lane gauges) cover both paths.
@@ -300,6 +334,21 @@ class SolverServeEngine:
             if (self.config.precision is not None
                     and spec.precision != self.config.precision):
                 spec = spec.replace(precision=self.config.precision)
+        # Over-HBM rewrite (store engines): a bucket whose padded X alone
+        # exceeds the device byte budget can never be served resident — the
+        # store builds it as a non-resident streaming handle — so reroute
+        # the BAK-family request to the streaming method up front (same
+        # block-Jacobi algorithm; parity-tested against "bakp"), before
+        # prefer_fused could upgrade it onto a resident-only path.
+        if (self.store is not None and self.store.device_bytes is not None
+                and spec.method in _STREAM_REROUTE):
+            bucket = request_bucket(req, min_obs=self.config.min_obs,
+                                    min_vars=self.config.min_vars)
+            if bucket[0] * bucket[1] * 4 > self.store.device_bytes:
+                if record:
+                    self._m_fallback.inc(1, method=spec.method,
+                                         reason="over_hbm")
+                spec = spec.replace(method="bakp_stream")
         # The bf16 X stream halves the resident itemsize, so the fit check
         # (and therefore the upgrade) sees twice the VMEM headroom.
         itemsize = 2 if spec.precision != "fp32" else 4

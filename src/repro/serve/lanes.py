@@ -13,8 +13,10 @@ drains independently.
 Routing is one table lookup (``lane_for``): a sharded ``Placement`` maps to
 its mesh lane (kind + the mesh's device ids), everything else to the
 method's registry-declared single-device lane (``MethodEntry.lane`` —
-"xla" for the jit'd family, "fused" for the Pallas megakernels) on the
-default device.  ``Placement.lane_key`` supplies the kind half of the
+"xla" for the jit'd family, "fused" for the Pallas megakernels, "stream"
+for the out-of-core ``"bakp_stream"`` solves, whose host/disk block
+fetches would otherwise stall resident-path batches) on the default
+device.  ``Placement.lane_key`` supplies the kind half of the
 identity; ``LaneKey.devices`` the device-set half, so two engines on
 disjoint meshes get disjoint lanes while one engine's repeat buckets share
 theirs.

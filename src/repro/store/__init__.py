@@ -1,0 +1,20 @@
+"""repro.store — tiered (device / host / disk) design residency store.
+
+``DesignStore`` turns device memory into the hot tier of a three-tier
+store: LRU demotion replaces eviction (device → host-RAM snapshot → disk
+tile files), promotion restores every piece of snapshotted state (norms,
+Cholesky factors, per-tenant warm-start coefficients), and designs too
+large for the device budget are served through a non-resident streaming
+handle (``StoreBlockSource`` + the ``"bakp_stream"`` solver method).  See
+``repro.store.store`` for the full design.
+"""
+from repro.store.store import (DesignStore, DiskDesign, HostDesign,
+                               StoreBlockSource, StoreStats)
+
+__all__ = [
+    "DesignStore",
+    "DiskDesign",
+    "HostDesign",
+    "StoreBlockSource",
+    "StoreStats",
+]

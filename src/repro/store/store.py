@@ -1,0 +1,672 @@
+"""DesignStore — the tiered (device / host / disk) design residency store.
+
+The paper's memory claim — "for each iteration, only one dimension of the
+given input matrix X is utilized" — means a solve's *working set* is one
+column block plus the small accumulators, while our serving stack (through
+PR 8) still kept every tenant's full design device-resident, capping fleet
+scale at HBM size.  This module removes that ceiling: device memory becomes
+the *hot tier* of a three-tier store, and the tenant count is bounded by
+disk, not HBM.
+
+Tiers, hottest first:
+
+  * **device** — today's behaviour: a ``PreparedDesign`` with ``x_pad`` (and
+    its lazily built ``x_t_for``/``x_bf16_for``/sharded copies) resident on
+    the accelerator.  Bounded by ``device_bytes`` and ``max_entries``.
+  * **host** — a ``HostDesign`` snapshot in host RAM: numpy copies of the
+    per-block ``x_t_for``/``x_bf16_for`` layouts (or the raw ``x_pad`` when
+    none were built) plus the small derived state — column norms, block-Gram
+    Cholesky factors — and, crucially, the per-tenant warm-coefficient LRU,
+    so a returning tenant after re-admission still warm-starts (the PR 9
+    eviction regression fix).  Bounded by ``host_bytes``.
+  * **disk** — memmapped per-block tile files under
+    ``<disk_dir>/<fingerprint>/``, one ``(thr, obs)`` fp32 tile per column
+    block of the transposed layout.  The small state stays in RAM on the
+    ``DiskDesign`` record.  Unbounded (disk is the floor).
+
+Transitions are **demotions, not deletions**: the device tier over budget
+demotes its LRU entry to host; host over budget demotes to disk (or, with
+no ``disk_dir``, drops only the X bytes and keeps a state-only record so
+warm coefficients and Cholesky factors survive a rebuild).  ``promote``
+climbs back up — restoring every piece of snapshotted state onto the fresh
+``PreparedDesign`` — and a disk promotion deletes its tile files (one full
+round trip).  Promotion is *async by construction*: the serving cache's
+``get_or_build`` promotes, and the async dispatcher's pre-warm calls it on
+the dispatch thread, so a cold-tier design is climbing tiers while its
+request still waits in the intake queue.
+
+Designs whose padded X exceeds ``device_bytes`` outright never become
+device-resident: ``build`` keeps their bytes in the host/disk tiers and
+returns a *non-resident* ``PreparedDesign`` (``x_pad=None``) whose
+``blocks`` attribute is a ``StoreBlockSource`` — the per-block fetch
+interface the ``"bakp_stream"`` solver method consumes (see
+``repro.kernels.stream_solve``).
+
+Metrics (PR 6 registry): ``store_bytes{tier}`` / ``store_resident{tier}``
+gauges, ``store_promotions_total{from,to}`` counting every tier move in
+both directions, and a ``store_fetch_latency_seconds{tier}`` histogram over
+promotions and streaming block fetches.
+
+Concurrency: one store ``RLock`` guards the tier maps; per-design state is
+additionally guarded by each ``PreparedDesign``'s own lock.  A demotion
+concurrent with an in-flight solve is safe — the solve keeps its reference
+to the old handle (its device buffers stay alive until the last reference
+drops); at worst a warm-coefficient write landing on the demoted handle
+*after* its snapshot is lost, which is the pre-existing best-effort warm
+contract.
+"""
+from __future__ import annotations
+
+import shutil
+import threading
+from collections import OrderedDict
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro import obs
+from repro.core.prepare import PreparedDesign, prepare
+
+#: Tile width used when a design reaches the disk tier without any
+#: transposed layout built yet (no solve touched it while resident).
+DEFAULT_TILE = 128
+
+
+def _entry_device_bytes(entry: PreparedDesign) -> int:
+    """Device bytes a resident ``PreparedDesign`` holds: the padded design
+    plus every lazily built tier (transposed, bf16, sharded copies).  The
+    small vectors (norms, Cholesky) are ignored — they are O(vars), noise
+    next to O(obs·vars)."""
+    with entry._lock:
+        total = entry.x_pad.size * entry.x_pad.dtype.itemsize
+        for d in (entry._x_t, entry._x_bf16, entry._sharded):
+            for a in d.values():
+                total += a.size * a.dtype.itemsize
+    return total
+
+
+@dataclass
+class HostDesign:
+    """Host-RAM snapshot of one demoted design (see module doc).
+
+    ``x_t``/``x_bf16`` hold the per-block kernel layouts that were resident
+    at demotion time; ``x_pad`` is kept only when no transposed layout
+    existed (so the design is always reconstructible from exactly one
+    representation).  A *state-only* record (all three empty) survives an
+    X-byte drop and still restores warm/Cholesky state on rebuild.
+    """
+
+    key: str
+    shape: Tuple[int, int]                      # (obs_p, vars_p)
+    max_tenants: int = 64
+    x_pad: Optional[np.ndarray] = None          # (obs, vars) fp32
+    x_t: Dict[int, np.ndarray] = field(default_factory=dict)
+    x_bf16: Dict[int, np.ndarray] = field(default_factory=dict)
+    cn: Optional[np.ndarray] = None
+    chol: Dict[Tuple[int, float], np.ndarray] = field(default_factory=dict)
+    warm: "OrderedDict[str, np.ndarray]" = field(default_factory=OrderedDict)
+    home: Optional[str] = None
+
+    @property
+    def nbytes(self) -> int:
+        total = 0 if self.x_pad is None else self.x_pad.nbytes
+        for d in (self.x_t, self.x_bf16):
+            for a in d.values():
+                total += a.nbytes
+        return total
+
+    def has_x(self) -> bool:
+        return self.x_pad is not None or bool(self.x_t)
+
+    def drop_x(self) -> None:
+        self.x_pad = None
+        self.x_t = {}
+        self.x_bf16 = {}
+
+    def read_cols(self, lo: int, hi: int) -> np.ndarray:
+        """Columns ``lo:hi`` of the design in transposed layout, (hi-lo,
+        obs) fp32.  Rows at/above ``vars_p`` come back zero (thr padding)."""
+        obs_p, vars_p = self.shape
+        out = np.zeros((hi - lo, obs_p), np.float32)
+        real = min(hi, vars_p) - lo
+        if real <= 0:
+            return out
+        if self.x_t:
+            src = next(iter(self.x_t.values()))
+            stop = min(hi, src.shape[0])
+            out[: stop - lo] = src[lo:stop]
+        elif self.x_pad is not None:
+            out[:real] = self.x_pad[:, lo:lo + real].T
+        else:
+            raise RuntimeError(
+                f"design {self.key!r}: X bytes were dropped (host budget "
+                f"exceeded with no disk tier configured); only warm/derived "
+                f"state survives — configure DesignStore(disk_dir=...)")
+        return out
+
+
+@dataclass
+class DiskDesign:
+    """Disk-tier record: memmapped per-block tile files plus the small
+    state that stays in RAM (norms, Cholesky, warm coefficients)."""
+
+    key: str
+    shape: Tuple[int, int]
+    tile_dir: Path
+    thr: int                                     # tile width of the files
+    nblocks: int
+    max_tenants: int = 64
+    cn: Optional[np.ndarray] = None
+    chol: Dict[Tuple[int, float], np.ndarray] = field(default_factory=dict)
+    warm: "OrderedDict[str, np.ndarray]" = field(default_factory=OrderedDict)
+    home: Optional[str] = None
+
+    @property
+    def nbytes(self) -> int:
+        return self.nblocks * self.thr * self.shape[0] * 4
+
+    def tile_path(self, j: int) -> Path:
+        return self.tile_dir / f"t{self.thr}_b{j}.bin"
+
+    def tile(self, j: int) -> np.ndarray:
+        """Memmap one (thr, obs) fp32 tile (read-only)."""
+        return np.memmap(self.tile_path(j), dtype=np.float32, mode="r",
+                         shape=(self.thr, self.shape[0]))
+
+    def read_cols(self, lo: int, hi: int) -> np.ndarray:
+        obs_p, vars_p = self.shape
+        out = np.zeros((hi - lo, obs_p), np.float32)
+        stop = min(hi, self.nblocks * self.thr)
+        pos = lo
+        while pos < stop:
+            j = pos // self.thr
+            t_lo = pos - j * self.thr
+            t_hi = min(self.thr, stop - j * self.thr)
+            out[pos - lo: pos - lo + (t_hi - t_lo)] = self.tile(j)[t_lo:t_hi]
+            pos = j * self.thr + t_hi
+        return out
+
+    def delete_tiles(self) -> None:
+        shutil.rmtree(self.tile_dir, ignore_errors=True)
+
+
+class StoreBlockSource:
+    """Per-block fetch interface of a non-resident design.
+
+    The ``"bakp_stream"`` method's host fallback (and any future kernel
+    that streams from host memory) pulls (thr, obs) fp32 tiles of the
+    transposed layout through this, wherever the bytes currently live
+    (host RAM or disk — the source re-resolves the tier on every fetch, so
+    a design demoted to disk mid-solve keeps serving blocks).
+    """
+
+    def __init__(self, store: "DesignStore", key: str,
+                 shape: Tuple[int, int]):
+        self._store = store
+        self.key = key
+        self.shape = tuple(shape)               # (obs_p, vars_p)
+
+    def num_blocks(self, thr: int) -> int:
+        return -(-self.shape[1] // thr)
+
+    def block_t(self, thr: int, j: int) -> np.ndarray:
+        """Tile ``j`` of the thr-blocked transposed layout, (thr, obs)
+        fp32, zero-padded past the real column count."""
+        return self._store._fetch_block(self.key, thr, j)
+
+
+@dataclass
+class StoreStats:
+    """Per-store counters (convenience mirror of the ``store_*`` metric
+    families; see ``CacheStats`` for the pattern)."""
+
+    admits: int = 0
+    builds_nonresident: int = 0
+    demotions_device: int = 0      # device → host
+    demotions_disk: int = 0        # host → disk
+    promotions_host: int = 0       # host → device
+    promotions_disk: int = 0       # disk → device
+    x_drops: int = 0               # host X bytes dropped (no disk tier)
+
+    def as_dict(self) -> dict:
+        return dict(self.__dict__)
+
+
+class DesignStore:
+    """Three-tier byte-budgeted design residency store (see module doc).
+
+    Args:
+      device_bytes: device-tier budget.  None = unbounded (every design is
+        admitted resident; only ``max_entries`` demotes).  A design whose
+        padded X alone exceeds this is *never* admitted resident — it is
+        built non-resident with its bytes on the host/disk tiers.
+      host_bytes: host-tier budget; overflow demotes LRU host entries to
+        disk (or drops their X bytes when no ``disk_dir`` is set).
+      disk_dir: directory for the memmapped tile files; None disables the
+        disk tier.
+      max_entries: LRU entry-count bound on the device tier (the historical
+        ``DesignCache.max_entries`` semantics; None = bytes-only).
+      registry: ``repro.obs`` metrics registry (process default if None).
+    """
+
+    def __init__(self, device_bytes: Optional[int] = None,
+                 host_bytes: Optional[int] = None,
+                 disk_dir: Optional[str] = None,
+                 max_entries: Optional[int] = None,
+                 registry: Optional[obs.MetricsRegistry] = None):
+        self.device_bytes = device_bytes
+        self.host_bytes = host_bytes
+        self.disk_dir = Path(disk_dir) if disk_dir is not None else None
+        self.max_entries = max_entries
+        self.stats = StoreStats()
+        reg = registry or obs.default_registry()
+        g_bytes = reg.gauge("store_bytes",
+                            "bytes resident per design-store tier")
+        g_res = reg.gauge("store_resident",
+                          "designs resident per design-store tier")
+        self._g_bytes = {t: g_bytes.labels(tier=t)
+                         for t in ("device", "host", "disk")}
+        self._g_res = {t: g_res.labels(tier=t)
+                       for t in ("device", "host", "disk")}
+        self._m_moves = reg.counter(
+            "store_promotions_total",
+            "design tier transitions (demotions AND promotions), "
+            "by from/to tier")
+        h_fetch = reg.histogram(
+            "store_fetch_latency_seconds",
+            "tier-promotion and streaming block-fetch latency, by source "
+            "tier", buckets=obs.LATENCY_BUCKETS)
+        self._h_fetch = {t: h_fetch.labels(tier=t)
+                         for t in ("host", "disk")}
+        self._lock = threading.RLock()
+        self._device: "OrderedDict[str, PreparedDesign]" = OrderedDict()
+        self._host: "OrderedDict[str, HostDesign]" = OrderedDict()
+        self._disk: "OrderedDict[str, DiskDesign]" = OrderedDict()
+        # Non-resident handles (x_pad=None, blocks=StoreBlockSource): kept
+        # alive here so repeat requests reuse one handle (and its warm
+        # coefficients / lazily-built inv norms).
+        self._nonres: Dict[str, PreparedDesign] = {}
+
+    # ------------------------------------------------------------ accounting
+    def __len__(self) -> int:
+        """Device-resident design count (the ``DesignCache`` contract)."""
+        with self._lock:
+            return len(self._device)
+
+    def device_used(self) -> int:
+        with self._lock:
+            return sum(_entry_device_bytes(e) for e in self._device.values())
+
+    def host_used(self) -> int:
+        with self._lock:
+            return sum(h.nbytes for h in self._host.values())
+
+    def disk_used(self) -> int:
+        with self._lock:
+            return sum(d.nbytes for d in self._disk.values())
+
+    def tier(self, key: str) -> str:
+        """Where a design's X bytes currently live: "device" / "host" /
+        "disk" / "none"."""
+        with self._lock:
+            if key in self._device:
+                return "device"
+            h = self._host.get(key)
+            if h is not None and h.has_x():
+                return "host"
+            if key in self._disk:
+                return "disk"
+            return "none"
+
+    def _update_gauges(self) -> None:
+        self._g_bytes["device"].set(self.device_used())
+        self._g_bytes["host"].set(self.host_used())
+        self._g_bytes["disk"].set(self.disk_used())
+        self._g_res["device"].set(len(self._device))
+        self._g_res["host"].set(len(self._host))
+        self._g_res["disk"].set(len(self._disk))
+
+    def _move(self, src: str, dst: str) -> None:
+        self._m_moves.inc(1, **{"from": src, "to": dst})
+
+    # ----------------------------------------------------------------- reads
+    def get(self, key: str) -> Optional[PreparedDesign]:
+        """The servable handle for ``key``: the device-resident entry or
+        the non-resident streaming handle.  LRU-touches; never promotes —
+        promotion is an explicit ``promote``/``get_or_build`` step so cold
+        lookups stay O(1)."""
+        with self._lock:
+            entry = self._device.get(key)
+            if entry is not None:
+                self._device.move_to_end(key)
+                return entry
+            nr = self._nonres.get(key)
+            if nr is not None:
+                if key in self._host:
+                    self._host.move_to_end(key)
+                return nr
+            return None
+
+    # ------------------------------------------------------------- admission
+    def admit(self, key: str, entry: PreparedDesign) -> PreparedDesign:
+        """Insert a resident design into the device tier, demoting LRU
+        entries while over budget.  Build races resolve first-writer-wins,
+        exactly like the pre-store ``DesignCache.put``."""
+        with self._lock:
+            existing = self._device.get(key)
+            if existing is not None:
+                self._device.move_to_end(key)
+                return existing
+            self._device[key] = entry
+            self.stats.admits += 1
+            self._enforce_device()
+            self._update_gauges()
+            return entry
+
+    def _enforce_device(self) -> None:
+        """Demote LRU device entries while over the byte budget or entry
+        cap.  Never demotes down to zero entries on the byte check: the
+        most recent admission stays resident even when it alone exceeds
+        the budget (designs *known* to exceed it are built non-resident
+        instead — see ``build``)."""
+        if self.max_entries is not None:
+            while len(self._device) > self.max_entries:
+                self._demote_lru()
+        if self.device_bytes is not None:
+            while (len(self._device) > 1
+                   and self.device_used() > self.device_bytes):
+                self._demote_lru()
+
+    def _demote_lru(self) -> None:
+        key, _ = next(iter(self._device.items()))
+        self.demote(key)
+
+    # -------------------------------------------------------------- demotion
+    def demote(self, key: str) -> Optional[HostDesign]:
+        """Device → host: snapshot every reusable piece of the resident
+        handle — kernel layouts, norms, Cholesky factors and the per-tenant
+        warm-coefficient LRU — into a ``HostDesign``, then release the
+        device entry.  Enforces the host budget afterwards (host → disk)."""
+        with self._lock:
+            entry = self._device.pop(key, None)
+            if entry is None:
+                return None
+            with entry._lock:
+                snap = HostDesign(
+                    key=key, shape=tuple(entry.x_pad.shape),
+                    max_tenants=entry.max_tenants,
+                    x_t={t: np.asarray(a) for t, a in entry._x_t.items()},
+                    x_bf16={t: np.asarray(a)
+                            for t, a in entry._x_bf16.items()},
+                    cn=(np.asarray(entry._cn)
+                        if entry._cn is not None else None),
+                    chol={k: np.asarray(v) for k, v in entry.chol.items()},
+                    warm=OrderedDict((t, np.array(c, np.float32))
+                                     for t, c in entry._warm.items()),
+                    home=entry.home,
+                )
+                if not snap.x_t:
+                    snap.x_pad = np.asarray(entry.x_pad)
+            self._host[key] = snap
+            self._host.move_to_end(key)
+            self.stats.demotions_device += 1
+            self._move("device", "host")
+            self._enforce_host()
+            self._update_gauges()
+            return snap
+
+    def _enforce_host(self) -> None:
+        if self.host_bytes is None:
+            return
+        while self.host_used() > self.host_bytes:
+            # LRU order, skipping records that no longer hold X bytes
+            # (state-only stubs cost nothing and must survive).
+            victim = next((k for k, h in self._host.items() if h.has_x()),
+                          None)
+            if victim is None:
+                return
+            self._demote_to_disk(victim)
+
+    def _demote_to_disk(self, key: str) -> None:
+        host = self._host[key]
+        if self.disk_dir is None:
+            # No disk tier: drop the X bytes, keep the state-only record so
+            # warm coefficients / Cholesky factors still restore on rebuild.
+            host.drop_x()
+            self.stats.x_drops += 1
+            return
+        obs_p, vars_p = host.shape
+        thr = next(iter(host.x_t)) if host.x_t else min(DEFAULT_TILE, vars_p)
+        nblocks = -(-vars_p // thr)
+        tile_dir = self.disk_dir / _fs_key(key)
+        tile_dir.mkdir(parents=True, exist_ok=True)
+        rec = DiskDesign(key=key, shape=host.shape, tile_dir=tile_dir,
+                         thr=thr, nblocks=nblocks,
+                         max_tenants=host.max_tenants, cn=host.cn,
+                         chol=host.chol, warm=host.warm, home=host.home)
+        for j in range(nblocks):
+            tile = host.read_cols(j * thr, (j + 1) * thr)
+            with open(rec.tile_path(j), "wb") as f:
+                f.write(np.ascontiguousarray(tile, np.float32).tobytes())
+        del self._host[key]
+        self._disk[key] = rec
+        self._disk.move_to_end(key)
+        self.stats.demotions_disk += 1
+        self._move("host", "disk")
+
+    # ------------------------------------------------------------- promotion
+    def promote(self, key: str) -> Optional[PreparedDesign]:
+        """Climb ``key`` back to the hottest tier it fits.
+
+        host/disk → device rebuilds the ``PreparedDesign`` from the
+        snapshotted bytes and restores every piece of state — norms,
+        Cholesky, kernel layouts and the warm-coefficient LRU (the PR 9
+        eviction-regression fix).  A disk promotion deletes its tile files
+        (round trip complete).  Designs too large for the device budget
+        come back as (or keep) their non-resident streaming handle.
+        Returns None when the key is unknown or only a state-only stub
+        remains (caller rebuilds from source, then ``build`` restores the
+        stub's state)."""
+        with self._lock:
+            hit = self._device.get(key)
+            if hit is not None:
+                self._device.move_to_end(key)
+                return hit
+            host = self._host.get(key)
+            if host is not None and host.has_x():
+                t0 = obs.now()
+                entry = self._rebuild_from_host(host)
+                if entry is None:          # over device budget: stays put
+                    return self._nonres_handle(key, host.shape)
+                del self._host[key]
+                if key in self._nonres:
+                    del self._nonres[key]
+                self.stats.promotions_host += 1
+                self._move("host", "device")
+                self._h_fetch["host"].observe(obs.now() - t0)
+                return self.admit(key, entry)
+            disk = self._disk.get(key)
+            if disk is not None:
+                t0 = obs.now()
+                entry = self._rebuild_from_disk(disk)
+                if entry is None:
+                    return self._nonres_handle(key, disk.shape)
+                disk.delete_tiles()
+                del self._disk[key]
+                if key in self._nonres:
+                    del self._nonres[key]
+                self.stats.promotions_disk += 1
+                self._move("disk", "device")
+                self._h_fetch["disk"].observe(obs.now() - t0)
+                return self.admit(key, entry)
+            return None
+
+    def _fits_device(self, shape: Tuple[int, int]) -> bool:
+        return (self.device_bytes is None
+                or shape[0] * shape[1] * 4 <= self.device_bytes)
+
+    def _rebuild_from_host(self, host: HostDesign
+                           ) -> Optional[PreparedDesign]:
+        import jax.numpy as jnp
+        if not self._fits_device(host.shape):
+            return None
+        obs_p, vars_p = host.shape
+        if host.x_pad is not None:
+            x_pad = host.x_pad
+        else:
+            x_t = next(iter(host.x_t.values()))
+            x_pad = np.ascontiguousarray(x_t[:vars_p].T)
+        entry = prepare(x_pad, fingerprint=host.key,
+                        max_tenants=host.max_tenants)
+        self._restore_state(entry, host.cn, host.chol, host.warm, host.home)
+        with entry._lock:
+            for thr, a in host.x_t.items():
+                entry._x_t[thr] = jnp.asarray(a)
+            for thr, a in host.x_bf16.items():
+                entry._x_bf16[thr] = jnp.asarray(a)
+        return entry
+
+    def _rebuild_from_disk(self, disk: DiskDesign
+                           ) -> Optional[PreparedDesign]:
+        import jax.numpy as jnp
+        if not self._fits_device(disk.shape):
+            return None
+        obs_p, vars_p = disk.shape
+        x_t = np.concatenate([np.asarray(disk.tile(j))
+                              for j in range(disk.nblocks)], axis=0)
+        x_pad = np.ascontiguousarray(x_t[:vars_p].T)
+        entry = prepare(x_pad, fingerprint=disk.key,
+                        max_tenants=disk.max_tenants)
+        self._restore_state(entry, disk.cn, disk.chol, disk.warm, disk.home)
+        with entry._lock:
+            entry._x_t[disk.thr] = jnp.asarray(x_t)
+        return entry
+
+    @staticmethod
+    def _restore_state(entry: PreparedDesign, cn, chol, warm, home) -> None:
+        import jax.numpy as jnp
+        with entry._lock:
+            if cn is not None:
+                entry._cn = jnp.asarray(cn)
+            for k, v in chol.items():
+                entry.chol[k] = jnp.asarray(v)
+            for t, c in warm.items():
+                entry._warm[t] = np.array(c, np.float32)
+            if home is not None and entry.home is None:
+                entry.home = home
+
+    # ------------------------------------------------------------------ build
+    def build(self, key: str, x_pad: np.ndarray, *,
+              max_tenants: int = 64) -> PreparedDesign:
+        """Build the servable handle for a design from its padded matrix.
+
+        Fits the device budget → a resident ``prepare``d handle, admitted
+        to the device tier (demoting LRU entries as needed).  Over budget →
+        the bytes land on the host tier (spilling to disk under the host
+        budget) and a non-resident streaming handle comes back.  Either
+        way, a surviving state-only stub (warm coefficients, Cholesky) from
+        an earlier X-byte drop is restored onto the new handle."""
+        x_pad = np.asarray(x_pad, np.float32)
+        with self._lock:
+            existing = self.get(key)
+            if existing is not None:
+                return existing
+            stub = self._host.get(key)
+            if self._fits_device(x_pad.shape):
+                entry = prepare(x_pad, fingerprint=key,
+                                max_tenants=max_tenants)
+                if stub is not None:
+                    self._restore_state(entry, stub.cn, stub.chol,
+                                        stub.warm, stub.home)
+                    del self._host[key]
+                return self.admit(key, entry)
+            # Non-resident: X bytes live on the host tier; the handle
+            # streams blocks through the store.
+            host = stub if stub is not None else HostDesign(
+                key=key, shape=tuple(x_pad.shape), max_tenants=max_tenants)
+            host.shape = tuple(x_pad.shape)
+            host.max_tenants = max_tenants
+            if not host.has_x():
+                host.x_pad = x_pad
+            if host.cn is None:
+                host.cn = np.einsum("ij,ij->j", x_pad, x_pad,
+                                    dtype=np.float32)
+            self._host[key] = host
+            self._host.move_to_end(key)
+            self.stats.builds_nonresident += 1
+            entry = self._nonres_handle(key, host.shape)
+            self._enforce_host()
+            self._update_gauges()
+            return entry
+
+    def _nonres_handle(self, key: str,
+                       shape: Tuple[int, int]) -> PreparedDesign:
+        import jax.numpy as jnp
+        handle = self._nonres.get(key)
+        if handle is not None:
+            return handle
+        rec = self._host.get(key) or self._disk.get(key)
+        cn = rec.cn if rec is not None else None
+        handle = PreparedDesign(
+            x_pad=None, fingerprint=key,
+            max_tenants=rec.max_tenants if rec is not None else 64,
+            blocks=StoreBlockSource(self, key, shape),
+            _cn=jnp.asarray(cn) if cn is not None else None,
+        )
+        if rec is not None:
+            self._restore_state(handle, None, rec.chol, rec.warm, rec.home)
+        self._nonres[key] = handle
+        return handle
+
+    # ----------------------------------------------------------- block fetch
+    def _fetch_block(self, key: str, thr: int, j: int) -> np.ndarray:
+        t0 = obs.now()
+        with self._lock:
+            host = self._host.get(key)
+            if host is not None and host.has_x():
+                out = host.read_cols(j * thr, (j + 1) * thr)
+                self._h_fetch["host"].observe(obs.now() - t0)
+                return out
+            disk = self._disk.get(key)
+            if disk is not None:
+                out = disk.read_cols(j * thr, (j + 1) * thr)
+                self._h_fetch["disk"].observe(obs.now() - t0)
+                return out
+            entry = self._device.get(key)
+            if entry is not None:
+                # A promoted-mid-solve design: serve blocks off the
+                # resident copy (host view of the device array).
+                x = np.asarray(entry.x_pad)
+                lo, hi = j * thr, (j + 1) * thr
+                out = np.zeros((thr, x.shape[0]), np.float32)
+                real = min(hi, x.shape[1]) - lo
+                if real > 0:
+                    out[:real] = x[:, lo:lo + real].T
+                self._h_fetch["host"].observe(obs.now() - t0)
+                return out
+        raise KeyError(f"design {key!r} has no X bytes in any store tier")
+
+    # ------------------------------------------------------------- lifecycle
+    def keys(self) -> List[str]:
+        with self._lock:
+            return list({*self._device, *self._host, *self._disk,
+                         *self._nonres})
+
+    def close(self) -> None:
+        """Drop every tier (deleting disk tiles).  For tests/benchmarks;
+        production stores live as long as their engine."""
+        with self._lock:
+            for rec in self._disk.values():
+                rec.delete_tiles()
+            self._device.clear()
+            self._host.clear()
+            self._disk.clear()
+            self._nonres.clear()
+            self._update_gauges()
+
+
+def _fs_key(key: str) -> str:
+    """Filesystem-safe tile-directory name for a design fingerprint."""
+    return "".join(c if c.isalnum() or c in "._-" else "_" for c in key)

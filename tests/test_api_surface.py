@@ -47,6 +47,7 @@ SERVE_EXPORTS = {
     "CacheStats",
     "DesignCache",
     "DesignEntry",
+    "DesignStore",
     "DispatchConfig",
     "DispatchStats",
     "DispatcherStopped",
@@ -69,6 +70,7 @@ SERVE_EXPORTS = {
     "SolveTicket",
     "SolverServeEngine",
     "SolverSpec",
+    "StoreStats",
     "UnsupportedSpecError",
     "build_serve_mesh",
     "mesh_device_count",
@@ -112,6 +114,10 @@ METHOD_CAPABILITIES = {
     # accumulators; "bf16_fp32acc" adds the fp32 polish sweeps).
     "bakp_fused": (True, True, False, False, _ALL_PRECISIONS),
     "bak_fused": (True, True, False, False, _ALL_PRECISIONS),
+    # Out-of-core streaming solve: single-device by design (the point is
+    # the design does NOT fit on one device), x tiles double-buffered
+    # from HBM or fetched through the store's host/disk tiers.
+    "bakp_stream": (True, True, False, False, ("fp32", "bf16")),
     "lstsq": (False, True, False, False, ("fp32",)),
     "normal": (False, True, False, False, ("fp32",)),
     "bakf": (False, False, False, False, ("fp32",)),

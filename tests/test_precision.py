@@ -49,7 +49,8 @@ class TestSpecSurface:
     def test_precisions_tuple(self):
         assert PRECISIONS == ("fp32", "bf16", "bf16_fp32acc")
         assert set(methods_for_precision("bf16")) == {"bakp_fused",
-                                                      "bak_fused"}
+                                                      "bak_fused",
+                                                      "bakp_stream"}
         assert "bakp" in methods_for_precision("fp32")
 
     def test_malformed_precision_is_value_error(self):
