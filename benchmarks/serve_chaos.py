@@ -1,0 +1,224 @@
+"""Chaos suite: fault-injected serving must recover at every site.
+
+    PYTHONPATH=src python -m benchmarks.serve_chaos [--smoke] \
+        [--json BENCH_chaos.json]
+
+Each scenario builds a production engine + async dispatcher with a
+``FaultPlan`` wired through ``ServeConfig.fault_plan`` (the real chaos
+entry point, same as ``repro.launch.solver_serve --fault-plan``), fires a
+fleet of known-truth requests into the armed stack, then disarms and
+replays the identical workload as the recovery pass:
+
+  ================ ========================================================
+  scenario         armed site
+  ================ ========================================================
+  baseline         none — the disarmed-hooks control
+  lane_crash       ``lane.worker`` — a lane executor thread dies mid-batch
+  solver_raise     ``solver.raise`` — solves raise into the retry ladder
+  diverge          ``solver.diverge`` — forced divergence (cold retry +
+                   method fallback, warm-store retention skipped)
+  corrupt_tile     ``store.tile_corrupt`` — a demoted design's disk tile
+                   fails CRC on promotion (quarantine + rebuild)
+  deadline_storm   ``lane.delay`` — slow lanes under tight ticket deadlines
+  ================ ========================================================
+
+Gates (the ISSUE acceptance):
+
+  * every scenario **recovers** — the disarmed replay serves every request
+    with zero errors;
+  * **zero hung tickets** — every ticket of every pass settles (served,
+    typed error, or cancellation; never a leaked waiter);
+  * parity MAPE <= 1e-4 against the known truth on all served requests.
+
+Writes a ``chaos`` section into the JSON report (BENCH_chaos.json in CI).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import tempfile
+import time
+
+import numpy as np
+
+
+def _mape(coef, ref):
+    return float(np.mean(np.abs(coef - ref) / np.maximum(np.abs(ref),
+                                                         1e-12)))
+
+
+SCENARIOS = (
+    ("baseline", None, {}),
+    ("lane_crash", {"lane.worker": {"count": 1, "match": "single:"}}, {}),
+    ("solver_raise", {"solver.raise": {"count": 2}}, {}),
+    ("diverge", {"solver.diverge": {"count": 2}}, {}),
+    ("corrupt_tile", {"store.tile_corrupt": {"count": 1}},
+     {"store": True, "populate": True}),
+    ("deadline_storm",
+     {"lane.delay": {"count": 0, "delay_s": 0.002, "match": "single:"}},
+     {"deadline_s": 0.25}),
+)
+
+
+def _run_scenario(name, plan, *, n=12, obs_n=96, nvars=24, thr=8,
+                  max_iter=150, store=False, populate=False,
+                  deadline_s=None, seed=0):
+    from repro import obs
+    from repro.resilience import faults
+    from repro.serve import (AsyncDispatcher, DispatchConfig, ServeConfig,
+                             SolveRequest, SolverServeEngine)
+
+    rng = np.random.default_rng(seed)
+    systems = []
+    for i in range(n):
+        x = rng.normal(size=(obs_n, nvars)).astype(np.float32)
+        a = rng.normal(size=(nvars,)).astype(np.float32)
+        systems.append((f"{name}-{i}", x, x @ a, a))
+
+    cfg_kw = {}
+    tmp = None
+    if store:
+        # budgets sized so the fleet churns through host to the disk tier
+        design_bytes = obs_n * nvars * 4
+        tmp = tempfile.TemporaryDirectory(prefix="repro-chaos-")
+        cfg_kw = dict(store_device_bytes=2 * design_bytes,
+                      store_host_bytes=1, store_dir=tmp.name,
+                      cache_entries=4 * n)
+    reg = obs.MetricsRegistry()
+    eng = SolverServeEngine(ServeConfig(fault_plan=plan, **cfg_kw),
+                            registry=reg)
+    disp = AsyncDispatcher(eng, DispatchConfig(
+        max_batch=n, idle_timeout_s=0.005, prewarm_cache=False)).start()
+
+    def one_pass():
+        tickets = [disp.submit(
+            SolveRequest(x=x, y=y, method="bakp", thr=thr,
+                         max_iter=max_iter, rtol=1e-12, design_key=key,
+                         request_id=key), deadline_s=deadline_s)
+            for key, x, y, _ in systems]
+        disp.drain(timeout=120.0)
+        served, errors, hung, worst = [], 0, 0, 0.0
+        for (key, _, _, a), t in zip(systems, tickets):
+            if not t.done():
+                hung += 1
+                t.cancel()      # settle the leak so shutdown stays clean
+                continue
+            try:
+                res = t.result(timeout=0)
+            except Exception:
+                errors += 1     # typed failure (e.g. LaneWorkerDeath)
+                continue
+            if res.error is not None:
+                errors += 1
+                continue
+            served.append(res)
+            worst = max(worst, _mape(res.coef, a))
+        return {"served": len(served), "errors": errors, "hung": hung,
+                "mape_worst": worst}
+
+    try:
+        if populate:
+            one_pass()          # build + demote; the armed site needs a
+            #                     disk-resident design to corrupt
+        t0 = time.perf_counter()
+        chaos = one_pass()
+        chaos_s = time.perf_counter() - t0
+        armed = faults.active()
+        fault_counts = armed.counts() if armed is not None else {}
+        faults.clear()          # disarm: the recovery pass is production
+        recovery = one_pass()
+
+        lane_stats = eng.lanes.stats()
+        out = {
+            "requests": n,
+            "chaos": chaos, "recovery": recovery,
+            "chaos_s": chaos_s,
+            "retries": eng.stats.retries,
+            "lane_restarts": sum(s["restarts"]
+                                 for s in lane_stats.values()),
+            "lanes_tripped": sum(bool(s["tripped"])
+                                 for s in lane_stats.values()),
+            "tile_corruptions": (eng.store.stats.tile_corruptions
+                                 if eng.store is not None else 0),
+            "fault_counts": fault_counts,
+        }
+        out["recovered"] = (chaos["hung"] == 0
+                            and recovery["hung"] == 0
+                            and recovery["errors"] == 0
+                            and recovery["served"] == n
+                            and chaos["mape_worst"] <= 1e-4
+                            and recovery["mape_worst"] <= 1e-4)
+        return out
+    finally:
+        faults.clear()
+        disp.stop(drain=False)
+        eng.shutdown()
+        if tmp is not None:
+            tmp.cleanup()
+
+
+def run(n=12, obs_n=96, nvars=24, thr=8, max_iter=150, seed=0):
+    from repro.resilience import faults
+    faults.clear()
+    out = {}
+    for i, (name, plan, kw) in enumerate(SCENARIOS):
+        out[name] = _run_scenario(name, plan, n=n, obs_n=obs_n,
+                                  nvars=nvars, thr=thr, max_iter=max_iter,
+                                  seed=seed + i, **kw)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small sizes + recovery gates (CI)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="merge metrics into a JSON report "
+                         "(BENCH_chaos.json)")
+    args = ap.parse_args()
+
+    if args.smoke:
+        r = run(n=8, obs_n=64, nvars=16, thr=8, max_iter=120)
+    else:
+        r = run()
+    if args.json:
+        try:
+            from benchmarks.serve_async import write_json
+        except ImportError:  # run as a bare script instead of -m
+            from serve_async import write_json
+        write_json(args.json, {"chaos": r})
+
+    print("name,us_per_call,derived")
+    for name, s in r.items():
+        per = (s["chaos_s"] / s["requests"]) * 1e6
+        print(f"serve_chaos/{name},{per:.0f},"
+              f"served={s['chaos']['served']}/{s['requests']};"
+              f"errors={s['chaos']['errors']};"
+              f"hung={s['chaos']['hung']};"
+              f"retries={s['retries']};"
+              f"restarts={s['lane_restarts']};"
+              f"corruptions={s['tile_corruptions']};"
+              f"recovered={'yes' if s['recovered'] else 'NO'}")
+
+    hung = sum(s["chaos"]["hung"] + s["recovery"]["hung"]
+               for s in r.values())
+    mape = max(max(s["chaos"]["mape_worst"], s["recovery"]["mape_worst"])
+               for s in r.values())
+    bad = [name for name, s in r.items() if not s["recovered"]]
+    # the armed sites must actually have fired (a chaos run where nothing
+    # broke proves nothing)
+    signals = (r["solver_raise"]["retries"] >= 1
+               and r["lane_crash"]["lane_restarts"] >= 1
+               and r["corrupt_tile"]["tile_corruptions"] >= 1)
+    ok = not bad and hung == 0 and mape <= 1e-4 and signals
+    print(f"acceptance: recovered={len(r) - len(bad)}/{len(r)} "
+          f"(all){' FAILING:' + ','.join(bad) if bad else ''} "
+          f"hung_tickets={hung} (==0) "
+          f"worst_mape={mape:.2e} (<=1e-4) "
+          f"faults_fired={'yes' if signals else 'NO'} -> "
+          f"{'PASS' if ok else 'FAIL'}")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -408,26 +408,28 @@ register_method(MethodEntry(
     name="bak", solve=_bak_solve, consumes=_ITER_FIELDS + ("order",),
     iterative=True, multi_rhs=True, batchable=True, shardable=False,
     blocked=False, prepare=_prep_bak, vmap_one=_bak_vmap_one,
+    fallback="lstsq",
     summary="Algorithm 1: serial cyclic coordinate descent"))
 register_method(MethodEntry(
     name="bakp", solve=_bakp_solve("jacobi"),
     consumes=_ITER_FIELDS + ("thr", "omega"),
     iterative=True, multi_rhs=True, batchable=True, shardable=True,
     blocked=True, prepare=_prep_bakp, vmap_one=_bakp_vmap_one("jacobi"),
+    fallback="bakp_stream",
     summary="Algorithm 2: block-Jacobi coordinate descent"))
 register_method(MethodEntry(
     name="bakp_gram", solve=_bakp_solve("gram"),
     consumes=_ITER_FIELDS + ("thr", "omega", "ridge"),
     iterative=True, multi_rhs=True, batchable=True, shardable=True,
     blocked=True, needs_chol=True, prepare=_prep_bakp_gram,
-    vmap_one=_bakp_vmap_one("gram"),
+    vmap_one=_bakp_vmap_one("gram"), fallback="bakp",
     summary="exact block CD via cached block-Gram Cholesky (beyond-paper)"))
 register_method(MethodEntry(
     name="bakp_fused", solve=_fused_method("bakp"),
     consumes=_ITER_FIELDS + ("thr", "omega", "precision", "refine_sweeps"),
     iterative=True, multi_rhs=True, batchable=False, shardable=False,
     blocked=True, precisions=("fp32", "bf16", "bf16_fp32acc"),
-    lane="fused", prepare=_prep_fused,
+    lane="fused", prepare=_prep_fused, fallback="bakp",
     summary="Algorithm 2 on the fused whole-solve Pallas megakernel "
             "(VMEM-resident sweeps, on-chip convergence; XLA fallback "
             "when the design exceeds the VMEM budget; bf16 X streaming "
@@ -437,7 +439,7 @@ register_method(MethodEntry(
     consumes=_ITER_FIELDS + ("thr", "precision", "refine_sweeps"),
     iterative=True, multi_rhs=True, batchable=False, shardable=False,
     blocked=True, precisions=("fp32", "bf16", "bf16_fp32acc"),
-    lane="fused", prepare=_prep_fused,
+    lane="fused", prepare=_prep_fused, fallback="bak",
     summary="Algorithm 1 on the fused megakernel (sequential column "
             "order; XLA fallback when over the VMEM budget; bf16 X "
             "streaming with fp32 accumulators + fp32 polish)"))
@@ -446,7 +448,7 @@ register_method(MethodEntry(
     consumes=_ITER_FIELDS + ("thr", "omega", "precision"),
     iterative=True, multi_rhs=True, batchable=False, shardable=False,
     blocked=True, streams=True, precisions=("fp32", "bf16"),
-    lane="stream", prepare=_prep_stream,
+    lane="stream", prepare=_prep_stream, fallback="lstsq",
     summary="Algorithm 2 streaming out-of-core: x tiles double-buffered "
             "from HBM (pltpu.ANY) through VMEM scratch, or fetched "
             "per-block through the design store's host/disk tiers for "
@@ -457,7 +459,7 @@ register_method(MethodEntry(
     summary="LAPACK lstsq baseline (the paper's comparison column)"))
 register_method(MethodEntry(
     name="normal", solve=_normal_solve, consumes=("ridge",),
-    iterative=False, multi_rhs=True,
+    iterative=False, multi_rhs=True, fallback="lstsq",
     summary="normal-equation Cholesky with SolverSpec.ridge diagonal"))
 register_method(MethodEntry(
     name="bakf", solve=_bakf_solve, consumes=("max_iter", "thr"),

@@ -63,7 +63,8 @@ import numpy as np
 from repro.core.spec import (SolverSpec, UnsupportedSpecError,
                              ensure_precision_supported, solver_method,
                              streaming_methods)
-from repro.core.types import SolveResult, column_norms_sq, safe_inv
+from repro.core.types import (SolveResult, column_norms_sq, safe_inv,
+                              warm_retention_ok)
 
 
 def design_fingerprint(x, *, _prefix: str = "d") -> str:
@@ -424,7 +425,10 @@ class PreparedDesign:
             a0 = None  # direct methods ignore warm starts (SolverSpec doc)
         res = entry.solve(self, y, spec, a0=a0, key=key,
                           placement=placement, mesh=mesh)
-        if store_tenant is not None:
+        # A diverged solve's coefficients would poison the tenant's next
+        # warm start (it would resume from the blown-up point); plain
+        # budget exhaustion still retains — see warm_retention_ok.
+        if store_tenant is not None and warm_retention_ok(res):
             self.store_coef(store_tenant, np.asarray(res.coef))
         return res
 

@@ -233,6 +233,13 @@ class MethodEntry:
       vmap_one:  optional ``(spec) -> one(x, y, cn, atol[, chol][, a0])``
                  per-system callable the serving engine wraps in
                  ``jit(vmap(...))`` for cross-design batches.
+      fallback:  name of the method a failed/diverged solve degrades to
+                 (the serving engine's retry ladder —
+                 ``repro.resilience.ladder``): fused megakernels fall back
+                 to their per-sweep XLA family, the resident block-Jacobi
+                 methods to the streaming out-of-core path, and the chain
+                 bottoms out at the direct ``"lstsq"`` baseline (None =
+                 ladder floor).
       summary:   one-line description (shown by ``describe_methods()``).
     """
 
@@ -250,6 +257,7 @@ class MethodEntry:
     lane: str = "xla"
     prepare: Optional[Callable] = None
     vmap_one: Optional[Callable] = None
+    fallback: Optional[str] = None
     summary: str = ""
 
 

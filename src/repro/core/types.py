@@ -5,6 +5,7 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 class SolveResult(NamedTuple):
@@ -109,6 +110,39 @@ def donate_default(donate, *operands) -> bool:
     return (jax.default_backend() != "cpu"
             and jax.core.trace_state_clean()
             and not any(isinstance(op, jax.Array) for op in operands))
+
+
+def warm_retention_ok(res: "SolveResult") -> bool:
+    """Whether a solve's coefficients are safe to retain as a warm start.
+
+    False exactly when the solve looks *diverged*: ``converged`` is False
+    AND its recorded SSE history net-rose (last finite entry materially
+    above the first — the geometric blow-up ``sweep_stop_flags`` classifies
+    as genuine divergence).  Plain budget exhaustion (``converged=False``
+    with the non-increasing history Theorem 1 guarantees, e.g. ``rtol=0``
+    runs that simply spent ``max_iter``) still retains — those coefficients
+    are the best seen and warm-starting from them is the whole point.
+
+    A diverged solve's coefficients, by contrast, are *worse than zero*:
+    retaining them poisons the tenant's next warm start into starting from
+    the blown-up point (and likely diverging again).  Both retention sites
+    gate on this — ``PreparedDesign.solve``'s tenant store and the serving
+    engine's ``_strip``.
+
+    Scalar (single/multi-RHS group) flags only; a batched ``converged``
+    (the vmapped path) returns True and the caller gates per row.
+    """
+    try:
+        conv = np.asarray(res.converged)
+        if conv.ndim != 0 or bool(conv):
+            return True
+        h = np.asarray(res.history, np.float32).ravel()
+        h = h[np.isfinite(h)]
+        if h.size >= 2 and float(h[-1]) > 1.01 * float(h[0]):
+            return False
+    except Exception:
+        return True  # malformed/absent history: keep the old behaviour
+    return True
 
 
 def sweep_stop_flags(sse, sse_prev, sse0, atol_sse, rtol):

@@ -269,6 +269,14 @@ def main():
     ap.add_argument("--store-dir", default=None, metavar="DIR",
                     help="disk-tier directory for memmapped design tile "
                          "files (unset = no disk tier)")
+    ap.add_argument("--fault-plan", default=None, metavar="JSON",
+                    help="chaos harness (repro.resilience): inline JSON or "
+                         "a path to a JSON file mapping fault sites to "
+                         "rules, e.g. '{\"solver.raise\": {\"count\": 3}}'. "
+                         "Sites: lane.worker, lane.delay, solver.raise, "
+                         "solver.diverge, store.tile_corrupt, "
+                         "store.read_delay.  Unset = injection disarmed "
+                         "(zero-cost, bit-identical)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--check", action="store_true",
                     help="verify every request vs numpy lstsq (slow)")
@@ -325,7 +333,8 @@ def main():
                                else None),
                     store_device_bytes=args.store_device_bytes,
                     store_host_bytes=args.store_host_bytes,
-                    store_dir=args.store_dir),
+                    store_dir=args.store_dir,
+                    fault_plan=args.fault_plan),
         mesh=smesh)
     xs = [rng.normal(size=(args.obs, args.vars)).astype(np.float32)
           for _ in range(args.designs)]

@@ -211,6 +211,10 @@ class SolveTelemetry:
     (deadline − completion; negative = missed) are dispatcher-side and stay
     None on the synchronous engine path.  All timestamps/durations are on
     the ``obs.now()`` clock.
+
+    ``retries`` counts the retry-ladder steps the request's solve took
+    (``repro.resilience``): 0 = first attempt succeeded; the ``method``/
+    ``kernel_path`` fields describe the rung that finally served it.
     """
 
     request_id: str = ""
@@ -230,6 +234,7 @@ class SolveTelemetry:
     n_sweeps: int = 0
     sse: float = 0.0
     converged: bool = False
+    retries: int = 0
     solve_s: float = 0.0
     queue_wait_s: Optional[float] = None
     deadline_margin_s: Optional[float] = None

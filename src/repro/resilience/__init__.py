@@ -1,0 +1,37 @@
+"""repro.resilience — fault injection, retry ladders and chaos tooling.
+
+Built for the serving stack's failure story (PR 10): every failure mode the
+stack can hit — a lane worker thread dying, a solver raising or diverging,
+a corrupt or slow disk tile — is *injectable* (``faults``: a process-wide
+``FaultPlan`` with named sites compiled into the production paths, zero
+cost when disarmed), *observable* (``serve_lane_restarts_total``,
+``serve_lane_health``, ``solver_retries_total``,
+``store_tile_corruption_total``) and *survivable* (supervised lane
+restarts with a serial-fallback circuit breaker, the engine's
+retry/degradation ladder, and CRC-verified crash-safe store tiles).
+
+The consumers live where the failures live — ``repro.serve.lanes``,
+``repro.serve.engine``, ``repro.store.store`` — this package holds the
+harness (``faults``) and the ladder policy (``ladder``).
+"""
+from repro.resilience.faults import (FaultInjected, FaultPlan, FaultRule,
+                                     SITES, active, clear, hit, install,
+                                     installed, maybe_delay, maybe_raise)
+from repro.resilience.ladder import backoff_s, next_rung, rungs
+
+__all__ = [
+    "FaultInjected",
+    "FaultPlan",
+    "FaultRule",
+    "SITES",
+    "active",
+    "backoff_s",
+    "clear",
+    "hit",
+    "install",
+    "installed",
+    "maybe_delay",
+    "maybe_raise",
+    "next_rung",
+    "rungs",
+]

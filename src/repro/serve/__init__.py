@@ -60,10 +60,12 @@ from repro.serve.batching import (bucket_shape, design_fingerprint,
 from repro.serve.cache import CacheStats, DesignCache, DesignEntry
 from repro.serve.dispatch import (AsyncDispatcher, DispatchConfig,
                                   DispatcherStopped, DispatchStats,
-                                  QueueFullError, SolveTicket)
+                                  QueueFullError, SolveTicket,
+                                  TicketCancelled)
 from repro.serve.engine import ServeConfig, ServeStats, SolverServeEngine
 from repro.serve.lanes import (LaneExecutor, LaneKey, LanePool, LaneShutdown,
-                               LaneStats, LaneWork, current_lane, lane_for)
+                               LaneStats, LaneWork, LaneWorkerDeath,
+                               current_lane, lane_for)
 from repro.serve.placement import (Placement, PlacementPolicy, ServeMesh,
                                    build_serve_mesh, mesh_device_count,
                                    placement_for_bucket, placement_for_group)
@@ -85,6 +87,7 @@ __all__ = [
     "LaneShutdown",
     "LaneStats",
     "LaneWork",
+    "LaneWorkerDeath",
     "Placement",
     "PlacementPolicy",
     "PreparedDesign",
@@ -99,6 +102,7 @@ __all__ = [
     "SolverServeEngine",
     "SolverSpec",
     "StoreStats",
+    "TicketCancelled",
     "UnsupportedSpecError",
     "build_serve_mesh",
     "mesh_device_count",

@@ -80,6 +80,12 @@ class DispatcherStopped(RuntimeError):
     dispatcher that will never serve it."""
 
 
+class TicketCancelled(RuntimeError):
+    """Raised by ``SolveTicket.result()`` after a successful ``cancel()``
+    — the request was dropped before its batch fired and will never be
+    solved."""
+
+
 @dataclass
 class DispatchConfig:
     """Dispatcher knobs (engine knobs live on ``ServeConfig``)."""
@@ -111,6 +117,7 @@ class DispatchStats:
     submitted: int = 0
     rejected: int = 0
     completed: int = 0
+    cancelled: int = 0
     deadline_misses: int = 0
     fired_full: int = 0
     fired_deadline: int = 0
@@ -133,6 +140,7 @@ class DispatchStats:
     def as_dict(self) -> dict:
         return {"submitted": self.submitted, "rejected": self.rejected,
                 "completed": self.completed,
+                "cancelled": self.cancelled,
                 "deadline_misses": self.deadline_misses,
                 "deadline_hit_rate": self.deadline_hit_rate,
                 "fired_full": self.fired_full,
@@ -153,7 +161,8 @@ class SolveTicket:
     and engine solve time compose); ``deadline`` is absolute or None.
     """
 
-    def __init__(self, request: SolveRequest, deadline: Optional[float]):
+    def __init__(self, request: SolveRequest, deadline: Optional[float],
+                 dispatcher: Optional["AsyncDispatcher"] = None):
         self.request = request
         self.deadline = deadline
         self.submitted_at = obs.now()
@@ -163,6 +172,8 @@ class SolveTicket:
         self._event = threading.Event()
         self._result: Optional[ServedSolve] = None
         self._exception: Optional[BaseException] = None
+        self._dispatcher = dispatcher
+        self._cancelled = False
         self._bp_lane: Optional[str] = None  # lane label counted for
         # per-lane backpressure at submit (None = not lane-counted)
 
@@ -170,6 +181,10 @@ class SolveTicket:
         return self._event.is_set()
 
     def result(self, timeout: Optional[float] = None) -> ServedSolve:
+        """Wait for the solve.  A ``TimeoutError`` leaves the ticket live —
+        the solve still completes and still counts against the caller's
+        backpressure budget; a caller that is *done* with a timed-out
+        ticket should ``cancel()`` it so the dispatcher can drop it."""
         if not self._event.wait(timeout):
             raise TimeoutError(
                 f"request {self.request.request_id!r} not completed "
@@ -177,6 +192,36 @@ class SolveTicket:
         if self._exception is not None:
             raise self._exception
         return self._result
+
+    def cancel(self) -> bool:
+        """Drop the request if its batch has not fired yet.
+
+        Returns True when the cancellation won: the ticket completes
+        immediately (``result()`` raises ``TicketCancelled``, no deadline
+        miss recorded) and the dispatcher releases its backpressure slot —
+        the fix for the ``result(timeout=...)`` leak, where every timed-out
+        ticket stayed in flight forever and eventually wedged ``drain()``
+        and the queue budget.  Returns False when the ticket already fired
+        (the solve proceeds and will land on the ticket normally), already
+        completed, or was already cancelled.
+        """
+        disp = self._dispatcher
+        if disp is None:
+            return False
+        with disp._cv:
+            # fired_at is the cut-off, stamped under this same lock by
+            # _fire_ready: after it, the lane owns the ticket.
+            if (self._event.is_set() or self._cancelled
+                    or self.fired_at is not None):
+                return False
+            self._cancelled = True
+        self.completed_at = obs.now()
+        self._exception = TicketCancelled(
+            f"request {self.request.request_id!r} cancelled")
+        # deadline_met stays None: a cancelled ticket is not a miss.
+        self._event.set()
+        disp._on_cancel(self)
+        return True
 
     @property
     def latency_s(self) -> Optional[float]:
@@ -261,6 +306,9 @@ class AsyncDispatcher:
         self._m_completed = reg.counter(
             "serve_dispatch_completed_total",
             "tickets completed (served or failed)")
+        self._m_cancelled = reg.counter(
+            "serve_dispatch_cancelled_total",
+            "tickets cancelled before their batch fired")
         self._m_deadline_misses = reg.counter(
             "serve_dispatch_deadline_misses_total",
             "completed tickets that missed their deadline")
@@ -355,7 +403,11 @@ class AsyncDispatcher:
         if rel is not None and rel <= 0:
             raise ValueError(f"deadline_s must be positive, got {rel}")
         ticket = SolveTicket(
-            request, None if rel is None else obs.now() + float(rel))
+            request, None if rel is None else obs.now() + float(rel),
+            dispatcher=self)
+        # Stamp the absolute deadline onto the request so the engine's
+        # retry ladder (repro.resilience) is bounded by it.
+        request.deadline_at = ticket.deadline
         cfg = self.config
         lane_lbl = (self._lane_label_of(request)
                     if cfg.max_lane_inflight is not None else None)
@@ -480,8 +532,9 @@ class AsyncDispatcher:
                 draining = self._draining
                 abandon = self._abandon
             if stopping and abandon:
-                residual = arrivals + [t for b in self._pending.values()
-                                       for t in b.tickets]
+                residual = [t for t in arrivals if not t._cancelled]
+                residual += [t for b in self._pending.values()
+                             for t in b.tickets if not t._cancelled]
                 self._pending.clear()
                 for t in residual:
                     t._fail(DispatcherStopped("dispatcher stopped"))
@@ -506,6 +559,8 @@ class AsyncDispatcher:
         pre-warm (padding + device transfer + column norms) all happen here
         on the dispatch thread.
         """
+        if ticket._cancelled:
+            return  # cancel() already settled and accounted the ticket
         req = ticket.request
         try:
             prepare_request(req, fingerprint=True)
@@ -585,16 +640,24 @@ class AsyncDispatcher:
             # the configured latency/memory bound per engine call.
             for lo in range(0, len(batch.tickets), cfg.max_batch):
                 chunk = batch.tickets[lo:lo + cfg.max_batch]
+                # fired_at is the cancel() cut-off and is stamped under
+                # _cv: a cancel that won the race is dropped here; one
+                # that arrives after sees fired_at set and returns False.
+                with self._cv:
+                    live = [t for t in chunk if not t._cancelled]
+                    for t in live:
+                        t.fired_at = now
+                if not live:
+                    continue
                 setattr(self.stats, f"fired_{why}",
                         getattr(self.stats, f"fired_{why}") + 1)
                 self._m_fired.inc(1, reason=why)
                 lbl = batch.lane.label
                 self.stats.lane_batches[lbl] = (
                     self.stats.lane_batches.get(lbl, 0) + 1)
-                for t in chunk:
-                    t.fired_at = now
+                for t in live:
                     self._m_queue_wait.observe(now - t.submitted_at)
-                fired.append((batch.lane, min_dl, chunk))
+                fired.append((batch.lane, min_dl, live))
         return fired
 
     # ------------------------------------------------------ lane execution
@@ -638,8 +701,21 @@ class AsyncDispatcher:
             with self._works_lock:
                 self._works.pop(work, None)
 
+        def on_fail(exc: BaseException) -> None:
+            # Lane-side failure without the callable completing — worker-
+            # thread death (LaneWorkerDeath) or an abandoning shutdown.
+            # Claim-protected like every other settle path: if the work
+            # half-ran, run() already owns the tickets and this is a no-op.
+            if not try_claim():
+                return
+            for t in tickets:
+                t._fail(exc)
+            self._on_complete(tickets)
+            with self._works_lock:
+                self._works.pop(work, None)
+
         work = LaneWork(run, urgency=urgency, size=len(tickets),
-                        tag=lane.label)
+                        tag=lane.label, on_fail=on_fail)
         with self._works_lock:
             self._works[work] = (try_claim, tickets)
         try:
@@ -674,6 +750,27 @@ class AsyncDispatcher:
                     self._works.pop(w, None)
             else:
                 w.wait()
+
+    def _on_cancel(self, ticket: SolveTicket) -> None:
+        """Release a cancelled ticket's pipeline slot (called by
+        ``SolveTicket.cancel`` after it settled the ticket).  Mirrors
+        ``_on_complete`` minus the latency/deadline recording — a cancel
+        is neither a served request nor a miss."""
+        with self._cv:
+            self._inflight -= 1
+            if ticket._bp_lane is not None:
+                left = self._lane_inflight.get(ticket._bp_lane, 0) - 1
+                if left > 0:
+                    self._lane_inflight[ticket._bp_lane] = left
+                else:
+                    self._lane_inflight.pop(ticket._bp_lane, None)
+                ticket._bp_lane = None
+            self.stats.completed += 1
+            self.stats.cancelled += 1
+            self._m_inflight.set(self._inflight)
+            self._cv.notify_all()
+        self._m_completed.inc(1)
+        self._m_cancelled.inc(1)
 
     def _on_complete(self, tickets: List[SolveTicket]) -> None:
         misses = sum(1 for t in tickets if t.deadline_met is False)

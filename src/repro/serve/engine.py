@@ -71,6 +71,7 @@ import itertools
 import logging
 import math
 import threading
+import time
 from dataclasses import dataclass
 from typing import List, Optional, Sequence, Tuple
 
@@ -82,6 +83,7 @@ from repro import obs
 from repro.core.prepare import PreparedDesign
 from repro.core.spec import SolverSpec, solver_method
 from repro.kernels.fused_solve import fused_fits
+from repro.resilience import faults, ladder
 from repro.serve.batching import (group_requests, next_pow2, pad_x, pad_y,
                                   prepare_request, request_bucket)
 from repro.serve.cache import DesignCache
@@ -89,6 +91,7 @@ from repro.serve.lanes import LaneKey, LanePool, LaneWork, current_lane
 from repro.serve.placement import (Placement, PlacementPolicy, ServeMesh,
                                    placement_for_bucket, placement_for_group)
 from repro.serve.types import ServedSolve, SolveRequest
+from repro.store.store import TileCorruptionError
 
 _log = logging.getLogger(__name__)
 
@@ -150,6 +153,23 @@ class ServeConfig:
     # when store_dir is unset)
     store_dir: Optional[str] = None           # disk-tier directory for the
     # memmapped design tile files; None disables the disk tier
+    fault_plan: Optional[object] = None  # chaos harness (repro.resilience):
+    # a FaultPlan, a {site: rule} dict, inline JSON text or a JSON file
+    # path.  Installed process-wide at engine construction; None (default)
+    # leaves injection disarmed — the hooks are a single None-check, so
+    # behaviour is bit-identical to a build without them.
+    retry_ladder: bool = True    # retry failed/diverged solves down the
+    # capability-aware degradation ladder (repro.resilience.ladder): cold
+    # restart when a warm start is implicated, fp32 when reduced precision
+    # is, then MethodEntry.fallback hops (fused → persweep → stream →
+    # lstsq).  False restores the pre-ladder behaviour: first error fails
+    # the batch.
+    max_retries: int = 3         # ladder steps per request (not per rung)
+    retry_backoff_s: float = 0.002  # jittered exponential backoff base
+    # between ladder steps; 0 disables the sleep (tests)
+    lane_max_restarts: int = 3   # consecutive lane worker-thread deaths
+    # before that lane's circuit breaker trips and its work reroutes to
+    # the serial fallback executor (repro.serve.lanes)
 
 
 @dataclass
@@ -175,6 +195,7 @@ class ServeStats:
     warm_starts: int = 0
     failures: int = 0
     sharded_solves: int = 0      # solver calls routed to a mesh placement
+    retries: int = 0             # retry-ladder steps taken (all reasons)
 
     def as_dict(self) -> dict:
         return dict(self.__dict__)
@@ -234,6 +255,11 @@ class SolverServeEngine:
         # (benchmarks comparing engine variants do).
         self.registry = registry or obs.default_registry()
         cfg = self.config
+        if cfg.fault_plan is not None:
+            # Chaos harness: arm the process-wide plan.  Engines without
+            # one never touch the module global, so a fresh engine does not
+            # disarm a plan a test installed directly.
+            faults.install(faults.FaultPlan.coerce(cfg.fault_plan))
         if (cfg.store_device_bytes is not None
                 or cfg.store_host_bytes is not None
                 or cfg.store_dir is not None):
@@ -253,7 +279,8 @@ class SolverServeEngine:
         # async dispatcher submit into the same executors, so per-lane
         # program affinity (and the per-lane gauges) cover both paths.
         self.lanes = LanePool(registry=self.registry,
-                              serial=not self.config.lane_execution)
+                              serial=not self.config.lane_execution,
+                              max_restarts=self.config.lane_max_restarts)
         # Work units on different lanes mutate ServeStats concurrently.
         self._stats_lock = threading.Lock()
         self._warned_unshardable_fused = False
@@ -281,6 +308,9 @@ class SolverServeEngine:
         self._m_fallback = reg.counter(
             "solver_fallback_total",
             "solves re-routed off their requested kernel path")
+        self._m_retries = reg.counter(
+            "solver_retries_total",
+            "retry-ladder steps taken, by reason and from/to rung")
         self._m_sweeps = reg.histogram(
             "serve_sweeps",
             "solver sweeps per request (warm label isolates warm-start "
@@ -456,7 +486,10 @@ class SolverServeEngine:
         batches bound for different lanes (single-device xla/fused vs each
         mesh placement) overlap instead of serialising."""
         results: List[Optional[ServedSolve]] = [None] * len(requests)
-        units: List[Tuple[LaneKey, int, object]] = []  # (lane, size, fn)
+        # (lane, size, run, fail_idxs, bucket) — the last two let
+        # _run_units fail a unit's unanswered requests when the unit never
+        # ran to completion (lane worker-thread death / shutdown).
+        units: List[Tuple[LaneKey, int, object, List[int], tuple]] = []
         cfg = self.config
 
         def unit(lane, fail_idxs, bucket, size, fn):
@@ -467,7 +500,7 @@ class SolverServeEngine:
                     fn()
                 except Exception as exc:
                     self._fail(requests, fail_idxs, bucket, exc, results)
-            units.append((lane, size, run))
+            units.append((lane, size, run, fail_idxs, bucket))
 
         groups = group_requests(
             requests, min_obs=cfg.min_obs, min_vars=cfg.min_vars,
@@ -480,7 +513,7 @@ class SolverServeEngine:
             method = outer[1]
             mentry = solver_method(method)
             placement = self.placement_for(bucket, method)
-            singles = []  # (idx, entry, cache_hit)
+            singles = []  # (idx, entry, cache_hit, design_key)
             for key, idxs in designs.items():
                 try:
                     entry, hit = self._design_entry(key, requests[idxs[0]],
@@ -501,9 +534,9 @@ class SolverServeEngine:
                          idxs, bucket, len(idxs),
                          functools.partial(self._solve_multi_rhs, requests,
                                            idxs, entry, hit, bucket,
-                                           results, gplacement))
+                                           results, gplacement, key))
                 else:
-                    singles.extend((i, entry, hit) for i in idxs)
+                    singles.extend((i, entry, hit, key) for i in idxs)
             # vmap batching is single-device only (a vmapped shard_map would
             # nest meshes); sharded buckets solve leftovers individually.
             use_vmap = (cfg.vmap_batch and len(singles) > 1
@@ -516,53 +549,60 @@ class SolverServeEngine:
                         # The vmapped program is a single-device stack —
                         # it rides the method's single-device lane.
                         unit(self.lanes.lane_for(method),
-                             [i for i, _, _ in chunk], bucket, len(chunk),
+                             [i for i, _, _, _ in chunk], bucket,
+                             len(chunk),
                              functools.partial(self._solve_vmapped,
                                                requests, chunk, bucket,
                                                results))
                     else:
-                        idx, entry, hit = chunk[0]
+                        idx, entry, hit, key = chunk[0]
                         unit(self.lanes.lane_for(method, placement,
                                                  self.mesh),
                              [idx], bucket, 1,
                              functools.partial(self._solve_one, requests,
                                                idx, entry, hit, bucket,
-                                               results, placement))
+                                               results, placement, key))
             else:
-                for idx, entry, hit in singles:
+                for idx, entry, hit, key in singles:
                     unit(self.lanes.lane_for(method, placement, self.mesh),
                          [idx], bucket, 1,
                          functools.partial(self._solve_one, requests, idx,
                                            entry, hit, bucket, results,
-                                           placement))
-        self._run_units(units)
+                                           placement, key))
+        self._run_units(units, requests, results)
         assert all(r is not None for r in results)
         return results
 
-    def _run_units(self, units) -> None:
+    def _run_units(self, units, requests, results) -> None:
         """Execute flush work units on their lanes and wait for all.
 
         Nested flushes (``serve``/``flush`` called from a lane work — the
         dispatcher's per-batch submission path) run inline on the current
         lane thread: the batch was already routed to its lane, and
         re-submitting from inside a lane could deadlock a lane on itself.
+
+        Units swallow solver errors via ``_fail``; a work coming back with
+        ``error`` set means the unit never completed — lane worker-thread
+        death (``LaneWorkerDeath``) or a shutdown race.  Its unanswered
+        requests get error results and the flush still returns a full
+        result list: the engine keeps serving through a dying lane.
         """
         if not units:
             return
         if current_lane() is not None:
-            for _, _, fn in units:
+            for _, _, fn, _, _ in units:
                 fn()
             return
         works = [self.lanes.submit(lane, LaneWork(fn, size=size,
                                                   tag=lane.label))
-                 for lane, size, fn in units]
+                 for lane, size, fn, _, _ in units]
         for w in works:
             w.wait()
-        for w in works:
+        for w, (_, _, _, fail_idxs, bucket) in zip(works, units):
             if w.error is not None:
-                # Units swallow solver errors via _fail; anything here is
-                # an engine bug (or a lane shutdown) — surface it.
-                raise w.error
+                missing = [i for i in fail_idxs if results[i] is None]
+                if missing:
+                    self._fail(requests, missing, bucket, w.error, results)
 
     def shutdown(self, drain: bool = True) -> None:
         """Stop the engine's lane executor threads (idempotent; the engine
@@ -673,6 +713,157 @@ class SolverServeEngine:
             return entry.solve(y_dev, a0, spec=eff, placement=placement,
                                mesh=self.mesh)
 
+    # ------------------------------------------------------- retry ladder
+    @staticmethod
+    def _rung_label(spec: SolverSpec, warm: bool = False) -> str:
+        """Metrics label for one ladder rung: method, ':<precision>' when
+        reduced, '+warm' when warm-started."""
+        lbl = spec.method
+        if spec.precision != "fp32":
+            lbl += f":{spec.precision}"
+        if warm:
+            lbl += "+warm"
+        return lbl
+
+    @staticmethod
+    def _diverged(res, sse0: Optional[float] = None) -> bool:
+        """Whether a completed solve net-diverged (see
+        ``core.types.warm_retention_ok`` for the history semantics): not
+        converged AND the recorded SSE rose materially above its own start
+        — or above the caller-supplied cold baseline ``sse0`` (= |y|², the
+        SSE of the zero solution), which catches a warm start that blew up
+        from its very first sweep."""
+        try:
+            conv = np.asarray(res.converged)
+            if conv.ndim != 0 or bool(conv):
+                return False
+            h = np.asarray(res.history, np.float32).ravel()
+            h = h[np.isfinite(h)]
+            if h.size == 0:
+                return False
+            if h.size >= 2 and float(h[-1]) > 1.01 * float(h[0]):
+                return True
+            if sse0 is not None and float(h[-1]) > 1.01 * sse0:
+                return True
+        except Exception:
+            return False
+        return False
+
+    @staticmethod
+    def _is_corruption(exc: BaseException) -> bool:
+        """Did this solve die because the design's store tier is damaged?
+        (Quarantine already happened inside the store; the ladder's job is
+        to rebuild the entry from the request's ``x`` and retry.)"""
+        if isinstance(exc, TileCorruptionError):
+            return True
+        return isinstance(exc, KeyError) and "store tier" in str(exc)
+
+    def _rung_ok(self, spec: SolverSpec, entry, need_multi: bool) -> bool:
+        """Can this entry/batch actually run on the given rung?"""
+        m = solver_method(spec.method)
+        if entry.x_pad is None and not m.streams:
+            return False  # non-resident design: streaming rungs only
+        if need_multi and not m.multi_rhs:
+            return False  # coalesced (obs, k) batch stays coalesced
+        return True
+
+    def _attempt_solve(self, spec: SolverSpec, entry, y, atol: float, a0,
+                       placement, *, deadline_at: Optional[float] = None,
+                       rebuild=None, sse0: Optional[float] = None,
+                       need_multi: bool = False):
+        """One solve with the retry/degradation ladder wrapped around it.
+
+        Runs ``_call_solver`` and retries on a raised exception or a
+        *diverged* result, stepping down a capability-aware ladder:
+
+          1. store corruption → rebuild the design entry from the request's
+             ``x`` (``rebuild``) and retry the SAME rung;
+          2. warm start present → cold retry on the same rung (a poisoned
+             ``a0`` is the usual suspect);
+          3. reduced precision → fp32, same method;
+          4. ``MethodEntry.fallback`` hops (fused → persweep → stream →
+             lstsq), skipping rungs the entry/batch cannot run
+             (``_rung_ok``); a method change drops the mesh placement (the
+             fallback method may not be shardable).
+
+        Bounded by ``ServeConfig.max_retries``, the request deadline
+        (``deadline_at``, obs.now() clock) and the ladder floor; each step
+        sleeps a jittered exponential backoff and counts
+        ``solver_retries_total{reason,from_path,to_path}``.  When the
+        ladder is exhausted the last exception re-raises (→ ``_fail``) or
+        the last diverged result returns as-is (flagged so ``_strip``
+        skips warm retention).
+
+        Returns ``(res, spec, entry, placement, retries, diverged,
+        a0_used)`` — the rung that finally served, so the caller records
+        the method/path that actually ran.
+        """
+        cfg = self.config
+        cur, cur_entry, cur_a0, cur_place = spec, entry, a0, placement
+        retries = 0
+        while True:
+            exc = None
+            res = None
+            try:
+                faults.maybe_raise("solver.raise", cur.method)
+                res = self._call_solver(cur, cur_entry, y, atol, a0=cur_a0,
+                                        placement=cur_place)
+                jax.block_until_ready(res.coef)
+            except Exception as e:
+                exc = e
+            forced = (exc is None
+                      and faults.hit("solver.diverge", cur.method)
+                      is not None)
+            diverged = forced or (exc is None and self._diverged(res, sse0))
+            if exc is None and not diverged:
+                return (res, cur, cur_entry, cur_place, retries, False,
+                        cur_a0)
+            out_of_time = (deadline_at is not None
+                           and obs.now() >= deadline_at)
+            if (not cfg.retry_ladder or retries >= cfg.max_retries
+                    or out_of_time):
+                if exc is not None:
+                    raise exc
+                return (res, cur, cur_entry, cur_place, retries, True,
+                        cur_a0)
+            # Pick the next rung (the first applicable recovery, in order).
+            frm = self._rung_label(cur, cur_a0 is not None)
+            if (exc is not None and self._is_corruption(exc)
+                    and rebuild is not None):
+                reason, nxt = "corruption", cur
+                try:
+                    cur_entry = rebuild()
+                except Exception:
+                    raise exc  # design is gone for good — report the solve
+            elif cur_a0 is not None:
+                reason, nxt, cur_a0 = "warm_poison", cur, None
+            else:
+                reason = "raise" if exc is not None else (
+                    "forced_diverge" if forced else "diverge")
+                nxt = ladder.next_rung(cur)
+                while nxt is not None and not self._rung_ok(
+                        nxt, cur_entry, need_multi):
+                    nxt = ladder.next_rung(nxt)
+                if nxt is None:  # ladder floor reached
+                    if exc is not None:
+                        raise exc
+                    return (res, cur, cur_entry, cur_place, retries, True,
+                            cur_a0)
+                if nxt.method != cur.method:
+                    cur_place = None  # fallback may not be shardable
+            retries += 1
+            self._m_retries.inc(1, reason=reason, from_path=frm,
+                                to_path=self._rung_label(
+                                    nxt, cur_a0 is not None))
+            with self._stats_lock:
+                self.stats.retries += 1
+            delay = ladder.backoff_s(retries - 1, cfg.retry_backoff_s)
+            if delay > 0.0:
+                if deadline_at is not None:
+                    delay = min(delay, max(0.0, deadline_at - obs.now()))
+                time.sleep(delay)
+            cur = nxt
+
     def _record_solve(self, spec: SolverSpec, placement, kind: str,
                       group_size: int, dt: float, path=None) -> str:
         """Record one solver call's metrics; returns the kernel path that
@@ -713,12 +904,15 @@ class SolverServeEngine:
 
     def _strip(self, req: SolveRequest, coef, residual, *, bucket, kind,
                group_size, latency, hit, n_sweeps, converged, entry=None,
-               warm=False, placement=None, method="", path="xla"
-               ) -> ServedSolve:
+               warm=False, placement=None, method="", path="xla",
+               retain_warm=True, retries=0) -> ServedSolve:
         n_obs, nvars = np.asarray(req.x).shape
         coef = np.asarray(coef)[:nvars]
         residual = np.asarray(residual)[:n_obs]
-        if entry is not None and self.config.warm_cache:
+        # ``retain_warm=False`` = the solve diverged: its coefficients are
+        # worse than zero, and retaining them would poison the tenant's
+        # next warm start into starting from the blown-up point.
+        if entry is not None and self.config.warm_cache and retain_warm:
             entry.store_coef(req.tenant_id, coef)
         if warm:
             with self._stats_lock:
@@ -750,7 +944,7 @@ class SolverServeEngine:
                 batch_kind=kind,
                 group_size=group_size, batch_size=group_size,
                 warm_start=warm, cache_hit=hit, n_sweeps=n_sweeps, sse=sse,
-                converged=converged, solve_s=latency)
+                converged=converged, retries=retries, solve_s=latency)
         return ServedSolve(
             request_id=req.request_id,
             coef=coef,
@@ -765,11 +959,12 @@ class SolverServeEngine:
             cache_hit=hit,
             warm_start=warm,
             placement=placement_kind,
+            retries=retries,
             telemetry=tel,
         )
 
     def _solve_multi_rhs(self, requests, idxs, entry, hit, bucket, results,
-                         placement=None):
+                         placement=None, key=None):
         """Coalesce same-design requests into one (obs, k_pad) solve.
 
         Warm and cold members coalesce: if any member warm-starts, the
@@ -779,7 +974,8 @@ class SolverServeEngine:
         ``placement`` is final here — the k-sharded group upgrade (one
         stream of ``x`` per device serves k/D tenants, group-global SSE
         stopping) is decided by ``_flush`` at unit-build time, where the
-        lane is chosen.
+        lane is chosen — except that the retry ladder drops it when a
+        fallback rung changes the method (see ``_attempt_solve``).
         """
         obs_p, vars_p = bucket
         k = len(idxs)
@@ -788,9 +984,11 @@ class SolverServeEngine:
         spec = self.spec_for(req0)
         mentry = solver_method(spec.method)
         ys = np.zeros((obs_p, k_pad), np.float32)
+        sse0 = 0.0
         for c, idx in enumerate(idxs):
             y = np.asarray(requests[idx].y, np.float32)
             ys[: y.shape[0], c] = y
+            sse0 += float(np.dot(y, y))
         if mentry.iterative:
             a0s = [self._resolve_a0(requests[idx], entry) for idx in idxs]
         else:  # direct methods don't iterate, so warm starts are meaningless
@@ -804,33 +1002,75 @@ class SolverServeEngine:
         # Same design => same real obs for every member of the group.
         obs_real = np.asarray(req0.x).shape[0]
         atol = self._padded_atol(spec.atol, obs_real * k, obs_p * k_pad)
+        deadlines = [requests[i].deadline_at for i in idxs
+                     if requests[i].deadline_at is not None]
+        rebuild = None
+        if key is not None:
+            rebuild = lambda: self._design_entry(  # noqa: E731
+                key, req0, bucket, placement)[0]
         t0 = obs.now()
         # ys/a0_mat go in as HOST buffers: the solver entries donate their
         # fresh in-jit transfers on accelerator backends (the steady-state
         # HBM saving of the flush path — see types.donate_default).
-        res = self._call_solver(spec, entry, ys, atol, a0=a0_mat,
-                                placement=placement)
-        jax.block_until_ready(res.coef)
+        res, fspec, fentry, fplace, retries, diverged, a0_used = \
+            self._attempt_solve(
+                spec, entry, ys, atol, a0_mat, placement,
+                deadline_at=min(deadlines) if deadlines else None,
+                rebuild=rebuild, sse0=sse0, need_multi=True)
         dt = obs.now() - t0
-        path = self._record_solve(spec, placement, "multi_rhs", k, dt)
+        path = self._record_solve(fspec, fplace, "multi_rhs", k, dt)
         coef = np.asarray(res.coef)
         resid = np.asarray(res.residual)
         for c, idx in enumerate(idxs):
             results[idx] = self._strip(
                 requests[idx], coef[:, c], resid[:, c], bucket=bucket,
                 kind="multi_rhs", group_size=k, latency=dt, hit=hit,
-                n_sweeps=res.n_sweeps, converged=res.converged, entry=entry,
-                warm=a0s[c] is not None, placement=placement,
-                method=spec.method, path=path)
+                n_sweeps=res.n_sweeps, converged=res.converged,
+                entry=fentry,
+                warm=a0_used is not None and a0s[c] is not None,
+                placement=fplace, method=fspec.method, path=path,
+                retain_warm=not diverged, retries=retries)
         with self._stats_lock:
             self.stats.solver_calls += 1
             self.stats.multi_rhs_groups += 1
             self.stats.multi_rhs_requests += k
-            if placement is not None and placement.sharded:
+            if fplace is not None and fplace.sharded:
                 self.stats.sharded_solves += 1
 
     def _solve_vmapped(self, requests, singles, bucket, results):
-        """Stack same-bucket single-design requests into one vmapped solve."""
+        """Stack same-bucket single-design requests into one vmapped solve.
+
+        Degradation (retry ladder): a raised vmapped batch is not retried
+        as a stack — there is no batched ladder — it degrades to
+        per-request ``_solve_one`` calls, each with its own full ladder;
+        a member whose own ladder also exhausts fails alone.  Counted as
+        ``solver_retries_total{reason=...,from_path="vmap:...",
+        to_path="single"}`` once per member.
+        """
+        try:
+            self._solve_vmapped_inner(requests, singles, bucket, results)
+            return
+        except Exception as exc:
+            if not self.config.retry_ladder:
+                raise
+            spec = self.spec_for(requests[singles[0][0]])
+            reason = ("raise" if isinstance(exc, faults.FaultInjected)
+                      else type(exc).__name__)
+            self._m_retries.inc(len(singles), reason=reason,
+                                from_path=f"vmap:{spec.method}",
+                                to_path="single")
+            with self._stats_lock:
+                self.stats.retries += len(singles)
+        for idx, entry, hit, key in singles:
+            if results[idx] is not None:
+                continue
+            try:
+                self._solve_one(requests, idx, entry, hit, bucket, results,
+                                None, key)
+            except Exception as exc:
+                self._fail(requests, [idx], bucket, exc, results)
+
+    def _solve_vmapped_inner(self, requests, singles, bucket, results):
         obs_p, vars_p = bucket
         req0 = requests[singles[0][0]]
         spec = self.spec_for(req0)
@@ -840,11 +1080,11 @@ class SolverServeEngine:
         # Pad the batch by replicating the last system (discarded below) so
         # the vmapped program only ever compiles for power-of-two batches.
         padded = singles + [singles[-1]] * (b_pad - b)
-        xs = jnp.stack([entry.x_pad for _, entry, _ in padded])
+        xs = jnp.stack([entry.x_pad for _, entry, _, _ in padded])
         ys = jnp.asarray(np.stack(
             [pad_y(np.asarray(requests[i].y, np.float32), obs_p)
-             for i, _, _ in padded]))
-        a0s = [self._resolve_a0(requests[i], e) for i, e, _ in padded]
+             for i, _, _, _ in padded]))
+        a0s = [self._resolve_a0(requests[i], e) for i, e, _, _ in padded]
         warm = any(a is not None for a in a0s)
         solver = _vmapped_solver(spec.canonical().replace(atol=0.0), warm)
         # Per-element padding-corrected atol (real obs varies within a
@@ -852,14 +1092,15 @@ class SolverServeEngine:
         atols = jnp.asarray([
             self._padded_atol(spec.atol, np.asarray(requests[i].x).shape[0],
                               obs_p)
-            for i, _, _ in padded], dtype=jnp.float32)
+            for i, _, _, _ in padded], dtype=jnp.float32)
         if mentry.blocked:
-            cns = jnp.stack([e.cn_for_thr(spec.thr) for _, e, _ in padded])
+            cns = jnp.stack(
+                [e.cn_for_thr(spec.thr) for _, e, _, _ in padded])
         else:
-            cns = jnp.stack([e.cn for _, e, _ in padded])
+            cns = jnp.stack([e.cn for _, e, _, _ in padded])
         if mentry.needs_chol:
             chols = jnp.stack(
-                [e.chol_for(spec.thr, spec.ridge) for _, e, _ in padded])
+                [e.chol_for(spec.thr, spec.ridge) for _, e, _, _ in padded])
             args = (xs, ys, cns, atols, chols)
         else:
             args = (xs, ys, cns, atols)
@@ -870,55 +1111,79 @@ class SolverServeEngine:
                     a0_mat[row] = self._pad_a0(a, vars_p)
             args = args + (jnp.asarray(a0_mat),)
         t0 = obs.now()
+        faults.maybe_raise("solver.raise", f"vmap:{spec.method}")
         with obs.profile_region(f"solve/vmap/{spec.method}"):
             res = solver(*args)
             jax.block_until_ready(res.coef)
         dt = obs.now() - t0
+        forced = faults.hit("solver.diverge", f"vmap:{spec.method}")
         # The vmapped program is one jit'd stack — the eager dispatch shims
         # never run inside it, so the path is "vmap" by construction.
         obs.consume_dispatch()
         path = self._record_solve(spec, None, "vmap", b, dt, path="vmap")
         coef = np.asarray(res.coef)
         resid = np.asarray(res.residual)
-        for row, (idx, entry, hit) in enumerate(singles):
+        conv_b = np.asarray(res.converged)
+        hist_b = np.asarray(res.history, np.float32)
+
+        def row_retain(row: int) -> bool:
+            # Per-row warm retention: the batched analogue of
+            # core.types.warm_retention_ok (which is scalar-only).
+            if forced is not None:
+                return False
+            if bool(conv_b[row]):
+                return True
+            h = hist_b[row][np.isfinite(hist_b[row])]
+            return not (h.size >= 2 and float(h[-1]) > 1.01 * float(h[0]))
+
+        for row, (idx, entry, hit, _) in enumerate(singles):
             results[idx] = self._strip(
                 requests[idx], coef[row], resid[row], bucket=bucket,
                 kind="vmap", group_size=b, latency=dt, hit=hit,
                 n_sweeps=res.n_sweeps[row], converged=res.converged[row],
                 entry=entry, warm=a0s[row] is not None,
-                method=spec.method, path=path)
+                method=spec.method, path=path,
+                retain_warm=row_retain(row))
         with self._stats_lock:
             self.stats.solver_calls += 1
             self.stats.vmap_batches += 1
             self.stats.vmap_requests += b
 
     def _solve_one(self, requests, idx, entry, hit, bucket, results,
-                   placement=None):
+                   placement=None, key=None):
         req = requests[idx]
         spec = self.spec_for(req)
-        obs_real = np.asarray(req.x).shape[0]
-        y_pad = pad_y(np.asarray(req.y, np.float32), bucket[0])
-        atol = self._padded_atol(spec.atol, obs_real, bucket[0])
+        y_real = np.asarray(req.y, np.float32)
+        y_pad = pad_y(y_real, bucket[0])
+        atol = self._padded_atol(spec.atol, y_real.shape[0], bucket[0])
         a0 = None
         if solver_method(spec.method).iterative:
             a0 = self._resolve_a0(req, entry)
         a0_pad = None
         if a0 is not None:
             a0_pad = self._pad_a0(a0, bucket[1])
+        rebuild = None
+        if key is not None:
+            rebuild = lambda: self._design_entry(  # noqa: E731
+                key, req, bucket, placement)[0]
         t0 = obs.now()
         # Host buffers in — see _solve_multi_rhs on donation.
-        res = self._call_solver(spec, entry, y_pad, atol,
-                                a0=a0_pad, placement=placement)
-        jax.block_until_ready(res.coef)
+        res, fspec, fentry, fplace, retries, diverged, a0_used = \
+            self._attempt_solve(spec, entry, y_pad, atol, a0_pad, placement,
+                                deadline_at=req.deadline_at,
+                                rebuild=rebuild,
+                                sse0=float(np.dot(y_real, y_real)))
         dt = obs.now() - t0
-        path = self._record_solve(spec, placement, "single", 1, dt)
+        path = self._record_solve(fspec, fplace, "single", 1, dt)
         results[idx] = self._strip(
             req, res.coef, res.residual, bucket=bucket, kind="single",
             group_size=1, latency=dt, hit=hit, n_sweeps=res.n_sweeps,
-            converged=res.converged, entry=entry, warm=a0_pad is not None,
-            placement=placement, method=spec.method, path=path)
+            converged=res.converged, entry=fentry,
+            warm=a0_used is not None, placement=fplace,
+            method=fspec.method, path=path, retain_warm=not diverged,
+            retries=retries)
         with self._stats_lock:
             self.stats.solver_calls += 1
             self.stats.single_solves += 1
-            if placement is not None and placement.sharded:
+            if fplace is not None and fplace.sharded:
                 self.stats.sharded_solves += 1

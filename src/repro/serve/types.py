@@ -51,6 +51,11 @@ class SolveRequest:
         requests carry the same key the engine trusts it and skips hashing
         the matrix bytes; leave None to let the engine fingerprint ``x``.
       request_id: optional caller tag, echoed on the result.
+      deadline_at: optional *absolute* deadline on the ``obs.now()`` clock.
+        Stamped by the async dispatcher from ``deadline_s`` at submit time;
+        synchronous callers may set it directly.  The engine's retry ladder
+        (``repro.resilience``) stops retrying once it passes — a request
+        never burns its deadline on backoff sleeps.
     """
 
     x: Any
@@ -66,6 +71,7 @@ class SolveRequest:
     deadline_s: Optional[float] = None
     design_key: Optional[str] = None
     request_id: Optional[str] = None
+    deadline_at: Optional[float] = None
 
     def solver_spec(self) -> SolverSpec:
         """The request's ``SolverSpec``: the explicit ``spec`` when given,
@@ -111,6 +117,10 @@ class ServedSolve:
     ``x`` replicated) or "mesh_2d" (rows × columns over a 2-D mesh).  See
     ``repro.serve.placement``.
 
+    ``retries`` counts the retry-ladder steps the solve took before this
+    result (``repro.resilience``): 0 = first attempt; the ``batch_kind``/
+    ``placement``/telemetry method describe the rung that finally served.
+
     ``telemetry`` is the request's ``repro.obs.SolveTelemetry`` record —
     everything above plus the kernel path that actually executed (fused /
     persweep / xla / sharded / vmap), and, on the async path, queue wait
@@ -131,6 +141,7 @@ class ServedSolve:
     cache_hit: bool = False
     warm_start: bool = False
     placement: str = "single"
+    retries: int = 0
     error: Optional[str] = None
     extra: dict = field(default_factory=dict)
     telemetry: Optional[SolveTelemetry] = None

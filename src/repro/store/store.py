@@ -54,24 +54,77 @@ to the old handle (its device buffers stay alive until the last reference
 drops); at worst a warm-coefficient write landing on the demoted handle
 *after* its snapshot is lost, which is the pre-existing best-effort warm
 contract.
+
+Crash safety (PR 10): every tile file carries a 16-byte header — magic,
+CRC32 of the payload, payload byte count — and is written via temp file +
+``fsync`` + atomic ``os.replace``, so a crash mid-demotion can never leave
+a truncated tile masquerading as data.  Reads verify lazily (once per tile
+per ``DiskDesign``); promotion verifies every tile.  A tile that fails
+verification raises ``TileCorruptionError`` and the whole design is
+*quarantined*: its tile directory is renamed aside, the disk record and any
+streaming handle are dropped, and a state-only stub (warm coefficients,
+Cholesky, norms) survives so the next ``build`` from the design source
+restores the tenant state.  Counted as ``store_tile_corruption_total``.
 """
 from __future__ import annotations
 
+import logging
+import os
 import shutil
+import struct
 import threading
+import zlib
 from collections import OrderedDict
 from dataclasses import dataclass, field
 from pathlib import Path
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Set, Tuple
 
 import numpy as np
 
 from repro import obs
 from repro.core.prepare import PreparedDesign, prepare
+from repro.resilience import faults
+
+_log = logging.getLogger(__name__)
 
 #: Tile width used when a design reaches the disk tier without any
 #: transposed layout built yet (no solve touched it while resident).
 DEFAULT_TILE = 128
+
+#: Tile-file header: magic, CRC32 of the payload, payload byte count.
+_TILE_MAGIC = b"DTL1"
+_TILE_HEADER = struct.Struct("<4sIQ")
+
+
+class TileCorruptionError(RuntimeError):
+    """A disk tile failed its integrity check (bad magic/length/CRC or an
+    unreadable file).  Carries the design ``key`` and tile ``path``; the
+    store quarantines the whole design before this propagates, so the
+    caller's recovery is to rebuild from the design source (the serving
+    engine's retry ladder does exactly that)."""
+
+    def __init__(self, key: str, path: Path, detail: str):
+        super().__init__(
+            f"design {key!r}: corrupt tile {path.name} ({detail})")
+        self.key = key
+        self.path = path
+
+
+def _write_tile_atomic(path: Path, tile: np.ndarray) -> None:
+    """Crash-safe tile write: header + payload into a temp file, flushed
+    and ``fsync``ed, then atomically renamed over ``path``.  A reader (or
+    a restart) can only ever observe the old file, no file, or the
+    complete new file — never a torn write."""
+    payload = np.ascontiguousarray(tile, np.float32).tobytes()
+    header = _TILE_HEADER.pack(_TILE_MAGIC, zlib.crc32(payload),
+                               len(payload))
+    tmp = path.with_name(path.name + ".tmp")
+    with open(tmp, "wb") as f:
+        f.write(header)
+        f.write(payload)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
 
 
 def _entry_device_bytes(entry: PreparedDesign) -> int:
@@ -162,6 +215,7 @@ class DiskDesign:
     chol: Dict[Tuple[int, float], np.ndarray] = field(default_factory=dict)
     warm: "OrderedDict[str, np.ndarray]" = field(default_factory=OrderedDict)
     home: Optional[str] = None
+    _verified: Set[int] = field(default_factory=set, repr=False)
 
     @property
     def nbytes(self) -> int:
@@ -170,10 +224,50 @@ class DiskDesign:
     def tile_path(self, j: int) -> Path:
         return self.tile_dir / f"t{self.thr}_b{j}.bin"
 
+    def verify_tile(self, j: int) -> np.ndarray:
+        """Full checked read of one (thr, obs) fp32 tile: header magic,
+        payload length and CRC32 all validated.  Raises
+        ``TileCorruptionError`` on any mismatch (or an unreadable file)."""
+        path = self.tile_path(j)
+        try:
+            with open(path, "rb") as f:
+                header = f.read(_TILE_HEADER.size)
+                payload = f.read()
+        except OSError as exc:
+            raise TileCorruptionError(self.key, path, f"unreadable: {exc}")
+        try:
+            magic, crc, nbytes = _TILE_HEADER.unpack(header)
+        except struct.error:
+            raise TileCorruptionError(self.key, path, "truncated header")
+        # Chaos site: flip one payload byte (on a copy) so the CRC check
+        # below trips exactly like real media corruption would.
+        if faults.hit("store.tile_corrupt", self.key) is not None \
+                and payload:
+            payload = bytearray(payload)
+            payload[0] ^= 0xFF
+            payload = bytes(payload)
+        if magic != _TILE_MAGIC:
+            raise TileCorruptionError(self.key, path, "bad magic")
+        if len(payload) != nbytes \
+                or nbytes != self.thr * self.shape[0] * 4:
+            raise TileCorruptionError(
+                self.key, path,
+                f"payload is {len(payload)} bytes, header says {nbytes}")
+        if zlib.crc32(payload) != crc:
+            raise TileCorruptionError(self.key, path, "CRC32 mismatch")
+        self._verified.add(j)
+        return np.frombuffer(payload, np.float32).reshape(
+            self.thr, self.shape[0])
+
     def tile(self, j: int) -> np.ndarray:
-        """Memmap one (thr, obs) fp32 tile (read-only)."""
+        """Memmap one (thr, obs) fp32 tile (read-only).  The first touch
+        of each tile runs the full integrity check; later reads map the
+        payload directly (16-byte header offset) at zero copy cost."""
+        if j not in self._verified:
+            self.verify_tile(j)
         return np.memmap(self.tile_path(j), dtype=np.float32, mode="r",
-                         shape=(self.thr, self.shape[0]))
+                         shape=(self.thr, self.shape[0]),
+                         offset=_TILE_HEADER.size)
 
     def read_cols(self, lo: int, hi: int) -> np.ndarray:
         obs_p, vars_p = self.shape
@@ -229,6 +323,7 @@ class StoreStats:
     promotions_host: int = 0       # host → device
     promotions_disk: int = 0       # disk → device
     x_drops: int = 0               # host X bytes dropped (no disk tier)
+    tile_corruptions: int = 0      # designs quarantined off the disk tier
 
     def as_dict(self) -> dict:
         return dict(self.__dict__)
@@ -280,6 +375,10 @@ class DesignStore:
             "tier", buckets=obs.LATENCY_BUCKETS)
         self._h_fetch = {t: h_fetch.labels(tier=t)
                          for t in ("host", "disk")}
+        self._m_corruption = reg.counter(
+            "store_tile_corruption_total",
+            "designs quarantined after a disk tile failed its CRC/header "
+            "check")
         self._lock = threading.RLock()
         self._device: "OrderedDict[str, PreparedDesign]" = OrderedDict()
         self._host: "OrderedDict[str, HostDesign]" = OrderedDict()
@@ -448,8 +547,7 @@ class DesignStore:
                          chol=host.chol, warm=host.warm, home=host.home)
         for j in range(nblocks):
             tile = host.read_cols(j * thr, (j + 1) * thr)
-            with open(rec.tile_path(j), "wb") as f:
-                f.write(np.ascontiguousarray(tile, np.float32).tobytes())
+            _write_tile_atomic(rec.tile_path(j), tile)
         del self._host[key]
         self._disk[key] = rec
         self._disk.move_to_end(key)
@@ -490,7 +588,14 @@ class DesignStore:
             disk = self._disk.get(key)
             if disk is not None:
                 t0 = obs.now()
-                entry = self._rebuild_from_disk(disk)
+                try:
+                    entry = self._rebuild_from_disk(disk)
+                except TileCorruptionError as exc:
+                    # Quarantine the damaged design; the caller sees a
+                    # miss and rebuilds from the design source (with the
+                    # stub's warm/derived state restored by ``build``).
+                    self._quarantine(key, disk, exc)
+                    return None
                 if entry is None:
                     return self._nonres_handle(key, disk.shape)
                 disk.delete_tiles()
@@ -534,7 +639,10 @@ class DesignStore:
         if not self._fits_device(disk.shape):
             return None
         obs_p, vars_p = disk.shape
-        x_t = np.concatenate([np.asarray(disk.tile(j))
+        # verify_tile, not tile: promotion reads every byte anyway, so it
+        # is THE place to pay for a full integrity sweep — a tile the lazy
+        # streaming path already blessed still gets re-checked here.
+        x_t = np.concatenate([disk.verify_tile(j)
                               for j in range(disk.nblocks)], axis=0)
         x_pad = np.ascontiguousarray(x_t[:vars_p].T)
         entry = prepare(x_pad, fingerprint=disk.key,
@@ -620,6 +728,34 @@ class DesignStore:
         self._nonres[key] = handle
         return handle
 
+    # --------------------------------------------------------- quarantine
+    def _quarantine(self, key: str, disk: DiskDesign,
+                    exc: TileCorruptionError) -> None:
+        """Take a damaged design off the disk tier (must hold the lock).
+
+        The tile directory is renamed aside (``.quarantine``) for forensic
+        inspection rather than deleted, the disk record AND any live
+        streaming handle are dropped (a stale handle would keep fetching
+        the dead tiles), and a state-only ``HostDesign`` stub keeps the
+        warm coefficients / Cholesky / norms so a rebuild from the design
+        source restores the tenant state."""
+        _log.warning("quarantining design %r: %s", key, exc)
+        del self._disk[key]
+        self._nonres.pop(key, None)
+        qdir = disk.tile_dir.with_name(disk.tile_dir.name + ".quarantine")
+        try:
+            shutil.rmtree(qdir, ignore_errors=True)
+            os.replace(disk.tile_dir, qdir)
+        except OSError:
+            shutil.rmtree(disk.tile_dir, ignore_errors=True)
+        if key not in self._host:
+            self._host[key] = HostDesign(
+                key=key, shape=disk.shape, max_tenants=disk.max_tenants,
+                cn=disk.cn, chol=disk.chol, warm=disk.warm, home=disk.home)
+        self.stats.tile_corruptions += 1
+        self._m_corruption.inc(1)
+        self._update_gauges()
+
     # ----------------------------------------------------------- block fetch
     def _fetch_block(self, key: str, thr: int, j: int) -> np.ndarray:
         t0 = obs.now()
@@ -631,7 +767,14 @@ class DesignStore:
                 return out
             disk = self._disk.get(key)
             if disk is not None:
-                out = disk.read_cols(j * thr, (j + 1) * thr)
+                # Chaos site: stall the disk read (deadline storms against
+                # the streaming path).
+                faults.maybe_delay("store.read_delay", key)
+                try:
+                    out = disk.read_cols(j * thr, (j + 1) * thr)
+                except TileCorruptionError as exc:
+                    self._quarantine(key, disk, exc)
+                    raise
                 self._h_fetch["disk"].observe(obs.now() - t0)
                 return out
             entry = self._device.get(key)

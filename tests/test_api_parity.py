@@ -129,8 +129,10 @@ class TestGoldenParity:
     def test_bak_random_order_errors_in_vmap_batch(self, rng):
         """Regression: order="random" (no key in serving) must error in a
         vmap batch exactly like it does solo — never silently solve with
-        cyclic order."""
-        from repro.serve import SolveRequest, SolverServeEngine
+        cyclic order.  retry_ladder=False pins the raw validation parity;
+        with the ladder on, the engine instead degrades the request down
+        the method chain (test_resilience.py)."""
+        from repro.serve import ServeConfig, SolveRequest, SolverServeEngine
 
         spec = SolverSpec(method="bak", max_iter=20, order="random")
         reqs = []
@@ -138,7 +140,7 @@ class TestGoldenParity:
             x = rng.normal(size=(100, 8)).astype(np.float32)
             reqs.append(SolveRequest(x=x, y=x[:, 0], spec=spec,
                                      design_key=f"rd-{i}"))
-        out = SolverServeEngine().serve(reqs)
+        out = SolverServeEngine(ServeConfig(retry_ladder=False)).serve(reqs)
         assert all(not r.ok for r in out)
         assert all("PRNG key" in r.error for r in out)
 

@@ -57,6 +57,7 @@ SERVE_EXPORTS = {
     "LaneShutdown",
     "LaneStats",
     "LaneWork",
+    "LaneWorkerDeath",
     "Placement",
     "PlacementPolicy",
     "PreparedDesign",
@@ -68,6 +69,7 @@ SERVE_EXPORTS = {
     "SolveRequest",
     "SolveTelemetry",
     "SolveTicket",
+    "TicketCancelled",
     "SolverServeEngine",
     "SolverSpec",
     "StoreStats",

@@ -323,7 +323,10 @@ class TestFlushExceptionSafety:
 
     def test_poisoned_request_cannot_wedge_engine(self, rng):
         x, y, _ = make_system(rng, 64, 8)
-        eng = SolverServeEngine()
+        # retry_ladder=False: this test pins the raw isolation property —
+        # with the ladder on the poisoned request is *recovered* instead
+        # (covered in test_resilience.py).
+        eng = SolverServeEngine(ServeConfig(retry_ladder=False))
         # thr=0 explodes inside solvebakp at trace time — after submit-time
         # validation, exactly the "poisoned request" class.
         poisoned = _req(x, y, method="bakp", thr=0, max_iter=5)
@@ -385,7 +388,8 @@ class TestFlushExceptionSafety:
     def test_dispatcher_surfaces_error_results(self, rng):
         x, y, _ = make_system(rng, 64, 8)
         cfg = DispatchConfig(max_batch=2, idle_timeout_s=0.005)
-        with AsyncDispatcher(SolverServeEngine(), cfg) as disp:
+        eng = SolverServeEngine(ServeConfig(retry_ladder=False))
+        with AsyncDispatcher(eng, cfg) as disp:
             bad = disp.submit(_req(x, y, method="bakp", thr=0, max_iter=5))
             good = disp.submit(_req(x, y, design_key="d"))
             bad_r = bad.result(timeout=120)

@@ -342,7 +342,10 @@ class TestEngineTelemetry:
     def test_error_telemetry_and_counter(self, rng):
         x, y, _ = make_system(rng, 40, 4)
         reg = obs.MetricsRegistry()
-        eng = SolverServeEngine(ServeConfig(), registry=reg)
+        # retry_ladder=False pins the error-path telemetry; with the
+        # ladder on this request is recovered (test_resilience.py).
+        eng = SolverServeEngine(ServeConfig(retry_ladder=False),
+                                registry=reg)
         # thr=0 explodes inside solvebakp at trace time — the "poisoned
         # request" class that submit-time validation cannot catch.
         out = eng.serve([_req(x, y, thr=0, max_iter=5)])
